@@ -1,0 +1,57 @@
+"""Fig 1 analog + kernel microbench: per-layer restoration resource costs
+(compute FLOPs, IO bytes) for every model, plus the Pallas restore_kv
+kernel's interpret-mode wall time vs the jnp oracle (CPU-indicative only;
+the TPU numbers come from the roofline model)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.config.hardware import GEMM_EFFICIENCY, TPU_V5E
+from repro.configs import get_arch
+from repro.core.cost_model import layer_costs
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    # Fig 1: resource comparison per token per layer
+    for m in ("llama2-7b", "qwen2-7b", "gemma2-9b", "grok-1-314b"):
+        cfg = get_arch(m)
+        c = layer_costs(cfg, 1024)[0]
+        rows.append((
+            f"fig1_resources_{m}", 0.0,
+            f"compute_saving_vs_rec={c.c_token / c.c_hidden:.1f}x;"
+            f"io_vs_kv={c.io_kv / c.io_hidden:.2f}x"))
+        # modeled MXU time of the fused restore kernel per 1k tokens
+        t_mxu = c.c_hidden / (TPU_V5E.flops * GEMM_EFFICIENCY)
+        rows.append((f"kernel_restore_kv_model_{m}", t_mxu * 1e6,
+                     "modeled_v5e_us_per_1k_tokens_per_layer"))
+
+    # interpret-mode microbench (correctness-path cost, not TPU perf)
+    S, D, Kv, hd = 128, 256, 4, 64
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(size=(S, D)), jnp.float32)
+    wk = jnp.asarray(rng.normal(size=(D, Kv * hd)) * D ** -0.5, jnp.float32)
+    wv = jnp.asarray(rng.normal(size=(D, Kv * hd)) * D ** -0.5, jnp.float32)
+    ang = (jnp.arange(S, dtype=jnp.float32)[:, None]
+           * 10000.0 ** (-jnp.arange(hd // 2) / (hd // 2)))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def pallas_call():
+        k, v = ops.restore_kv(h, wk, wv, None, None, cos, sin, head_dim=hd,
+                              use_pallas=True)
+        k.block_until_ready()
+
+    def ref_call():
+        k, v = ref.restore_kv_ref(h, wk, wv, None, None, cos, sin,
+                                  head_dim=hd)
+        k.block_until_ready()
+
+    pallas_call()
+    ref_call()
+    rows.append(("kernel_restore_kv_interpret", timed(pallas_call),
+                 "pallas_interpret_cpu"))
+    rows.append(("kernel_restore_kv_ref", timed(ref_call), "jnp_oracle_cpu"))
+    return emit(rows)

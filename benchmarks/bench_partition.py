@@ -1,0 +1,64 @@
+"""Paper Fig 13: layer-wise vs token-wise state partition.
+
+Token-wise partitions produce irregular GEMM shapes that the matmul unit
+executes at reduced efficiency (the paper measures cuBLAS; we model the
+same effect with a tile-quantization efficiency curve: eff = n_tokens /
+(ceil(n_tokens / tile) * tile), tile = 256 — the MXU analog)."""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit
+from repro.config.hardware import GB, PAPER_A100
+from repro.configs import get_arch
+from repro.core.cost_model import layer_costs, method_times
+from repro.core.pipeline import restore_timeline, simulate
+from repro.core.scheduler import solve
+
+TILE = 256
+
+
+def gemm_eff(n_tokens: int) -> float:
+    return n_tokens / (math.ceil(n_tokens / TILE) * TILE)
+
+
+def token_wise_time(cfg, n, hw, n_hidden_tokens, round_up=False):
+    """All layers split tokens: n_hidden via HCache, rest via KV offload."""
+    if round_up:
+        n_hidden_tokens = min(
+            (n_hidden_tokens + TILE - 1) // TILE * TILE, n)
+    t = method_times(layer_costs(cfg, n, 2)[0], hw)
+    frac_h = n_hidden_tokens / n
+    eff = gemm_eff(n_hidden_tokens)
+    compute = cfg.n_layers * t.c_h * frac_h / max(eff, 1e-6)
+    io = cfg.n_layers * (t.io_h * frac_h + t.io_kv * (1 - frac_h))
+    return max(compute, io)
+
+
+def run():
+    rows = []
+    import dataclasses
+    cfg = get_arch("llama2-13b")
+    n = 1024
+    hw = dataclasses.replace(PAPER_A100, storage_bw=6.9 * GB)  # 1 SSD
+    layer = solve(cfg, n, hw)
+    t_layer = restore_timeline(cfg, n, hw, layer.methods).makespan
+
+    best_naive = min(
+        (token_wise_time(cfg, n, hw, k) for k in range(64, n + 1, 10)))
+    best_round = min(
+        (token_wise_time(cfg, n, hw, k, round_up=True)
+         for k in range(64, n + 1, 10)))
+    rows.append(("fig13_layerwise", t_layer * 1e6,
+                 f"sched={layer.summary().split('|')[0].strip()}"))
+    rows.append(("fig13_tokenwise_naive", best_naive * 1e6,
+                 f"slowdown={best_naive / t_layer:.3f}x"))
+    rows.append(("fig13_tokenwise_roundup", best_round * 1e6,
+                 f"slowdown={best_round / t_layer:.3f}x"))
+    # Fig 13b: GEMM time vs token count (tile quantization)
+    for k in (256, 512, 700, 768, 794, 1000, 1024):
+        t = method_times(layer_costs(cfg, k, 2)[0], hw)
+        rows.append((f"fig13b_gemm_{k}tok",
+                     t.c_h / max(gemm_eff(k), 1e-6) * 1e6,
+                     f"eff={gemm_eff(k):.3f}"))
+    return emit(rows)

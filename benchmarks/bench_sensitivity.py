@@ -1,0 +1,56 @@
+"""Paper Fig 11: restoration-speed sensitivity to (a) GPU compute power,
+(b) number of SSDs, (c) history length — tokens/second restored."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.config.hardware import DRAM_BW, GB, PROFILES, PAPER_A100
+from repro.configs import get_arch
+from repro.core.pipeline import restore_timeline
+from repro.core.scheduler import solve
+
+MODELS = ("llama2-7b", "llama2-13b", "opt-30b")
+
+
+def _speed(cfg, n, hw, methods):
+    t = restore_timeline(cfg, n, hw, methods).makespan
+    return n / t
+
+
+def run():
+    rows = []
+    n = 1024
+    # (a) varying GPU, DRAM as storage backend (Fig 11a-c)
+    for gpu in ("a30", "a100", "4090", "l20", "h800"):
+        hw = dataclasses.replace(PROFILES[gpu], storage_bw=DRAM_BW)
+        for m in MODELS:
+            cfg = get_arch(m)
+            s = solve(cfg, n, hw)
+            sp_h = _speed(cfg, n, hw, s.methods)
+            sp_kv = _speed(cfg, n, hw, ["kv"] * cfg.n_layers)
+            sp_re = _speed(cfg, n, hw, ["recompute"] * cfg.n_layers)
+            rows.append((f"fig11a_{gpu}_{m}", 1e6 * n / sp_h,
+                         f"tok_per_s={sp_h:.0f};vs_kv={sp_h / sp_kv:.2f}x;"
+                         f"vs_rec={sp_h / sp_re:.2f}x"))
+    # (b) varying SSD count (Fig 11d-f)
+    for n_ssd in (1, 2, 4, 8, 16):
+        hw = dataclasses.replace(PAPER_A100, storage_bw=n_ssd * 6.9 * GB)
+        for m in MODELS:
+            cfg = get_arch(m)
+            s = solve(cfg, n, hw)
+            sp_h = _speed(cfg, n, hw, s.methods)
+            sp_kv = _speed(cfg, n, hw, ["kv"] * cfg.n_layers)
+            rows.append((f"fig11b_{n_ssd}ssd_{m}", 1e6 * n / sp_h,
+                         f"tok_per_s={sp_h:.0f};vs_kv={sp_h / sp_kv:.2f}x"))
+    # (c) varying history length (Fig 11g-i)
+    for length in (1024, 4096, 8192, 16384):
+        for m in MODELS:
+            cfg = get_arch(m)
+            s = solve(cfg, length, PAPER_A100)
+            sp_h = _speed(cfg, length, PAPER_A100, s.methods)
+            sp_re = _speed(cfg, length, PAPER_A100,
+                           ["recompute"] * cfg.n_layers)
+            rows.append((f"fig11c_len{length}_{m}", 1e6 * length / sp_h,
+                         f"tok_per_s={sp_h:.0f};vs_rec={sp_h / sp_re:.2f}x"))
+    return emit(rows)

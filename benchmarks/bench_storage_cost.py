@@ -1,0 +1,30 @@
+"""Paper Table 3: bubble-free schedules + per-token storage cost, for the
+paper's models AND all 10 assigned archs (GQA/SSM generalization — the
+beyond-paper §7 extension)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.config.hardware import PAPER_A100, TPU_V5E
+from repro.configs import ASSIGNED, PAPER, get_arch
+from repro.core.cost_model import storage_per_token
+from repro.core.scheduler import solve
+
+
+def run():
+    rows = []
+    for name in list(PAPER) + list(ASSIGNED):
+        cfg = get_arch(name)
+        for hw, hw_name in ((PAPER_A100, "a100"), (TPU_V5E, "v5e")):
+            s = solve(cfg, 1024, hw,
+                      allow_recompute=cfg.family in ("dense", "moe", "vlm",
+                                                     "audio"))
+            st = storage_per_token(cfg, s.methods)
+            st_kv = storage_per_token(cfg, ["kv"] * cfg.n_layers)
+            c = s.counts
+            ratio = st_kv / st if st else float("inf")
+            rows.append((
+                f"table3_{hw_name}_{name}", s.makespan * 1e6,
+                f"sched={c['hidden']}H+{c['kv']}KV+{c['recompute']}RE;"
+                f"KiB_per_tok={st / 1024:.0f};kv_KiB={st_kv / 1024:.0f};"
+                f"saving={ratio:.2f}x;bubble={s.bubble:.1%}"))
+    return emit(rows)

@@ -1,0 +1,36 @@
+"""Paper Fig 14: two-stage saving vs DirectIO — TBT impact vs decode batch.
+
+Virtual-time model: per decode step each layer produces (batch, 1, D)
+hidden states. Two-stage charges the host-copy time (DRAM BW); DirectIO
+charges the SSD write time whenever it exceeds the layer's decode compute
+time (write stalls the pipeline). TBT = layer_time + stall, summed over
+layers."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.config.hardware import DRAM_BW, PAPER_A100, SSD_WRITE_BW
+from repro.configs import get_arch
+from repro.core.pipeline import decode_step_time
+
+HIST = 512
+
+
+def run():
+    rows = []
+    for m in ("llama2-7b", "llama2-13b"):
+        cfg = get_arch(m)
+        for batch in (1, 4, 8, 16, 32):
+            layer_t = decode_step_time(cfg, batch, HIST,
+                                       PAPER_A100) / cfg.n_layers
+            h_bytes = batch * cfg.d_model * 2
+            copy_t = h_bytes / DRAM_BW
+            ssd_t = h_bytes / SSD_WRITE_BW + 80e-6 / 8  # amortized IO lat.
+            tbt_ideal = layer_t * cfg.n_layers
+            tbt_two = (layer_t + copy_t) * cfg.n_layers
+            tbt_direct = (layer_t + max(ssd_t - layer_t, 0.0)
+                          + copy_t) * cfg.n_layers
+            rows.append((f"fig14_{m}_b{batch}_two_stage", tbt_two * 1e6,
+                         f"overhead={(tbt_two / tbt_ideal - 1) * 100:.1f}%"))
+            rows.append((f"fig14_{m}_b{batch}_directio", tbt_direct * 1e6,
+                         f"overhead={(tbt_direct / tbt_ideal - 1) * 100:.1f}%"))
+    return emit(rows)

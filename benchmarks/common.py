@@ -1,0 +1,26 @@
+"""Shared benchmark helpers. Every bench prints ``name,us_per_call,derived``
+CSV rows (the harness contract) and returns a list of row tuples."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def emit(rows: Iterable[Row]) -> List[Row]:
+    rows = list(rows)
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    return rows
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw) -> float:
+    """Median wall time of fn in microseconds."""
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]

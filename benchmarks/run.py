@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,fig12]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("fig1/kernels", "benchmarks.bench_kernels"),
+    ("fig9/fig10 TTFT", "benchmarks.bench_restoration"),
+    ("fig11 sensitivity", "benchmarks.bench_sensitivity"),
+    ("fig12 scheduler ablation", "benchmarks.bench_scheduler"),
+    ("fig13 partition methods", "benchmarks.bench_partition"),
+    ("fig14 two-stage saving", "benchmarks.bench_two_stage"),
+    ("fig15 kv reuse", "benchmarks.bench_kv_reuse"),
+    ("table3 storage cost", "benchmarks.bench_storage_cost"),
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma-separated substring filters")
+    args = p.parse_args()
+    filters = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    n_rows = 0
+    for label, module in SUITES:
+        if filters and not any(f in label or f in module for f in filters):
+            continue
+        print(f"# --- {label} ({module}) ---", file=sys.stderr)
+        mod = __import__(module, fromlist=["run"])
+        rows = mod.run()
+        n_rows += len(rows)
+    print(f"# {n_rows} rows in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

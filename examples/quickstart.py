@@ -1,0 +1,78 @@
+"""Quickstart: the HCache lifecycle in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small llama-family model, prefills a prompt while saving hidden
+states, evicts the KV cache, restores it from host storage via the
+bubble-free scheduler, and shows the restored decode path produces exactly
+the same tokens as the never-evicted one.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.arch import reduced_for_smoke
+from repro.config.hardware import PAPER_A100
+from repro.configs import get_arch
+from repro.core.hcache import HCacheManager
+from repro.distributed.sharding import default_rules
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+from repro.models.module import split
+from repro.storage import ChunkStore, make_array
+
+mesh = make_mesh((1, 1), ("data", "model"))
+rules = default_rules(mesh)
+cfg = reduced_for_smoke(get_arch("llama2-7b"))
+model = Model(cfg, rules=rules, dtype=jnp.float32, remat="none")
+params, _ = split(model.init(jax.random.PRNGKey(0)))
+
+# --- 1. prefill, capturing per-layer hidden states (the HCache save path)
+prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 48), 0,
+                            cfg.vocab_size)
+out = model.prefill(params, {"tokens": prompt}, capture_hidden=True)
+print(f"prefilled {prompt.shape[1]} tokens; hidden states: "
+      f"{out['hidden'].shape} ({out['hidden'].nbytes / 1e6:.2f} MB)")
+
+# --- 2. persist to (simulated-SSD) host storage & evict
+# (schedule_override pins the hidden-state path for the demo — on this
+# toy-sized model the bubble-free scheduler would correctly prefer pure
+# recompute, which is free at 4 layers x 64 dims)
+store = ChunkStore(make_array("ssd", 4), chunk_tokens=16)
+mgr = HCacheManager(model, store, hw=PAPER_A100,
+                    schedule_override="hidden")
+mgr.save_prefill("demo", np.asarray(prompt[0]), out)
+sched = mgr.plan(48)
+print(f"bubble-free schedule: {sched.summary()}")
+print(f"stored {store.bytes_used / 1e6:.2f} MB across "
+      f"{len(store.devices)} simulated SSDs")
+
+# --- 3. restore (recompute-prefix + H-projection + KV reads, pipelined)
+res = mgr.restore(params, "demo")
+print(f"restored {res.n_tokens} tokens; simulated restoration "
+      f"{res.timeline.makespan * 1e3:.3f} ms "
+      f"(io busy {res.timeline.io_busy * 1e3:.3f} / compute "
+      f"{res.timeline.compute_busy * 1e3:.3f})")
+
+# --- 4. decode from the restored cache vs the never-evicted cache
+def pad(x, ctx=64):
+    return jnp.pad(x, ((0, 0), (0, 0), (0, ctx - x.shape[2]), (0, 0),
+                       (0, 0)))
+
+restored = {"k": pad(res.cache["k"]), "v": pad(res.cache["v"]),
+            "lengths": res.cache["lengths"]}
+reference = {"k": pad(out["kv"][0]), "v": pad(out["kv"][1]),
+             "lengths": jnp.asarray([48], jnp.int32)}
+tok = jnp.argmax(out["logits"][:, -1], -1).astype(jnp.int32)[:, None]
+seq_r, seq_g = [], []
+tr, tg = tok, tok
+for _ in range(8):
+    seq_r.append(int(tr[0, 0]))
+    seq_g.append(int(tg[0, 0]))
+    lr, restored = model.decode_step(params, restored, tr)
+    lg, reference = model.decode_step(params, reference, tg)
+    tr = jnp.argmax(lr[:, -1], -1).astype(jnp.int32)[:, None]
+    tg = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+print("restored :", seq_r)
+print("reference:", seq_g)
+print("MATCH" if seq_r == seq_g else "MISMATCH")

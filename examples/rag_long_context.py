@@ -1,0 +1,69 @@
+"""RAG / long-context serving (paper §6.1.2, L-Eval-like).
+
+    PYTHONPATH=src python examples/rag_long_context.py
+
+RAG contexts are ingested OFFLINE (§3.1: "in RAG applications, hidden
+states can be generated and saved offline"): we prefill each document once,
+save its HCache state, and then serve user questions against the shared
+contexts — each request restores the document state and prefills only the
+short question. Reports the TTFT estimate for HCache vs KV offload vs
+recompute per request on the paper's A100 testbed constants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.arch import reduced_for_smoke
+from repro.config.hardware import PAPER_A100
+from repro.configs import get_arch
+from repro.core.hcache import HCacheManager
+from repro.core.pipeline import ttft
+from repro.distributed.sharding import default_rules
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+from repro.models.module import split
+from repro.serving import InferenceEngine, Request
+from repro.storage import ChunkStore, make_array
+from repro.training.data import leval_trace
+
+mesh = make_mesh((1, 1), ("data", "model"))
+rules = default_rules(mesh)
+cfg = reduced_for_smoke(get_arch("llama2-7b"))
+model = Model(cfg, rules=rules, dtype=jnp.float32, remat="none")
+params, _ = split(model.init(jax.random.PRNGKey(0)))
+store = ChunkStore(make_array("ssd", 4), chunk_tokens=16)
+mgr = HCacheManager(model, store, hw=PAPER_A100)
+
+# --- offline ingestion of shared contexts -------------------------------
+rng = np.random.default_rng(0)
+DOC_LEN = 96
+docs = {}
+for d in range(2):
+    doc = rng.integers(0, cfg.vocab_size, DOC_LEN).astype(np.int32)
+    out = model.prefill(params, {"tokens": jnp.asarray(doc)[None]},
+                        capture_hidden=True)
+    mgr.save_prefill(f"doc{d}", doc, out)
+    docs[f"doc{d}"] = doc
+print(f"ingested {len(docs)} contexts offline "
+      f"({store.bytes_used / 1e6:.1f} MB hidden-state cache)")
+
+# --- online Q&A ----------------------------------------------------------
+engine = InferenceEngine(model, params, mgr, max_batch=2, max_seq=256,
+                         prefill_chunk=16)
+full_cfg = get_arch("llama2-7b")      # paper-scale TTFT estimates
+for i, r in enumerate(leval_trace(4, seed=1, n_contexts=2)):
+    doc_id = f"doc{int(r.session_id[3:]) % 2}"
+    q = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    engine.submit(Request(doc_id, q, max_new_tokens=4))
+    engine.run()
+    seq = engine.sessions[doc_id]
+    n_hist = seq.history_len
+    sched = mgr.plan(8192)
+    est = {m: ttft(full_cfg, 8192, 64, PAPER_A100, s) for m, s in (
+        ("hcache", sched.methods),
+        ("kv_offload", ["kv"] * full_cfg.n_layers),
+        ("recompute", ["recompute"] * full_cfg.n_layers))}
+    print(f"q{i} on {doc_id}: restored {n_hist} tokens, answer "
+          f"{seq.generated}; paper-scale TTFT @8k ctx: "
+          + " ".join(f"{k}={v * 1e3:.0f}ms" for k, v in est.items()))
+    engine.sessions.pop(doc_id)       # evict between questions

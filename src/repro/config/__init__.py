@@ -1,0 +1,12 @@
+from repro.config.arch import ArchConfig, AttnKind, BlockKind, reduced_for_smoke
+from repro.config.hardware import PROFILES, TPU_V5E, HardwareProfile
+from repro.config.shapes import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                                 SHAPES_BY_NAME, TRAIN_4K, InputShape,
+                                 cells_for, shape_applicable)
+
+__all__ = [
+    "ArchConfig", "AttnKind", "BlockKind", "reduced_for_smoke",
+    "PROFILES", "TPU_V5E", "HardwareProfile",
+    "ALL_SHAPES", "SHAPES_BY_NAME", "InputShape", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "cells_for", "shape_applicable",
+]

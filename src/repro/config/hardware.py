@@ -1,0 +1,66 @@
+"""Hardware profiles.
+
+Two uses:
+  1. Roofline analysis of the compiled dry-run (TPU v5e constants).
+  2. The HCache cost model / bubble-free scheduler, which needs
+     (FLOPS, host-link BW, storage BW) tuples — including the paper's own
+     GPU platforms so the analytical replication of the paper's figures uses
+     the paper's numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops: float                 # peak dense FLOP/s (bf16/fp16)
+    hbm_bw: float                # bytes/s on-chip HBM
+    interconnect_bw: float       # bytes/s per ICI/NVLink link
+    host_link_bw: float          # bytes/s accelerator<->host (PCIe / v5e host DMA)
+    storage_bw: float            # bytes/s aggregate storage backend read BW
+    hbm_capacity: float          # bytes per chip
+    chips: int = 1
+
+
+TB = 1e12
+GB = 1e9
+
+# --- TPU target (assignment constants) --------------------------------------
+TPU_V5E = HardwareProfile(
+    name="tpu_v5e",
+    flops=197e12,
+    hbm_bw=819 * GB,
+    interconnect_bw=50 * GB,
+    host_link_bw=32 * GB,
+    storage_bw=4 * 6.9 * GB,     # same 4×PM9A3 backend as the paper testbed
+    hbm_capacity=16 * GB,
+)
+
+# --- paper platforms (Table 2; FP16 FLOPS, PCIe transmission) ----------------
+PAPER_A100 = HardwareProfile("a100", 312e12, 2039 * GB, 600 * GB, 32 * GB,
+                             4 * 6.9 * GB, 40 * GB)
+PAPER_A30 = HardwareProfile("a30", 165e12, 933 * GB, 200 * GB, 32 * GB,
+                            4 * 6.9 * GB, 24 * GB)
+PAPER_4090 = HardwareProfile("4090", 330e12, 1008 * GB, 64 * GB, 32 * GB,
+                             4 * 6.9 * GB, 24 * GB)
+PAPER_L20 = HardwareProfile("l20", 120e12, 864 * GB, 64 * GB, 32 * GB,
+                            4 * 6.9 * GB, 48 * GB)
+PAPER_H800 = HardwareProfile("h800", 990e12, 3350 * GB, 400 * GB, 64 * GB,
+                             4 * 6.9 * GB, 80 * GB)
+
+PROFILES = {p.name: p for p in
+            (TPU_V5E, PAPER_A100, PAPER_A30, PAPER_4090, PAPER_L20, PAPER_H800)}
+
+# MXU efficiency assumed for the cost model's GEMM estimates (cuBLAS/MXU
+# sustained fraction on well-shaped GEMMs).
+GEMM_EFFICIENCY = 0.65
+
+# Storage devices for the chunk store simulation (paper's PM9A3).
+SSD_READ_BW = 6.9 * GB
+SSD_WRITE_BW = 4.0 * GB
+DRAM_BW = 80 * GB
+
+# TPU-native chunk size: 128 tokens (lane-aligned), vs the paper's 64.
+TPU_CHUNK_TOKENS = 128

@@ -1,0 +1,26 @@
+"""falcon-mamba-7b — pure Mamba1 SSM LM (attention-free).
+
+[arXiv:2410.05355; unverified]  64L d_model=4096 d_ff=0 vocab=65024,
+ssm_state=16, expand=2 (inner 8192), dt_rank = d_model/16 = 256.
+
+HCache applicability: no KV cache exists; state restoration uses the
+``ssm-rescan`` mode (restore each layer's recurrent state from that layer's
+saved input hidden states) — see DESIGN.md §3.
+"""
+from repro.config.arch import ArchConfig
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    use_rope=False,
+    source="arXiv:2410.05355",
+)

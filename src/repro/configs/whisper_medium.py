@@ -1,0 +1,31 @@
+"""whisper-medium — enc-dec audio transformer, MHA, conv frontend stubbed.
+
+[arXiv:2212.04356; unverified]  24L d_model=1024 16H (kv=16) d_ff=4096
+vocab=51865.  Whisper uses LayerNorm + GELU non-GLU FFNs and learned
+positions (no RoPE).  The audio conv frontend is a stub: ``input_specs()``
+feeds precomputed frame embeddings directly to the encoder.
+"""
+from repro.config.arch import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    use_rope=False,
+    ffn_activation="gelu",
+    ffn_glu=False,
+    norm="layernorm",
+    norm_eps=1e-5,
+    is_encoder_decoder=True,
+    encoder_layers=24,
+    max_source_positions=32768,   # expanded beyond whisper's 1500 for the assigned shapes
+    frontend="audio_conv",
+    frontend_dim=128,             # mel bins (stubbed)
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

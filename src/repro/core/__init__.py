@@ -1,0 +1,6 @@
+from repro.core.cost_model import (LayerCost, MethodTimes, layer_costs,
+                                   method_times, restoration_time,
+                                   storage_per_token)
+from repro.core.pipeline import (Timeline, decode_step_time, prefill_time,
+                                 restore_timeline, simulate, ttft)
+from repro.core.scheduler import METHODS, Schedule, closed_form, solve

@@ -1,0 +1,373 @@
+"""HCacheManager — the paper's system glued together.
+
+Responsibilities (paper Fig 7):
+  * decide the per-layer restoration schedule (bubble-free scheduler);
+  * SAVE: prefill/decode hidden states into the chunk store
+    (layer-before-token order, two-stage saving off the critical path),
+    offloaded-KV layers and SSM state blobs, plus the token stream and a
+    manifest (crash recovery);
+  * RESTORE: rebuild the exact KV cache / SSM states for a session from
+    host storage — recompute-prefix from tokens, projections from hidden
+    states, raw reads for KV layers — with the pipelined timeline simulated
+    against a hardware profile (this container has no real accelerator/SSD).
+
+Optional beyond-paper extension: int8 per-token quantization of stored
+hidden states (`compress="int8"`), halving IO/storage again at a measured
+(small) restoration error — the paper cites quantization as composable
+future work (§7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.arch import BlockKind
+from repro.config.hardware import HardwareProfile, TPU_V5E
+from repro.core.cost_model import layer_costs, method_times
+from repro.core.pipeline import Timeline, simulate
+from repro.core.scheduler import Schedule, solve
+from repro.models.layers.norm import apply_norm
+from repro.models.layers import attention as attn_lib
+from repro.models.model import Model
+from repro.storage.chunk_store import ChunkStore
+from repro.storage.two_stage import SnapshotTask, TwoStageSaver
+
+
+@dataclasses.dataclass
+class RestoreResult:
+    cache: dict                      # family-specific cache pieces (B=1)
+    schedule: Schedule
+    timeline: Timeline               # simulated restoration timing
+    wall_time: float                 # actual CPU seconds (functional path)
+    n_tokens: int
+
+
+def _quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    scale = np.abs(x).max(axis=-1, keepdims=True).astype(np.float32) / 127.0
+    scale = np.maximum(scale, 1e-8)
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
+class HCacheManager:
+    def __init__(self, model: Model, store: ChunkStore, *,
+                 hw: HardwareProfile = TPU_V5E, saver: Optional[TwoStageSaver]
+                 = None, compress: str = "none", dtype_bytes: int = 2,
+                 schedule_override: Optional[str] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.store = store
+        self.hw = hw
+        self.saver = saver or TwoStageSaver(store)
+        self.compress = compress
+        self.dtype_bytes = dtype_bytes
+        self.schedule_override = schedule_override   # None|hidden|kv|recompute
+        self._plans: Dict[int, Schedule] = {}
+
+    # ------------------------------------------------------------- planning
+    def plan(self, n_tokens: int) -> Schedule:
+        """Bucketed bubble-free schedule (power-of-two token buckets)."""
+        if self.schedule_override:
+            m = self.schedule_override
+            methods = tuple(
+                m if bk == BlockKind.ATTENTION else "hidden"
+                for bk in self.cfg.block_kinds())
+            return Schedule(methods, 0.0, 0.0, 0.0, 0.0)
+        bucket = 1 << max(int(np.ceil(np.log2(max(n_tokens, 128)))), 7)
+        if bucket not in self._plans:
+            # recompute-prefix is undefined for hybrid stacks (an attention
+            # block's recompute would depend on interleaved mamba layers)
+            allow_re = self.model.kind == "lm"
+            self._plans[bucket] = solve(self.cfg, bucket, self.hw,
+                                        dtype_bytes=self.dtype_bytes,
+                                        allow_recompute=allow_re)
+        return self._plans[bucket]
+
+    # ----------------------------------------------------------------- save
+    def _hidden_for_layer(self, out: dict, li: int):
+        """Layer li's saved hidden states (S, D) from a prefill output."""
+        kind = self.model.kind
+        if kind == "hybrid":
+            k = self.model.h.k
+            return np.asarray(out["attn_hidden"][li // k][0])
+        return np.asarray(out["hidden"][li][0])
+
+    def _kv_for_layer(self, out: dict, li: int):
+        kind = self.model.kind
+        idx = li // self.model.h.k if kind == "hybrid" else li
+        if kind == "lm":
+            idx = [i for i, bk in enumerate(self.cfg.block_kinds())
+                   if bk == BlockKind.ATTENTION].index(li)
+        return (np.asarray(out["kv"][0][idx][0]),
+                np.asarray(out["kv"][1][idx][0]))
+
+    def save_prefill(self, session: str, tokens: np.ndarray, prefill_out:
+                     dict, *, start: int = 0) -> None:
+        """Persist one sequence's prefill state (B must be 1 in `out`)."""
+        sched = self.plan(start + tokens.shape[-1])
+        toks = np.asarray(tokens).reshape(-1)
+        self.store.put_blob(session, "tok", 0, toks if start == 0 else
+                            np.concatenate([self._tokens(session), toks]))
+        kinds = self.cfg.block_kinds()
+        for li, method in enumerate(sched.methods):
+            if kinds[li] != BlockKind.ATTENTION:
+                continue  # SSM layers handled via state blobs below
+            if method == "hidden":
+                self._append_hidden(session, li, start,
+                                    self._hidden_for_layer(prefill_out, li))
+            elif method == "kv":
+                k, v = self._kv_for_layer(prefill_out, li)
+                self.store.append_tokens(session, "kvk", li, start,
+                                         k.reshape(k.shape[0], -1))
+                self.store.append_tokens(session, "kvv", li, start,
+                                         v.reshape(v.shape[0], -1))
+        self._save_ssm_states(session, prefill_out)
+        if self.cfg.is_encoder_decoder and "enc_out" in prefill_out:
+            self.store.put_blob(session, "enc", 0,
+                                np.asarray(prefill_out["enc_out"][0]))
+        self.store.flush(session)
+        self.store.put_manifest(session, {
+            "n_tokens": int(start + tokens.shape[-1]),
+            "methods": list(sched.methods),
+            "arch": self.cfg.name, "compress": self.compress,
+        })
+
+    def save_session_pause(self, session: str, cache: dict,
+                           n_tokens: int, *, tokens_tail: np.ndarray) -> None:
+        """On eviction after decoding: dump kv-layer tails + SSM states from
+        the live cache (they are accelerator-resident; decode only streamed
+        the hidden states). Keeps the store restorable at ``n_tokens``."""
+        manifest = self.store.get_manifest(session) or {
+            "methods": list(self.plan(n_tokens).methods),
+            "compress": self.compress, "arch": self.cfg.name}
+        prev_n = int(manifest.get("n_tokens", 0))
+        methods = manifest["methods"]
+        if tokens_tail is not None and len(tokens_tail):
+            old = (self._tokens(session)
+                   if self.store.get_manifest(session) else
+                   np.zeros((0,), np.int32))
+            self.store.put_blob(session, "tok", 0, np.concatenate(
+                [old[:prev_n], np.asarray(tokens_tail).reshape(-1)]))
+        kinds = self.cfg.block_kinds()
+        k_name = "attn_k" if self.model.kind == "hybrid" else \
+            "self_k" if self.model.kind == "encdec" else "k"
+        v_name = k_name.replace("k", "v") if k_name != "k" else "v"
+        for li, method in enumerate(methods):
+            if kinds[li] != BlockKind.ATTENTION or method != "kv":
+                continue
+            idx = li // self.model.h.k if self.model.kind == "hybrid" else li
+            if self.model.kind == "lm":
+                idx = [i for i, bk in enumerate(kinds)
+                       if bk == BlockKind.ATTENTION].index(li)
+            k = np.asarray(cache[k_name][idx][0][prev_n:n_tokens])
+            v = np.asarray(cache[v_name][idx][0][prev_n:n_tokens])
+            self.store.append_tokens(session, "kvk", li, prev_n,
+                                     k.reshape(k.shape[0], -1))
+            self.store.append_tokens(session, "kvv", li, prev_n,
+                                     v.reshape(v.shape[0], -1))
+        if "ssm" in cache:
+            self.store.put_blob(session, "state_conv", 0,
+                                np.asarray(cache["conv"]))
+            self.store.put_blob(session, "state_ssm", 0,
+                                np.asarray(cache["ssm"]))
+        self.store.flush(session)
+        manifest["n_tokens"] = int(n_tokens)
+        self.store.put_manifest(session, manifest)
+
+    def _append_hidden(self, session: str, layer: int, start: int,
+                       h: np.ndarray) -> None:
+        if self.compress == "int8":
+            q, scale = _quantize_int8(h)
+            self.store.append_tokens(session, "h", layer, start, q)
+            self.store.append_tokens(session, "hs", layer, start, scale)
+        else:
+            self.store.append_tokens(session, "h", layer, start,
+                                     h.astype(np.float16))
+
+    def _save_ssm_states(self, session: str, out: dict) -> None:
+        states = out.get("states") or out.get("mamba_states")
+        if states is None:
+            return
+        conv, ssm = states
+        self.store.put_blob(session, "state_conv", 0, np.asarray(conv))
+        self.store.put_blob(session, "state_ssm", 0, np.asarray(ssm))
+
+    def save_decode_hidden(self, session_ids: Sequence[Optional[str]],
+                           hidden, lengths: np.ndarray) -> float:
+        """Two-stage save of one decode step's hidden states.
+
+        hidden: (L, B, 1, D); lengths: (B,) position of the new token.
+        Returns the stage-1 (snapshot) virtual cost in seconds."""
+        h = np.asarray(hidden)
+        L = h.shape[0]
+        cost = 0.0
+        for li in range(L):
+            cost += self.saver.snapshot(SnapshotTask(
+                session_ids=session_ids, stream="h", layer=li,
+                start_tokens=[int(x) for x in lengths],
+                data=h[li].astype(np.float16)))
+        return cost
+
+    # -------------------------------------------------------------- restore
+    def _tokens(self, session: str) -> np.ndarray:
+        return np.asarray(self.store.get_blob(session, "tok", 0))
+
+    def restore(self, params, session: str) -> RestoreResult:
+        """Rebuild the session's accelerator state from host storage."""
+        t0 = time.perf_counter()
+        manifest = self.store.get_manifest(session)
+        if manifest is None:
+            raise KeyError(f"no stored state for session {session!r}")
+        n = manifest["n_tokens"]
+        sched = Schedule(tuple(manifest["methods"]), 0, 0, 0, 0)
+        self.store.sync_clocks(0.0)
+        cache = self._restore_family(params, session, n, sched.methods)
+        wall = time.perf_counter() - t0
+        times = [method_times(c, self.hw)
+                 for c in layer_costs(self.cfg, n, self.dtype_bytes)]
+        timeline = simulate(sched.methods, times)
+        return RestoreResult(cache, sched, timeline, wall, n)
+
+    # ---- family-specific assembly -----------------------------------------
+    def _restore_family(self, params, session, n, methods):
+        kind = self.model.kind
+        if kind in ("lm", "hybrid"):
+            return self._restore_attn_like(params, session, n, methods)
+        if kind == "ssm":
+            conv = jnp.asarray(self.store.get_blob(session, "state_conv", 0))
+            ssm = jnp.asarray(self.store.get_blob(session, "state_ssm", 0))
+            return {"conv": conv, "ssm": ssm,
+                    "lengths": jnp.asarray([n], jnp.int32)}
+        # encdec: cross KV from the saved encoder output + self KV from H
+        enc_out = jnp.asarray(self.store.get_blob(session, "enc", 0))[None]
+        from repro.models import encdec as encdec_mod
+        ck, cv = encdec_mod.cross_kv(params, enc_out, self.model.h)
+        self_kv = self._restore_attn_like(params, session, n, methods)
+        return {"self_k": self_kv["k"], "self_v": self_kv["v"],
+                "cross_k": ck, "cross_v": cv,
+                "enc_len": jnp.asarray(enc_out.shape[1], jnp.int32),
+                "lengths": jnp.asarray([n], jnp.int32)}
+
+    def _read_hidden(self, session: str, layer: int, n: int) -> np.ndarray:
+        if self.compress == "int8":
+            q = self.store.read_layer(session, "h", layer, n)
+            s = self.store.read_layer(session, "hs", layer, n)
+            return _dequantize_int8(q, s)
+        return self.store.read_layer(session, "h", layer, n)
+
+    def _restore_attn_like(self, params, session: str, n: int,
+                           methods: Sequence[str]) -> dict:
+        cfg = self.cfg
+        kinds = cfg.block_kinds()
+        attn_layers = [i for i, k in enumerate(kinds)
+                       if k == BlockKind.ATTENTION]
+        pos = jnp.arange(n)[None, :]
+        hd = cfg.head_dim_
+
+        h_idx = [i for i in attn_layers if methods[i] == "hidden"]
+        kv_idx = [i for i in attn_layers if methods[i] == "kv"]
+        re_idx = [i for i in attn_layers if methods[i] == "recompute"]
+
+        k_parts: Dict[int, jnp.ndarray] = {}
+        v_parts: Dict[int, jnp.ndarray] = {}
+
+        # 1. recompute prefix from tokens (must be layers 0..len(re)-1)
+        if re_idx:
+            toks = jnp.asarray(self._tokens(session))[None, :n]
+            k_re, v_re = self._recompute_prefix(params, toks, len(re_idx))
+            for j, li in enumerate(sorted(re_idx)):
+                k_parts[li], v_parts[li] = k_re[j], v_re[j]
+
+        # 2. hidden-state layers: fetch + project (pipelined on hardware;
+        #    functionally a vmap over the H-layer subset here)
+        if h_idx:
+            hs = np.stack([self._read_hidden(session, li, n) for li in h_idx])
+            hidden = jnp.asarray(hs, self.model.dtype)[:, None]  # (Lh,1,n,D)
+            sub = self._subset_blocks(params, h_idx)
+            k_h, v_h = self._project_subset(sub, hidden, pos)
+            for j, li in enumerate(h_idx):
+                k_parts[li], v_parts[li] = k_h[j], v_h[j]
+
+        # 3. raw KV reads
+        for li in kv_idx:
+            k = self.store.read_layer(session, "kvk", li, n)
+            v = self.store.read_layer(session, "kvv", li, n)
+            k_parts[li] = jnp.asarray(k).reshape(1, n, cfg.n_kv_heads, hd)
+            v_parts[li] = jnp.asarray(v).reshape(1, n, cfg.n_kv_heads, hd)
+
+        k_stack = jnp.stack([k_parts[i] for i in attn_layers])
+        v_stack = jnp.stack([v_parts[i] for i in attn_layers])
+        out = {"k": k_stack.astype(self.model.dtype),
+               "v": v_stack.astype(self.model.dtype),
+               "lengths": jnp.asarray([n], jnp.int32)}
+        if self.model.kind == "hybrid":
+            conv = jnp.asarray(self.store.get_blob(session, "state_conv", 0))
+            ssm = jnp.asarray(self.store.get_blob(session, "state_ssm", 0))
+            out = {"attn_k": out["k"], "attn_v": out["v"], "conv": conv,
+                   "ssm": ssm, "lengths": out["lengths"]}
+        return out
+
+    def _subset_blocks(self, params, idx: List[int]):
+        arr = np.asarray(idx)
+        blocks = (params["blocks"] if self.model.kind == "lm" else
+                  params["attn"] if self.model.kind == "hybrid" else
+                  params["dec_blocks"])
+        if self.model.kind == "hybrid":
+            # attn params are stacked per super-block; map layer->super idx
+            k = self.model.h.k
+            arr = np.asarray([i // k for i in idx])
+        return jax.tree.map(lambda x: x[arr], blocks)
+
+    def _project_subset(self, blocks, hidden, pos):
+        cfg, mh = self.cfg, self.model.h
+        attn_h = mh.attn if hasattr(mh, "attn") else mh.lm.attn
+        attn_key = ("attn" if self.model.kind in ("lm", "hybrid")
+                    else "self_attn")
+        ln_key = "ln1"
+
+        def one(bp, hl):
+            normed = apply_norm(bp[ln_key], hl, cfg.norm, cfg.norm_eps)
+            ap = bp[attn_key] if attn_key in bp else bp
+            return attn_lib.restore_kv(ap["wk"], ap["wv"], ap.get("bk"),
+                                       ap.get("bv"), normed, attn_h,
+                                       jnp.broadcast_to(pos, hl.shape[:2]))
+
+        return jax.vmap(one)(blocks, hidden)
+
+    def _recompute_prefix(self, params, tokens, n_layers: int):
+        """Run the embedding + first ``n_layers`` blocks, emitting KV."""
+        from repro.models import transformer as tfm
+        mh = self.model.h
+        sliced = dict(params)
+        sliced["blocks"] = jax.tree.map(lambda x: x[:n_layers],
+                                        params["blocks"])
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = tfm._embed_input(sliced, mh, tokens, positions)
+        windows = tfm.layer_windows(mh)
+        windows = windows[:n_layers] if windows is not None else None
+
+        def body(x, xs):
+            bp, win = xs
+            x, _, kv, _ = tfm.block_forward(bp, x, mh, positions=positions,
+                                            window=win, emit_kv=True)
+            return x, kv
+
+        _, (k, v) = jax.lax.scan(body, x, (sliced["blocks"], windows))
+        return k, v
+
+    # -------------------------------------------------------------- eviction
+    def evict(self, session: str) -> None:
+        self.store.drop_session(session)
+
+    def sessions(self) -> List[str]:
+        return self.store.sessions()

@@ -1,0 +1,124 @@
+"""Restoration pipeline: event-driven timeline of the two streams.
+
+The paper overlaps per-layer hidden-state transmission with the previous
+layer's KV projection (Fig 5). On TPU the same structure holds (host→HBM
+DMA vs MXU GEMMs); since this container is CPU-only the *timing* comes from
+an event-driven simulation over a hardware profile, while the *functional*
+restoration (actual tensors) runs through ``core/restore.py``.
+
+Stream rules (paper §4.1):
+  * recompute layers form a prefix and run on the compute stream from t=0;
+  * hidden-state fetches go first on the IO stream (so projections can
+    start), KV fetches fill the IO tail;
+  * a layer's projection starts when its fetch has completed and the
+    compute stream is free.
+
+``simulate`` returns per-stream busy/idle so benchmarks can report bubble
+fractions (Fig 12) and the TTFT decomposition (Figs 9/10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.config.arch import ArchConfig
+from repro.config.hardware import GEMM_EFFICIENCY, HardwareProfile
+from repro.core.cost_model import MethodTimes, layer_costs, method_times
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    makespan: float
+    io_busy: float
+    compute_busy: float
+    io_finish: float
+    compute_finish: float
+
+    @property
+    def io_bubble(self) -> float:
+        return 1.0 - self.io_busy / self.makespan if self.makespan else 0.0
+
+    @property
+    def compute_bubble(self) -> float:
+        return (1.0 - self.compute_busy / self.makespan
+                if self.makespan else 0.0)
+
+
+def simulate(methods: Sequence[str], times: Sequence[MethodTimes]) -> Timeline:
+    """Simulate a restoration schedule. methods[i] in {hidden, kv, recompute}."""
+    n = len(methods)
+    io_done = [0.0] * n
+    io_t = 0.0
+    # IO queue: hidden fetches first (layer order), then kv fetches
+    for phase in ("hidden", "kv"):
+        for i in range(n):
+            if methods[i] == phase:
+                dur = times[i].io_h if phase == "hidden" else times[i].io_kv
+                io_t += dur
+                io_done[i] = io_t
+    io_busy = io_t
+
+    comp_t = 0.0
+    comp_busy = 0.0
+    for i in range(n):                         # recompute prefix
+        if methods[i] == "recompute":
+            comp_t += times[i].c_token
+            comp_busy += times[i].c_token
+    for i in range(n):                         # projections, fetch-ordered
+        if methods[i] == "hidden":
+            start = max(comp_t, io_done[i])
+            comp_t = start + times[i].c_h
+            comp_busy += times[i].c_h
+    makespan = max(io_t, comp_t)
+    return Timeline(makespan, io_busy, comp_busy, io_t, comp_t)
+
+
+def restore_timeline(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile,
+                     methods: Sequence[str],
+                     dtype_bytes: int = 2) -> Timeline:
+    times = [method_times(c, hw)
+             for c in layer_costs(cfg, n_tokens, dtype_bytes)]
+    return simulate(methods, times)
+
+
+# --------------------------------------------------------- serving estimates
+def prefill_time(cfg: ArchConfig, n_new: int, n_hist: int,
+                 hw: HardwareProfile,
+                 gemm_eff: float = GEMM_EFFICIENCY) -> float:
+    """Prefill of ``n_new`` prompt tokens attending over restored history."""
+    D, n_q, kv = cfg.d_model, cfg.n_heads * cfg.head_dim_, cfg.kv_dim
+    flops = 0.0
+    from repro.config.arch import BlockKind
+    for kind in cfg.block_kinds():
+        if kind == BlockKind.ATTENTION:
+            proj = n_new * 2 * (D * n_q + 2 * D * kv + n_q * D)
+            ctx = n_hist + n_new
+            if cfg.local_window:
+                ctx = min(ctx, cfg.local_window)
+            quad = 2 * n_new * ctx * n_q * 2
+            ffn_mults = 3 if cfg.ffn_glu else 2
+            k = cfg.experts_per_token if cfg.n_experts else 1
+            ffn = n_new * 2 * ffn_mults * D * cfg.d_ff * k
+            flops += proj + quad + ffn
+        else:
+            inner = cfg.ssm_expand * D
+            flops += n_new * (2 * D * 4 * inner + inner * cfg.ssm_state * 6)
+    flops += n_new * 2 * D * cfg.vocab_size  # lm head (last token only, ~0)
+    return flops / (hw.flops * gemm_eff)
+
+
+def decode_step_time(cfg: ArchConfig, batch: int, ctx: int,
+                     hw: HardwareProfile) -> float:
+    """One decode step: max(compute, HBM-bound weight+KV reads)."""
+    n_active = cfg.active_param_count()
+    flops_t = 2 * n_active * batch / hw.flops
+    kv_bytes = cfg.n_layers * 2 * cfg.kv_dim * ctx * 2 * batch
+    mem_t = (n_active * 2 + kv_bytes) / hw.hbm_bw
+    return max(flops_t, mem_t)
+
+
+def ttft(cfg: ArchConfig, n_hist: int, n_new: int, hw: HardwareProfile,
+         methods: Sequence[str], dtype_bytes: int = 2) -> float:
+    """Restoration + prefill = time-to-first-token (paper's headline metric)."""
+    restore = restore_timeline(cfg, n_hist, hw, methods, dtype_bytes).makespan
+    return restore + prefill_time(cfg, n_new, n_hist, hw)

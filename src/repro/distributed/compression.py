@@ -1,0 +1,47 @@
+"""Gradient/communication compression.
+
+With GSPMD the backward all-reduces happen implicitly at the dtype the
+gradients carry. Our mixed-precision train step computes the backward in
+bf16 (half the DP collective bytes of fp32) and the optimizer's
+error-feedback buffer (`AdamWConfig.error_feedback=True`) folds the
+quantization residual into the next step — the 16-bit analog of 1-bit
+Adam's compensation. `quantize_int8`/`dequantize_int8` provide the next
+rung (per-tensor-scaled int8, 4× fewer DP bytes) for use inside an
+explicit shard_map reduction when DCI (cross-pod) bandwidth, not ICI, is
+the binding constraint; at 2 pods the hierarchical reduction XLA emits for
+the nested (pod, data) batch sharding keeps the DCI leg to 1/16th of the
+gradient bytes, so int8 is left opt-in.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis_name: str, *, int8: bool = False):
+    """psum with optional int8 wire format (inside shard_map only)."""
+    if not int8:
+        return jax.lax.psum(x.astype(jnp.bfloat16), axis_name)
+    q, scale = quantize_int8(x)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale = jax.lax.pmax(scale, axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def tree_cast_bf16(tree):
+    """Gradient tree -> bf16 wire format (GSPMD reduces at this dtype)."""
+    return jax.tree.map(
+        lambda g: g.astype(jnp.bfloat16)
+        if jnp.issubdtype(g.dtype, jnp.floating) else g, tree)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-token decode attention (flash-decoding style).
+
+One query token per sequence against a long KV cache. Grid =
+(batch·kv_heads, Skv/BK): each cell processes one KV block for all the
+query heads of that kv group (GQA rows share the block), maintaining
+running max/sum in VMEM scratch. Blocks past the live length are skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_k: int, scale: float, softcap,
+                   window):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0]
+    k_start = ki * block_k
+    visible = k_start < kv_len
+    if window is not None:
+        visible = jnp.logical_and(visible,
+                                  k_start + block_k > kv_len - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (BK, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, BK)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        if window is not None:
+            mask &= kpos > kv_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot(p.astype(v_ref.dtype), v_ref[0])
+        acc_scr[...] = acc_scr[...] * corr + pv.astype(jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "block_k",
+                                             "interpret"))
+def decode_attention_pallas(q, k, v, kv_len, *, softcap=None, window=None,
+                            block_k: int = 512, interpret: bool = True):
+    """q: (BKv, G, hd) — one query token, G = q heads per kv head;
+    k/v: (BKv, Smax, hd); kv_len: (BKv,) live lengths (int32).
+    Returns (BKv, G, hd)."""
+    BKv, G, hd = q.shape
+    Smax = k.shape[1]
+    block_k = min(block_k, Smax)
+    while Smax % block_k:
+        block_k //= 2
+    grid = (BKv, Smax // block_k)
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               scale=hd ** -0.5, softcap=softcap,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_len)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: blockwise causal flash attention (prefill path).
+
+Grid = (batch·q_heads, Sq/BQ, Skv/BK); running max/sum/accumulator live in
+VMEM scratch and are finalized at the last KV block. Fully-masked KV blocks
+(beyond the causal frontier or outside the sliding window) are *skipped*
+(`pl.when`), which removes the ~2× causal-masking waste the pure-jnp path
+pays — this is the kernel-level half of the §Perf attention story.
+
+Supports GQA (kv head = q head // group), sliding windows (gemma2) and
+attention-logit softcaps (gemma2 / grok-1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, causal: bool, window, softcap,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # visit only blocks intersecting the causal/window band
+    visible = True
+    if causal:
+        visible = k_start <= q_start + block_q - 1
+    if window is not None:
+        visible = jnp.logical_and(
+            visible, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (BK, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot(p.astype(v_ref.dtype), v_ref[0])
+        acc_scr[...] = acc_scr[...] * corr + pv.astype(jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "group",
+    "interpret"))
+def flash_attention_pallas(q, k, v, *, group: int = 1, causal: bool = True,
+                           window=None, softcap=None, block_q: int = 256,
+                           block_k: int = 256, interpret: bool = True):
+    """q: (BH, Sq, hd) — BH = batch·q_heads; k/v: (BKv, Skv, hd) with
+    BKv = batch·kv_heads; q head h uses kv head h // group.
+    Returns (BH, Sq, hd)."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    while Sq % block_q:
+        block_q //= 2
+    block_k = min(block_k, Skv)
+    while Skv % block_k:
+        block_k //= 2
+    grid = (BH, Sq // block_q, Skv // block_k)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, softcap=softcap, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda b, i, j, group=group: (b // group, j, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda b, i, j, group=group: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``use_pallas`` switches between the kernel (TPU target; interpret=True on
+CPU) and the jnp oracle. Model code calls these via the attention/mamba
+layers when built with kernels enabled; the dry-run lowers the jnp path
+(Mosaic does not target the CPU backend) — see DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.restore_kv import restore_kv_pallas
+from repro.kernels.ssm_update import ssm_update_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def restore_kv(hidden, wk, wv, bk, bv, cos, sin, *, head_dim,
+               use_rope=True, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.restore_kv_ref(hidden, wk, wv, bk, bv, cos, sin,
+                                  head_dim=head_dim, use_rope=use_rope)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return restore_kv_pallas(hidden, wk, wv, bk, bv, cos, sin,
+                             head_dim=head_dim, use_rope=use_rope,
+                             interpret=interpret)
+
+
+def flash_attention(q, k, v, *, group=1, causal=True, window=None,
+                    softcap=None, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, group=group, causal=causal,
+                                       window=window, softcap=softcap)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, group=group, causal=causal,
+                                  window=window, softcap=softcap,
+                                  interpret=interpret)
+
+
+def decode_attention(q, k, v, kv_len, *, softcap=None, window=None,
+                     use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, kv_len, softcap=softcap,
+                                        window=window)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return decode_attention_pallas(q, k, v, kv_len, softcap=softcap,
+                                   window=window, interpret=interpret)
+
+
+def ssm_update(h, dt, x, A, B, C, d_skip, *, use_pallas=True,
+               interpret=None):
+    if not use_pallas:
+        return ref.ssm_update_ref(h, dt, x, A, B, C, d_skip)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return ssm_update_pallas(h, dt, x, A, B, C, d_skip, interpret=interpret)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused HCache restoration — K/V projection + RoPE.
+
+The paper issues a cuBLAS GEMM then a separate RoPE+copy kernel (§5). On
+TPU we fuse: each grid cell loads one hidden-state tile into VMEM once,
+produces MXU-native K and V tiles, applies the rotary transform to K
+in-register, and writes both outputs — one pass over HBM for H, no
+intermediate K buffer.
+
+Tiling: grid = (S / BLOCK_S, KV / BLOCK_KV). The full contraction dim (D)
+is kept resident per cell: worst assigned arch D=6144 → H tile
+256×6144×2B = 3 MiB + two 6144×BLOCK_KV weight tiles ≈ 3 MiB < VMEM.
+BLOCK_KV must cover whole heads (multiple of head_dim) so the rotate-half
+pairing stays in-tile; MXU alignment wants multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_rotate(x, cos, sin, head_dim: int):
+    """x: (BS, BKV) covering whole heads; rotate each head's halves."""
+    bs, bkv = x.shape
+    n_heads = bkv // head_dim
+    xh = x.reshape(bs, n_heads, head_dim)
+    x1 = xh[..., : head_dim // 2]
+    x2 = xh[..., head_dim // 2:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return rot.reshape(bs, bkv)
+
+
+def _restore_kv_kernel(h_ref, wk_ref, wv_ref, bk_ref, bv_ref, cos_ref,
+                       sin_ref, k_ref, v_ref, *, head_dim: int,
+                       use_rope: bool):
+    h = h_ref[...].astype(jnp.float32)
+    k = jax.lax.dot(h, wk_ref[...].astype(jnp.float32),
+                    precision=jax.lax.Precision.DEFAULT)
+    v = jax.lax.dot(h, wv_ref[...].astype(jnp.float32),
+                    precision=jax.lax.Precision.DEFAULT)
+    if bk_ref is not None:
+        k = k + bk_ref[...].astype(jnp.float32)
+        v = v + bv_ref[...].astype(jnp.float32)
+    if use_rope:
+        cos = cos_ref[...][:, None, :]          # (BS, 1, hd/2)
+        sin = sin_ref[...][:, None, :]
+        k = _rope_rotate(k, cos, sin, head_dim)
+    k_ref[...] = k.astype(k_ref.dtype)
+    v_ref[...] = v.astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("head_dim", "use_rope",
+                                             "block_s", "block_kv",
+                                             "interpret"))
+def restore_kv_pallas(hidden, wk, wv, bk, bv, cos, sin, *, head_dim: int,
+                      use_rope: bool = True, block_s: int = 256,
+                      block_kv: int = 0, interpret: bool = True):
+    """hidden (S, D); wk/wv (D, KV); bk/bv (KV,) or None;
+    cos/sin (S, head_dim//2). Returns K, V: (S, KV) (K rotated)."""
+    S, D = hidden.shape
+    KV = wk.shape[1]
+    block_kv = block_kv or max(head_dim, min(KV, 512))
+    while KV % block_kv:
+        block_kv //= 2
+    block_s = min(block_s, S)
+    while S % block_s:
+        block_s //= 2
+    grid = (S // block_s, KV // block_kv)
+
+    has_bias = bk is not None
+    in_specs = [
+        pl.BlockSpec((block_s, D), lambda i, j: (i, 0)),          # hidden
+        pl.BlockSpec((D, block_kv), lambda i, j: (0, j)),         # wk
+        pl.BlockSpec((D, block_kv), lambda i, j: (0, j)),         # wv
+    ]
+    args = [hidden, wk, wv]
+    if has_bias:
+        in_specs += [pl.BlockSpec((block_kv,), lambda i, j: (j,)),
+                     pl.BlockSpec((block_kv,), lambda i, j: (j,))]
+        args += [bk, bv]
+    in_specs += [pl.BlockSpec((block_s, head_dim // 2), lambda i, j: (i, 0)),
+                 pl.BlockSpec((block_s, head_dim // 2), lambda i, j: (i, 0))]
+    args += [cos, sin]
+
+    kernel = functools.partial(
+        _restore_kv_kernel if has_bias else _no_bias_kernel,
+        head_dim=head_dim, use_rope=use_rope)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_s, block_kv), lambda i, j: (i, j)),
+                   pl.BlockSpec((block_s, block_kv), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((S, KV), hidden.dtype),
+                   jax.ShapeDtypeStruct((S, KV), hidden.dtype)],
+        interpret=interpret,
+    )(*args)
+    return out
+
+
+def _no_bias_kernel(h_ref, wk_ref, wv_ref, cos_ref, sin_ref, k_ref, v_ref,
+                    *, head_dim: int, use_rope: bool):
+    _restore_kv_kernel(h_ref, wk_ref, wv_ref, None, None, cos_ref, sin_ref,
+                       k_ref, v_ref, head_dim=head_dim, use_rope=use_rope)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: Mamba1 single-token state update (decode hot loop).
+
+    h' = exp(dt ⊙ A) ⊙ h + (dt ⊙ x) ⊗ B
+    y  = (h' · C) + D ⊙ x
+
+Shapes: h (B, I, N) fp32, dt/x/D (B, I)/(I,), A (I, N), B/C (B, N).
+Grid = (B, I/BI): the state slab stays in VMEM; everything is element-wise
+plus one small N-reduction — purely memory-bound, so the kernel's job is a
+single fused pass over the state (the jnp path materializes dA and dBx
+separately = 3 passes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_update_kernel(h_ref, dt_ref, x_ref, a_ref, b_ref, c_ref, dskip_ref,
+                       h_out_ref, y_ref):
+    h = h_ref[0].astype(jnp.float32)                  # (BI, N)
+    dt = dt_ref[0].astype(jnp.float32)                # (BI,)
+    x = x_ref[0].astype(jnp.float32)                  # (BI,)
+    A = a_ref[...].astype(jnp.float32)                # (BI, N)
+    Bm = b_ref[0].astype(jnp.float32)                 # (N,)
+    Cm = c_ref[0].astype(jnp.float32)                 # (N,)
+    dA = jnp.exp(dt[:, None] * A)
+    h_new = dA * h + (dt * x)[:, None] * Bm[None, :]
+    y = (h_new * Cm[None, :]).sum(axis=-1) \
+        + dskip_ref[...].astype(jnp.float32) * x
+    h_out_ref[0] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
+def ssm_update_pallas(h, dt, x, A, B, C, d_skip, *, block_i: int = 512,
+                      interpret: bool = True):
+    """h: (Bt, I, N) fp32; dt/x: (Bt, I); A: (I, N); B/C: (Bt, N);
+    d_skip: (I,). Returns (h_new, y) with y: (Bt, I)."""
+    Bt, I, N = h.shape
+    block_i = min(block_i, I)
+    while I % block_i:
+        block_i //= 2
+    grid = (Bt, I // block_i)
+    return pl.pallas_call(
+        _ssm_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_i, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_i), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block_i), lambda b, i: (b, i)),
+            pl.BlockSpec((block_i, N), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, N), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, N), lambda b, i: (b, 0)),
+            pl.BlockSpec((block_i,), lambda b, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_i, N), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_i), lambda b, i: (b, i)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((Bt, I, N), jnp.float32),
+                   jax.ShapeDtypeStruct((Bt, I), x.dtype)],
+        interpret=interpret,
+    )(h, dt, x, A, B, C, d_skip)

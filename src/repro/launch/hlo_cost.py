@@ -1,0 +1,370 @@
+"""HLO text cost parser — loop-aware FLOPs / bytes / collective accounting.
+
+``compiled.cost_analysis()`` counts every computation ONCE: a
+scan-over-layers (while loop) body is charged a single iteration, which
+under-counts a 64-layer model by ~64x. This parser rebuilds the cost from
+the compiled HLO text:
+
+  * splits the module into computations and instructions;
+  * computes per-computation dot/convolution FLOPs (shape × contracting
+    dims), HBM bytes (operand + result sizes of non-fused top-level ops),
+    and collective bytes (operand sizes, resolved by name);
+  * propagates call multiplicity: ENTRY = 1; `while` bodies multiply by the
+    parsed trip count (jax scans lower to `compare(iv, constant(N)),
+    direction=LT`); fusions/calls inherit the caller's multiplicity;
+    conditional branches count once (upper bound of one path).
+
+Used by launch/dryrun.py for the §Roofline terms; validated against known
+matmul/scan programs in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _split_instr(line: str):
+    """Parse '%name = SHAPE opcode(...)' with balanced-paren tuple shapes
+    (which may contain '/*index=N*/' comments)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":            # tuple shape
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        shape = line[i:j + 1]
+        i = j + 1
+    else:                                    # scalar/array shape
+        j = i
+        while j < n and not line[j].isspace():
+            j += 1
+        shape = line[i:j]
+        i = j
+    while i < n and line[i].isspace():
+        i += 1
+    j = i
+    while j < n and (line[j].isalnum() or line[j] in "-_"):
+        j += 1
+    if j >= n or line[j] != "(":
+        return None
+    op = line[i:j]
+    return name, shape, op, j
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of a shape string (handles tuples by summing)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    n_total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+def _parse_operands(line: str, open_idx: int) -> List[str]:
+    depth = 0
+    end = open_idx
+    for i in range(open_idx, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = line[open_idx + 1:end]
+    ops = []
+    for tok in re.findall(r"%([\w.\-]+)", inner):
+        ops.append(tok)
+    return ops
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.endswith("{") and "->" in stripped:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[m.group(1)] = cur
+                if stripped.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _split_instr(line)
+        if parsed is None:
+            continue
+        name, shape, op, open_idx = parsed
+        instr = Instr(name, shape, op, line, _parse_operands(line, open_idx))
+        cur.instrs.append(instr)
+        cur.by_name[name] = instr
+    return comps
+
+
+def _attr_comp(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _attr_comps(line: str, key: str) -> List[str]:
+    m = re.search(key + r"=\{([^}]*)\}", line)
+    if not m:
+        one = _attr_comp(line, key)
+        return [one] if one else []
+    return re.findall(r"%?([\w.\-]+)", m.group(1))
+
+
+def trip_count(cond: Computation) -> int:
+    """Trip count of a jax-style while: compare(iv, constant(N)), LT."""
+    const = None
+    for ins in cond.instrs:
+        m = re.search(r"constant\((\d+)\)", ins.line)
+        if m and ins.shape.strip().startswith(("s32[]", "u32[]", "s64[]")):
+            const = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.op == "compare" and "direction=LT" in ins.line and const:
+            return const
+    return 1
+
+
+def dot_flops(ins: Instr, comp: Computation) -> float:
+    """2 × prod(lhs dims) × prod(rhs free dims)."""
+    shapes = []
+    inline = _SHAPE_RE.findall(
+        ins.line[ins.line.index(ins.op + "("):])
+    for operand in ins.operands[:2]:
+        ref = comp.by_name.get(operand)
+        if ref is not None:
+            shapes.append(ref.shape)
+    if len(shapes) < 2 and len(inline) >= 2:
+        shapes = [f"{d}[{dims}]" for d, dims in inline[:2]]
+    if len(shapes) < 2:
+        return 0.0
+    lhs_dims = [int(d) for d in _SHAPE_RE.findall(shapes[0])[0][1].split(",")
+                if d]
+    rhs_dims = [int(d) for d in _SHAPE_RE.findall(shapes[1])[0][1].split(",")
+                if d]
+    rb = re.search(r"rhs_batch_dims=\{([0-9,]*)\}", ins.line)
+    rc = re.search(r"rhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    rb_idx = {int(x) for x in rb.group(1).split(",")} if rb and rb.group(1) \
+        else set()
+    rc_idx = {int(x) for x in rc.group(1).split(",")} if rc and rc.group(1) \
+        else set()
+    lhs_prod = 1
+    for d in lhs_dims:
+        lhs_prod *= d
+    rhs_free = 1
+    for i, d in enumerate(rhs_dims):
+        if i not in rb_idx and i not in rc_idx:
+            rhs_free *= d
+    return 2.0 * lhs_prod * rhs_free
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "custom-call",
+}
+
+
+def analyze_hlo(text: str, hbm_threshold: int = 1 << 20) -> Dict[str, float]:
+    """``hbm_threshold``: tensors smaller than this are assumed
+    VMEM/register-resident inside loops (loop-carried SSM states, softmax
+    stats, …) and are not charged as HBM traffic; weight slices and
+    activation tiles above it are charged per loop iteration. ``bytes_all``
+    reports the unfiltered upper bound."""
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "bytes_all": 0.0,
+                "collective_bytes": 0.0, "collectives": {}}
+
+    # computations whose instructions never touch HBM directly (fusion
+    # internals, reduce/sort comparators) — flops still count, bytes don't
+    fused: set = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                fused.update(_attr_comps(ins.line, "calls"))
+            elif ins.op in ("reduce", "reduce-window", "scatter", "sort",
+                            "map", "all-reduce", "reduce-scatter",
+                            "select-and-scatter"):
+                fused.update(_attr_comps(ins.line, "to_apply"))
+
+    # per-computation local costs
+    local: Dict[str, Dict[str, float]] = {}
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        flops = 0.0
+        bytes_ = 0.0
+        bytes_all = 0.0
+        coll: Dict[str, float] = {}
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += dot_flops(ins, comp)
+            if ins.op not in _SKIP_BYTES_OPS and name not in fused:
+                result = shape_bytes(ins.shape)
+                if ins.op == "dynamic-slice":
+                    # reads only the sliced window (≈ result), not the
+                    # whole operand buffer
+                    shapes = [2 * result]
+                elif ins.op == "dynamic-update-slice":
+                    # reads+writes the update window
+                    upd = 0
+                    if len(ins.operands) > 1:
+                        ref = comp.by_name.get(ins.operands[1])
+                        upd = shape_bytes(ref.shape) if ref else 0
+                    shapes = [2 * upd]
+                else:
+                    shapes = [result]
+                    for operand in ins.operands:
+                        ref = comp.by_name.get(operand)
+                        if ref is None:
+                            continue
+                        ob = shape_bytes(ref.shape)
+                        # a fusion reading a tiny window of a giant buffer
+                        # (loop-state slicing) streams ~result bytes, which
+                        # the result term already covers
+                        if ob <= 64 * max(result, 1):
+                            shapes.append(ob)
+                bytes_all += sum(shapes)
+                bytes_ += sum(s for s in shapes if s >= hbm_threshold)
+            base_op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base_op in COLLECTIVES:
+                cb = 0
+                for operand in ins.operands:
+                    ref = comp.by_name.get(operand)
+                    if ref is not None:
+                        cb += shape_bytes(ref.shape)
+                if cb == 0:  # fall back to result size
+                    cb = shape_bytes(ins.shape)
+                coll[base_op] = coll.get(base_op, 0.0) + cb
+        local[name] = {"flops": flops, "bytes": bytes_,
+                       "bytes_all": bytes_all, "coll": coll}
+
+    # multiplicity propagation (iterative; call graph is a DAG)
+    mult: Dict[str, float] = {entry.name: 1.0}
+    order = [entry.name]
+    seen = {entry.name}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        m = mult[cname]
+        for ins in comp.instrs:
+            callees: List[Tuple[str, float]] = []
+            if ins.op == "while":
+                body = _attr_comp(ins.line, "body")
+                cond = _attr_comp(ins.line, "condition")
+                # XLA records known trip counts in backend_config
+                tm = re.search(r'known_trip_count[^0-9]*(\d+)', ins.line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    trips = trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    callees.append((body, m * trips))
+                if cond in comps:
+                    callees.append((cond, m * (trips + 1)))
+            elif ins.op == "fusion":
+                callees = [(c, m) for c in _attr_comps(ins.line, "calls")
+                           if c in comps]
+            elif ins.op in ("call", "map", "reduce", "reduce-window",
+                            "scatter", "sort", "all-reduce",
+                            "reduce-scatter"):
+                callees = [(c, m) for c in _attr_comps(ins.line, "to_apply")
+                           if c in comps]
+            elif ins.op == "conditional":
+                callees = [(c, m) for c in
+                           _attr_comps(ins.line, "branch_computations")
+                           if c in comps]
+            for cal, cm in callees:
+                mult[cal] = mult.get(cal, 0.0) + cm
+                if cal not in seen:
+                    seen.add(cal)
+                    order.append(cal)
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    total_bytes_all = 0.0
+    coll_total: Dict[str, float] = {}
+    for name, m in mult.items():
+        lc = local.get(name)
+        if lc is None:
+            continue
+        total_flops += m * lc["flops"]
+        total_bytes += m * lc["bytes"]
+        total_bytes_all += m * lc["bytes_all"]
+        for k, v in lc["coll"].items():
+            coll_total[k] = coll_total.get(k, 0.0) + m * v
+    return {"flops": total_flops, "bytes": total_bytes,
+            "bytes_all": total_bytes_all,
+            "collective_bytes": sum(coll_total.values()),
+            "collectives": coll_total}

@@ -1,0 +1,209 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds **per device** (the
+SPMD module that XLA compiles and that ``cost_analysis`` reports on is the
+per-device program — verified empirically, see EXPERIMENTS.md §Dry-run):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective_bytes_per_device / ICI_link_bw
+
+collective_bytes is not in cost_analysis — we parse the compiled HLO and
+sum the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (async `-start` forms counted once,
+`-done` skipped).
+
+MODEL_FLOPS (the "useful" compute): 6·N·D for training, 2·N·D for
+prefill/decode, N = active params, D = global tokens processed; the ratio
+MODEL_FLOPS / (HLO_FLOPs · chips) exposes remat/padding/masking waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Iterable, List, Optional
+
+from repro.config.arch import ArchConfig
+from repro.config.hardware import TPU_V5E, HardwareProfile
+from repro.config.shapes import InputShape
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+\S+\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from compiled HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(1)
+        # operands: shapes inside the call parens
+        call = line[m.end() - 1:]
+        depth = 0
+        end = 0
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[:end + 1]
+        total = sum(_shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(operands))
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    peak_memory_bytes: Optional[float] = None
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s * 1e3:.3f} | {self.memory_s * 1e3:.3f} | "
+                f"{self.collective_s * 1e3:.3f} | {self.bottleneck} | "
+                f"{self.useful_ratio:.2f} | "
+                f"{(self.peak_memory_bytes or 0) / 2**30:.2f} |")
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    if shape.kind == "restore":
+        # the paper's op: K/V projections over every stored layer-token
+        from repro.core.cost_model import layer_costs
+        tokens = shape.global_batch * shape.seq_len
+        return sum(c.c_hidden for c in layer_costs(cfg, tokens))
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    factor = 6 if shape.kind == "train" else 2
+    return factor * n_active * tokens
+
+
+def analyze(cfg: ArchConfig, shape: InputShape, *, mesh_name: str,
+            chips: int, flops_per_device: float, bytes_per_device: float,
+            hlo_text: Optional[str] = None,
+            coll_breakdown: Optional[Dict[str, int]] = None,
+            peak_memory: Optional[float] = None,
+            hw: HardwareProfile = TPU_V5E) -> RooflineReport:
+    if coll_breakdown is None:
+        coll_breakdown = collective_bytes(hlo_text or "")
+    coll = sum(coll_breakdown.values())
+    compute_s = flops_per_device / hw.flops
+    memory_s = bytes_per_device / hw.hbm_bw
+    collective_s = coll / hw.interconnect_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    total_hlo = flops_per_device * chips
+    ratio = mf / total_hlo if total_hlo else 0.0
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops_per_device, bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll, coll_breakdown=coll_breakdown,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf, useful_ratio=ratio,
+        peak_memory_bytes=peak_memory)
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bottleneck | useful ratio | peak GiB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def report_from_json(path: str, hw: HardwareProfile = TPU_V5E
+                     ) -> RooflineReport:
+    from repro.config.shapes import SHAPES_BY_NAME
+    from repro.configs import get_arch
+    with open(path) as f:
+        rec = json.load(f)
+    return analyze(
+        get_arch(rec["arch"]), SHAPES_BY_NAME[rec["shape"]],
+        mesh_name=rec["mesh"], chips=rec["chips"],
+        flops_per_device=rec["flops"], bytes_per_device=rec["bytes_accessed"],
+        coll_breakdown=rec["collectives"],
+        peak_memory=rec.get("peak_memory"), hw=hw)
+
+
+def main() -> None:
+    import argparse
+    import glob
+    import os
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--variant", default="base")
+    p.add_argument("--mesh", default=None)
+    p.add_argument("--csv", action="store_true")
+    args = p.parse_args()
+
+    rows = []
+    skips = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        import json as _json
+        with open(path) as f:
+            rec = _json.load(f)
+        if rec.get("variant", "base") != args.variant:
+            continue
+        if args.mesh and rec.get("mesh") != args.mesh:
+            continue
+        if "skipped" in rec:
+            skips.append(rec)
+            continue
+        if "error" in rec:
+            print(f"ERROR CELL: {rec['cell']}: {rec['error']}")
+            continue
+        rows.append(report_from_json(path))
+
+    print(HEADER)
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape, r.mesh)):
+        print(r.row())
+    print()
+    for rec in skips:
+        print(f"SKIP | {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+              f"{rec['skipped']}")
+    if rows:
+        from collections import Counter
+        c = Counter(r.bottleneck for r in rows)
+        print(f"\nbottlenecks: {dict(c)}")
+
+
+if __name__ == "__main__":
+    main()

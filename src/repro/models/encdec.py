@@ -1,0 +1,253 @@
+"""Encoder-decoder stack (whisper-medium).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model); the encoder adds
+sinusoidal positions and runs bidirectional attention blocks. The decoder
+uses learned positions, causal self-attention and cross-attention over the
+encoder output.
+
+HCache for enc-dec (DESIGN.md §3): decoder self-KV restores from decoder
+hidden states (paper op); cross-KV for *all* decoder layers restores from
+the single saved encoder output — a stronger-than-paper compression ratio
+(1 tensor -> 2·L tensors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.arch import ArchConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers import attention as attn_lib
+from repro.models.layers.attention import AttnHyper
+from repro.models.layers.embedding import (embed_tokens, init_embedding,
+                                           logits as embed_logits, positional)
+from repro.models.layers.mlp import apply_mlp, init_mlp
+from repro.models.layers.norm import apply_norm, init_norm
+from repro.models.layers.rope import sinusoidal_positions
+from repro.models.module import stacked_init
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecHyper:
+    cfg: ArchConfig
+    rules: ShardingRules
+    model_axis: int = 1
+    dtype: Any = jnp.float32
+    attn_chunk: int = 1024
+    remat: str = "full"
+    max_positions: int = 8192        # decoder learned-position table
+
+    @functools.cached_property
+    def attn(self) -> AttnHyper:
+        c = self.cfg
+        from repro.distributed.sharding import pad_heads
+        padded, _ = pad_heads(c.n_heads, c.n_kv_heads, self.model_axis)
+        return AttnHyper(n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+                         head_dim=c.head_dim_, padded_heads=padded,
+                         use_rope=False, chunk=self.attn_chunk)
+
+
+def _init_enc_block(rng, h: EncDecHyper) -> dict:
+    c = h.cfg
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": init_norm(c.norm, c.d_model, h.dtype),
+        "attn": attn_lib.init_attention(r1, c.d_model, h.attn, h.dtype),
+        "ln2": init_norm(c.norm, c.d_model, h.dtype),
+        "mlp": init_mlp(r2, c.d_model, c.d_ff, c.ffn_glu, h.dtype),
+    }
+
+
+def _init_dec_block(rng, h: EncDecHyper) -> dict:
+    c = h.cfg
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "ln1": init_norm(c.norm, c.d_model, h.dtype),
+        "self_attn": attn_lib.init_attention(r1, c.d_model, h.attn, h.dtype),
+        "ln_x": init_norm(c.norm, c.d_model, h.dtype),
+        "cross_attn": attn_lib.init_attention(r2, c.d_model, h.attn, h.dtype),
+        "ln2": init_norm(c.norm, c.d_model, h.dtype),
+        "mlp": init_mlp(r3, c.d_model, c.d_ff, c.ffn_glu, h.dtype),
+    }
+
+
+def init_encdec(rng, h: EncDecHyper) -> dict:
+    c = h.cfg
+    re, renc, rdec = jax.random.split(rng, 3)
+    return {
+        "embed": init_embedding(re, c.vocab_size, c.d_model, h.dtype,
+                                c.tie_embeddings, h.max_positions, True),
+        "enc_blocks": stacked_init(lambda r: _init_enc_block(r, h),
+                                   c.encoder_layers, renc),
+        "enc_norm": init_norm(c.norm, c.d_model, h.dtype),
+        "dec_blocks": stacked_init(lambda r: _init_dec_block(r, h),
+                                   c.n_layers, rdec),
+        "final_norm": init_norm(c.norm, c.d_model, h.dtype),
+    }
+
+
+# ------------------------------------------------------------------ encoder
+def encode(params, frames, h: EncDecHyper, *, capture_hidden: bool = False):
+    """frames: (B, S_enc, D) stubbed frame embeddings -> enc_out (B,S_enc,D).
+    Also returns per-layer hidden states when capturing (HCache save)."""
+    c = h.cfg
+    B, S, _ = frames.shape
+    pos = sinusoidal_positions(S, c.d_model, h.dtype)
+    x = frames.astype(h.dtype) + pos[None]
+    x = constrain(x, h.rules, "batch", "seq", "d_model")
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, bp):
+        hidden = x
+        normed = apply_norm(bp["ln1"], x, c.norm, c.norm_eps)
+        q, k, v = attn_lib.project_qkv(bp["attn"], normed, h.attn, h.rules,
+                                       positions)
+        a = attn_lib.flash_attention_jnp(q, k, v, h.attn,
+                                         q_positions=positions, causal=False)
+        x = x + attn_lib.attn_output(bp["attn"], a, h.rules)
+        normed2 = apply_norm(bp["ln2"], x, c.norm, c.norm_eps)
+        x = x + apply_mlp(bp["mlp"], normed2, c.ffn_activation, h.rules)
+        return x, hidden if capture_hidden else None
+
+    body = tfm._remat_wrap(body, _lm_view(h))
+    x, hidden = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, c.norm, c.norm_eps), hidden
+
+
+def _lm_view(h: EncDecHyper):
+    return tfm.LMHyper(cfg=h.cfg, rules=h.rules, model_axis=h.model_axis,
+                       dtype=h.dtype, attn_chunk=h.attn_chunk, remat=h.remat)
+
+
+def cross_kv(params, enc_out, h: EncDecHyper):
+    """Project encoder output into stacked cross-attention KV for all
+    decoder layers: (L, B, S_enc, H, hd) ×2 — also the HCache restore op
+    for the cross context."""
+    def one(bp):
+        return attn_lib.restore_kv(
+            bp["cross_attn"]["wk"], bp["cross_attn"]["wv"], None, None,
+            enc_out, h.attn, positions=None)
+
+    return jax.vmap(one)(params["dec_blocks"])
+
+
+# ------------------------------------------------------------------ decoder
+def _dec_block(bp, x, h: EncDecHyper, *, positions, ck, cv, enc_len,
+               self_kv_mode, k_cache=None, v_cache=None, lengths=None,
+               emit_kv=False):
+    """One decoder block; self_kv_mode in {"full", "step"}."""
+    c = h.cfg
+    hidden_in = x
+    normed = apply_norm(bp["ln1"], x, c.norm, c.norm_eps)
+    q, k, v = attn_lib.project_qkv(bp["self_attn"], normed, h.attn, h.rules,
+                                   positions)
+    if self_kv_mode == "full":
+        a = attn_lib.flash_attention_jnp(q, k, v, h.attn,
+                                         q_positions=positions, causal=True)
+        new_k, new_v = k, v
+    else:
+        B = x.shape[0]
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, lengths].set(k[:, 0], mode="drop")
+        v_cache = v_cache.at[bidx, lengths].set(v[:, 0], mode="drop")
+        a = attn_lib.decode_attention_jnp(q, k_cache, v_cache, h.attn,
+                                          kv_len=lengths + 1)
+        new_k, new_v = k_cache, v_cache
+    x = x + attn_lib.attn_output(bp["self_attn"], a, h.rules)
+
+    normed_x = apply_norm(bp["ln_x"], x, c.norm, c.norm_eps)
+    qx = jnp.einsum("bsd,dh->bsh", normed_x, bp["cross_attn"]["wq"])
+    B, Sq = x.shape[:2]
+    qx = qx.reshape(B, Sq, h.attn.padded_heads, h.attn.head_dim)
+    ca = attn_lib.flash_attention_jnp(
+        qx, ck, cv, h.attn,
+        q_positions=jnp.zeros((B, Sq), jnp.int32), causal=False,
+        kv_len=enc_len)
+    x = x + attn_lib.attn_output(bp["cross_attn"], ca, h.rules)
+
+    normed2 = apply_norm(bp["ln2"], x, c.norm, c.norm_eps)
+    x = x + apply_mlp(bp["mlp"], normed2, c.ffn_activation, h.rules)
+    return x, (new_k, new_v) if (emit_kv or self_kv_mode == "step") else None, hidden_in
+
+
+def decode_prefill(params, tokens, enc_out, h: EncDecHyper, *,
+                   capture_hidden: bool = False, emit_kv: bool = False,
+                   final_logits_only: bool = False,
+                   skip_logits: bool = False):
+    """Teacher-forced / prefill decoder pass over (B, S_dec) tokens."""
+    c = h.cfg
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
+                     d_model=c.d_model)
+    x = x + positional(params["embed"], positions).astype(x.dtype)
+    x = x.astype(h.dtype)
+    ckv = cross_kv(params, enc_out, h)
+
+    def body(x, xs):
+        bp, (ck, cv) = xs
+        x, kv, hidden = _dec_block(bp, x, h, positions=positions, ck=ck,
+                                   cv=cv, enc_len=None, self_kv_mode="full",
+                                   emit_kv=emit_kv)
+        return x, (kv, hidden if capture_hidden else None)
+
+    body = tfm._remat_wrap(body, _lm_view(h))
+    x, (kv, hidden) = jax.lax.scan(body, x, (params["dec_blocks"], ckv))
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    if final_logits_only:
+        x = x[:, -1:]
+    if skip_logits:
+        return {"final_x": x, "kv": kv, "hidden": hidden, "cross_kv": ckv,
+                "aux": 0.0}
+    lg = embed_logits(params["embed"], x, h.rules, true_vocab=c.vocab_size)
+    return {"logits": lg, "kv": kv, "hidden": hidden, "cross_kv": ckv,
+            "aux": 0.0}
+
+
+def decode_step(params, cache, tokens, h: EncDecHyper):
+    """cache: dict(self_k/self_v (L,B,Sd,H,hd), cross_k/cross_v
+    (L,B,Senc,H,hd), enc_len scalar or (B,), lengths (B,))."""
+    c = h.cfg
+    lengths = cache["lengths"]
+    B = tokens.shape[0]
+    positions = lengths[:, None]
+    x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
+                     d_model=c.d_model)
+    x = x + positional(params["embed"], positions).astype(x.dtype)
+    x = x.astype(h.dtype)
+
+    def body(x, xs):
+        bp, kc, vc, ck, cv = xs
+        x, (nk, nv), hidden = _dec_block(bp, x, h, positions=positions,
+                                         ck=ck, cv=cv,
+                                         enc_len=cache.get("enc_len"),
+                                         self_kv_mode="step", k_cache=kc,
+                                         v_cache=vc, lengths=lengths)
+        return x, (nk, nv, hidden)
+
+    xs = (params["dec_blocks"], cache["self_k"], cache["self_v"],
+          cache["cross_k"], cache["cross_v"])
+    x, (nk, nv, hidden) = jax.lax.scan(body, x, xs)
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    lg = embed_logits(params["embed"], x, h.rules, true_vocab=c.vocab_size)
+    new_cache = dict(cache, self_k=nk, self_v=nv, lengths=lengths + 1)
+    return lg, new_cache, hidden
+
+
+def restore_self_kv(params, hidden, h: EncDecHyper, *, positions):
+    """HCache paper op for the decoder self-attention KV."""
+    c = h.cfg
+
+    def one(bp, hl):
+        normed = apply_norm(bp["ln1"], hl.astype(h.dtype), c.norm, c.norm_eps)
+        return attn_lib.restore_kv(bp["self_attn"]["wk"],
+                                   bp["self_attn"]["wv"], None, None,
+                                   normed, h.attn, positions)
+
+    return jax.vmap(one)(params["dec_blocks"], hidden)

@@ -1,0 +1,210 @@
+"""Hybrid Mamba2 + attention stack (zamba2-style).
+
+The stack is a scan over *super-blocks*: each super-block is (k-1) Mamba2
+blocks followed by one full transformer (attention+MLP) block, where
+k = cfg.hybrid_attn_every. zamba2-2.7b: 54 layers = 9 super-blocks of
+(5 mamba + 1 attn).
+
+HCache applicability (DESIGN.md §3): attention blocks restore KV from their
+saved hidden states exactly as the paper; Mamba2 blocks use ``ssm-rescan``
+— the layer's final recurrent state is recomputed from that layer's saved
+input, which only needs the state recurrence (no intra-chunk attention
+matrices, no output projection): cheaper than a forward pass and fully
+layer-parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.arch import ArchConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers import attention as attn_lib
+from repro.models.layers.mamba import (Mamba2Hyper, apply_mamba2,
+                                       init_mamba2)
+from repro.models.layers.norm import apply_norm, init_norm
+from repro.models.layers.embedding import init_embedding, embed_tokens, logits as embed_logits
+from repro.models.module import stacked_init
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridHyper:
+    cfg: ArchConfig
+    rules: ShardingRules
+    model_axis: int = 1
+    dtype: Any = jnp.float32
+    attn_chunk: int = 1024
+    remat: str = "full"
+
+    @property
+    def k(self) -> int:
+        return self.cfg.hybrid_attn_every
+
+    @property
+    def n_super(self) -> int:
+        return self.cfg.n_layers // self.k
+
+    @functools.cached_property
+    def mamba(self) -> Mamba2Hyper:
+        c = self.cfg
+        return Mamba2Hyper(d_model=c.d_model, d_state=c.ssm_state,
+                           head_dim=c.ssm_headdim, d_conv=c.ssm_conv,
+                           expand=c.ssm_expand)
+
+    @functools.cached_property
+    def lm(self) -> tfm.LMHyper:
+        """LMHyper view used for the attention blocks."""
+        return tfm.LMHyper(cfg=self.cfg, rules=self.rules,
+                           model_axis=self.model_axis, dtype=self.dtype,
+                           attn_chunk=self.attn_chunk, remat=self.remat)
+
+
+def _init_mamba_block(rng, h: HybridHyper) -> dict:
+    r1, r2 = jax.random.split(rng)
+    return {"ln": init_norm(h.cfg.norm, h.cfg.d_model, h.dtype),
+            "m": init_mamba2(r2, h.mamba, h.dtype)}
+
+
+def init_hybrid(rng, h: HybridHyper) -> dict:
+    re, rm, ra = jax.random.split(rng, 3)
+    c = h.cfg
+    return {
+        "embed": init_embedding(re, c.vocab_size, c.d_model, h.dtype,
+                                c.tie_embeddings),
+        "mamba": stacked_init(
+            lambda r: stacked_init(lambda r2: _init_mamba_block(r2, h),
+                                   h.k - 1, r),
+            h.n_super, rm),
+        "attn": stacked_init(lambda r: tfm.init_block(r, h.lm), h.n_super, ra),
+        "final_norm": init_norm(c.norm, c.d_model, h.dtype),
+    }
+
+
+def _mamba_fwd(mp, x, h: HybridHyper, conv_state=None, ssm_state=None):
+    c = h.cfg
+    hidden_in = x
+    normed = apply_norm(mp["ln"], x, c.norm, c.norm_eps)
+    out, (ncs, nss) = apply_mamba2(mp["m"], normed, h.mamba, h.rules,
+                                   conv_state=conv_state, init_state=ssm_state)
+    return x + out, hidden_in, (ncs, nss)
+
+
+def hybrid_forward(params, tokens, h: HybridHyper, *, positions=None,
+                   capture_hidden: bool = False, emit_state: bool = False,
+                   final_logits_only: bool = False,
+                   skip_logits: bool = False):
+    """Full-sequence forward (train / prefill).
+
+    Returns dict(logits, aux, and when emit_state: attn kv
+    (n_super,B,S,Kv,hd), mamba conv/ssm states; when capture_hidden:
+    mamba_hidden (n_super,k-1,B,S,D), attn_hidden (n_super,B,S,D))."""
+    c = h.cfg
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
+                     d_model=c.d_model).astype(h.dtype)
+    x = constrain(x, h.rules, "batch", "seq", "d_model")
+
+    def super_body(carry, xs):
+        x, aux = carry
+        mp_stack, ap = xs
+
+        def inner(xc, mp):
+            xc, hidden, (ncs, nss) = _mamba_fwd(mp, xc, h)
+            return xc, (hidden if capture_hidden else None,
+                        (ncs, nss) if emit_state else None)
+
+        x, (m_hidden, m_states) = jax.lax.scan(inner, x, mp_stack)
+        x, a, kv, a_hidden = tfm.block_forward(
+            ap, x, h.lm, positions=positions, window=None,
+            emit_kv=emit_state)
+        if kv is not None:
+            kv = tuple(constrain(t, h.rules, "batch", "kv_seq", "kv_heads",
+                                 "head_dim") for t in kv)
+        ys = (m_hidden, m_states, kv,
+              a_hidden if capture_hidden else None)
+        return (x, aux + a), ys
+
+    body = tfm._remat_wrap(super_body, h.lm)
+    (x, aux), ys = jax.lax.scan(body, (x, 0.0), (params["mamba"],
+                                                 params["attn"]))
+    m_hidden, m_states, kv, a_hidden = ys
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    if final_logits_only:
+        x = x[:, -1:]
+    if skip_logits:
+        return {"final_x": x, "aux": aux, "kv": kv,
+                "mamba_states": m_states, "mamba_hidden": m_hidden,
+                "attn_hidden": a_hidden}
+    lg = embed_logits(params["embed"], x, h.rules, softcap=c.logit_softcap,
+                      true_vocab=c.vocab_size)
+    return {"logits": lg, "aux": aux, "kv": kv, "mamba_states": m_states,
+            "mamba_hidden": m_hidden, "attn_hidden": a_hidden}
+
+
+def hybrid_decode_step(params, cache, tokens, h: HybridHyper):
+    """cache: dict(attn_k/attn_v (n_super,B,Smax,Kv,hd), conv
+    (n_super,k-1,B,W-1,C), ssm (n_super,k-1,B,H,P,N), lengths (B,))."""
+    c = h.cfg
+    lengths = cache["lengths"]
+    x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
+                     d_model=c.d_model).astype(h.dtype)
+
+    def super_body(x, xs):
+        mp_stack, ap, conv, ssm, kc, vc = xs
+
+        def inner(xc, mxs):
+            mp, cs, ss = mxs
+            xc, hidden, (ncs, nss) = _mamba_fwd(mp, xc, h, conv_state=cs,
+                                                ssm_state=ss)
+            return xc, (ncs, nss, hidden)
+
+        x, (nconv, nssm, m_hidden) = jax.lax.scan(inner, x,
+                                                  (mp_stack, conv, ssm))
+        a_hidden = x
+        x, nk, nv, _ = tfm.block_decode(ap, x, h.lm, k_cache=kc, v_cache=vc,
+                                        lengths=lengths, window=None)
+        return x, (nconv, nssm, nk, nv, m_hidden, a_hidden)
+
+    xs = (params["mamba"], params["attn"], cache["conv"], cache["ssm"],
+          cache["attn_k"], cache["attn_v"])
+    x, (nconv, nssm, nk, nv, m_hidden, a_hidden) = jax.lax.scan(
+        super_body, x, xs)
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    lg = embed_logits(params["embed"], x, h.rules, softcap=c.logit_softcap,
+                      true_vocab=c.vocab_size)
+    new_cache = {"attn_k": nk, "attn_v": nv, "conv": nconv, "ssm": nssm,
+                 "lengths": lengths + 1}
+    return lg, new_cache, (m_hidden, a_hidden)
+
+
+# ---------------------------------------------------------------- HCache ops
+def hybrid_restore_attn_kv(params, attn_hidden, h: HybridHyper, *, positions):
+    """Restore attention-block KV from saved hidden states (paper op)."""
+    c = h.cfg
+
+    def one(ap, hl):
+        normed = apply_norm(ap["ln1"], hl.astype(h.dtype), c.norm, c.norm_eps)
+        return attn_lib.restore_kv(
+            ap["attn"]["wk"], ap["attn"]["wv"], ap["attn"].get("bk"),
+            ap["attn"].get("bv"), normed, h.lm.attn, positions)
+
+    return jax.vmap(one)(params["attn"], attn_hidden)
+
+
+def hybrid_restore_mamba_states(params, mamba_hidden, h: HybridHyper):
+    """ssm-rescan: recompute each mamba layer's (conv, ssm) final state from
+    that layer's saved input hidden states. Layer-parallel (double vmap)."""
+    def one(mp, hl):
+        normed = apply_norm(mp["ln"], hl.astype(h.dtype), h.cfg.norm,
+                            h.cfg.norm_eps)
+        _, (ncs, nss) = apply_mamba2(mp["m"], normed, h.mamba, h.rules)
+        return ncs, nss
+
+    return jax.vmap(jax.vmap(one))(params["mamba"], mamba_hidden)

@@ -1,0 +1,243 @@
+"""Attention: GQA / MHA, causal + sliding-window + bidirectional + cross,
+attention-logit softcap (gemma2/grok), chunked "flash"-style jnp path for
+long sequences, and a direct path for decode (KV-sequence-sharded).
+
+TP layout: q heads are padded to a multiple of the model axis
+(``sharding.pad_heads``) and sharded over ``model``; K/V stay at their true
+GQA width (replicated across model for prefill; decode shards the *cached
+sequence* dimension instead — flash-decoding style, GSPMD inserts the
+softmax all-reduces).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers.rope import apply_rope
+from repro.models.module import bias_param, box, dense_param, normal_init
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnHyper:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    padded_heads: int            # multiple of the model axis (>= n_heads)
+    qkv_bias: bool = False
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None
+    causal: bool = True
+    chunk: int = 1024            # kv chunk for the flash path
+
+    @property
+    def group(self) -> int:
+        return self.padded_heads // self.n_kv_heads
+
+
+def init_attention(rng, d_model: int, h: AttnHyper, dtype) -> dict:
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    qd = h.padded_heads * h.head_dim
+    kvd = h.n_kv_heads * h.head_dim
+    scale = d_model ** -0.5
+    wq = normal_init(rq, (d_model, qd), dtype, scale)
+    wo = normal_init(ro, (qd, d_model), dtype, (qd) ** -0.5)
+    if h.padded_heads != h.n_heads:
+        # zero the padded head slices so padding never changes the output
+        real = h.n_heads * h.head_dim
+        live = (jnp.arange(qd) % (h.group * h.head_dim)
+                < (h.n_heads // h.n_kv_heads) * h.head_dim)
+        del real
+        wq = wq * live[None, :].astype(dtype)
+        wo = wo * live[:, None].astype(dtype)
+    p = {
+        "wq": box(wq, "d_model", "qkv_out"),
+        "wk": dense_param(rk, d_model, kvd, dtype, "d_model", "kv_out", scale),
+        "wv": dense_param(rv, d_model, kvd, dtype, "d_model", "kv_out", scale),
+        "wo": box(wo, "o_in", "d_model"),
+    }
+    if h.qkv_bias:
+        p["bq"] = bias_param(qd, dtype, "qkv_out")
+        p["bk"] = bias_param(kvd, dtype, "kv_out")
+        p["bv"] = bias_param(kvd, dtype, "kv_out")
+    return p
+
+
+def project_qkv(p: dict, x, h: AttnHyper, rules: ShardingRules, positions):
+    """x (B,S,D) -> q (B,S,Hp,hd), k/v (B,S,Kv,hd); RoPE applied."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if h.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h.padded_heads, h.head_dim)
+    k = k.reshape(B, S, h.n_kv_heads, h.head_dim)
+    v = v.reshape(B, S, h.n_kv_heads, h.head_dim)
+    if h.use_rope:
+        q = apply_rope(q, positions, h.rope_theta)
+        k = apply_rope(k, positions, h.rope_theta)
+    q = constrain(q, rules, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, rules, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, rules, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def restore_kv(wk, wv, bk, bv, hidden, h: AttnHyper, positions):
+    """The HCache restoration op: per-layer K,V from saved hidden states.
+
+    hidden: (B, S, D) layer-input hidden states (post input-norm NOT applied —
+    callers pass the normed input, matching what project_qkv consumed).
+    """
+    B, S, _ = hidden.shape
+    k = jnp.einsum("bsd,dh->bsh", hidden, wk)
+    v = jnp.einsum("bsd,dh->bsh", hidden, wv)
+    if bk is not None:
+        k, v = k + bk, v + bv
+    k = k.reshape(B, S, h.n_kv_heads, h.head_dim)
+    v = v.reshape(B, S, h.n_kv_heads, h.head_dim)
+    if h.use_rope:
+        k = apply_rope(k, positions, h.rope_theta)
+    return k, v
+
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: Optional[int],
+               kv_len=None):
+    """Additive bias (B,1,1,Sq,Skv): 0 where attendable, NEG_INF elsewhere.
+
+    q_pos: (B, Sq) absolute positions of the queries.
+    kv_pos: (Skv,) absolute positions of this KV chunk.
+    kv_len: None, scalar, or (B,) live length of the KV buffer.
+    """
+    qp = q_pos[:, :, None]                     # (B, Sq, 1)
+    kp = kv_pos[None, None, :]                 # (1, 1, Skv)
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    if kv_len is not None:
+        kl = jnp.broadcast_to(jnp.asarray(kv_len), (q_pos.shape[0],))
+        ok &= kp < kl[:, None, None]
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    return bias[:, None, None, :, :]           # (B,1,1,Sq,Skv)
+
+
+def _scores(q, k, softcap):
+    """q (B,Sq,Kv,g,hd), k (B,C,Kv,hd) -> (B,Kv,g,Sq,C) fp32."""
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q, k,
+                   preferred_element_type=jnp.float32)
+    s *= q.shape[-1] ** -0.5
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def flash_attention_jnp(q, k, v, h: AttnHyper, *, q_positions, kv_start: int = 0,
+                        causal: bool, window: Optional[int] = None,
+                        kv_len=None):
+    """Chunked online-softmax attention (pure jnp; oracle for the Pallas
+    kernel and the dry-run lowering path).
+
+    q: (B,Sq,Hp,hd), k/v: (B,Skv,Kv,hd). Returns (B,Sq,Hp,hd).
+    """
+    B, Sq, Hp, hd = q.shape
+    Skv = k.shape[1]
+    Kv = h.n_kv_heads
+    g = Hp // Kv
+    qg = q.reshape(B, Sq, Kv, g, hd)
+    C = min(h.chunk, Skv)
+    n_chunks = (Skv + C - 1) // C
+    pad = n_chunks * C - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = Skv          # mask the padded tail
+    kc = k.reshape(B, n_chunks, C, Kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, C, Kv, hd).transpose(1, 0, 2, 3, 4)
+
+    m0 = jnp.full((B, Kv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, g, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Kv, g, Sq, hd), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        idx, kci, vci = xs
+        s = _scores(qg, kci, h.attn_softcap)              # (B,Kv,g,Sq,C)
+        kv_pos = kv_start + idx * C + jnp.arange(C)
+        bias = _mask_bias(q_positions, kv_pos,
+                          causal=causal, window=window, kv_len=kv_len)
+        s = s + bias
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(v.dtype), vci,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hp, hd)
+    return out.astype(q.dtype)
+
+
+def flash_attention_triangular(q, k, v, h: AttnHyper, *, q_positions,
+                               causal: bool = True,
+                               window: Optional[int] = None,
+                               q_block: int = 4096):
+    """§Perf variant: process q in static blocks, each attending only
+    kv[: block_end] — removes the ~2× causal-masking compute the single
+    rectangular sweep pays (the jnp analog of the Pallas kernel's masked-
+    block skipping). Self-attention only (q and kv positions aligned)."""
+    B, Sq, Hp, hd = q.shape
+    if Sq <= q_block or not causal:
+        return flash_attention_jnp(q, k, v, h, q_positions=q_positions,
+                                   causal=causal, window=window)
+    outs = []
+    for start in range(0, Sq, q_block):
+        end = min(start + q_block, Sq)
+        outs.append(flash_attention_jnp(
+            q[:, start:end], k[:, :end], v[:, :end], h,
+            q_positions=q_positions[:, start:end], causal=True,
+            window=window))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention_jnp(q, k_cache, v_cache, h: AttnHyper, *, kv_len,
+                         window: Optional[int] = None):
+    """Single-step decode attention against a (possibly kv_seq-sharded)
+    cache. q: (B,1,Hp,hd); caches: (B,Smax,Kv,hd); kv_len: current length
+    (scalar, includes the token being written this step)."""
+    B, _, Hp, hd = q.shape
+    Kv = h.n_kv_heads
+    g = Hp // Kv
+    qg = q.reshape(B, 1, Kv, g, hd)
+    s = _scores(qg, k_cache, h.attn_softcap)               # (B,Kv,g,1,Smax)
+    kv_pos = jnp.arange(k_cache.shape[1])
+    kl = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+    qpos = (kl - 1)[:, None]                               # (B, 1)
+    bias = _mask_bias(qpos, kv_pos, causal=True, window=window, kv_len=kl)
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hp, hd)
+    return out.astype(q.dtype)
+
+
+def attn_output(p: dict, attn, rules: ShardingRules):
+    """attn (B,S,Hp,hd) -> (B,S,D) via the output projection."""
+    B, S, Hp, hd = attn.shape
+    out = jnp.einsum("bsh,hd->bsd", attn.reshape(B, S, Hp * hd), p["wo"])
+    return constrain(out, rules, "batch", "seq", "d_model")

@@ -1,0 +1,305 @@
+"""Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2) blocks.
+
+TPU adaptation notes (DESIGN.md §2):
+  * Mamba1's selective scan is evaluated **chunk-wise**: an outer
+    ``lax.scan`` carries the (B, I, N) state across chunks while the inner
+    per-chunk scan is wrapped in ``jax.checkpoint`` — backward memory is
+    O(S/Q) boundary states instead of O(S) per-step states. This replaces
+    the CUDA kernel's SRAM streaming.
+  * Mamba2 uses the SSD chunked form: within-chunk attention-like matmuls
+    (MXU-friendly) + an inter-chunk state recurrence of length S/Q.
+  * Decode is a single-token state update (``kernels/ssm_update.py`` is the
+    Pallas version; this file holds the jnp path/oracle).
+
+Sharding: the inner dim (I) / SSD heads (H) are TP-sharded over ``model``;
+states (B, I, N) / (B, H, P, N) shard the same dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers.norm import apply_norm, init_norm
+from repro.models.module import bias_param, box, dense_param, normal_init
+
+
+# =============================================================== causal conv1d
+def causal_conv1d(x, weight, bias, state=None):
+    """Depthwise causal conv. x: (B,S,C), weight: (C,W).
+
+    With ``state`` (B, W-1, C) the conv sees the previous inputs (decode /
+    chunked prefill continuation). Returns (y, new_state)."""
+    B, S, C = x.shape
+    W = weight.shape[1]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+W-1, C)
+    y = sum(xp[:, w:w + S, :] * weight[:, w] for w in range(W))
+    y = y + bias
+    new_state = xp[:, S:, :] if W > 1 else state
+    return y, new_state
+
+
+# ==================================================================== Mamba 1
+@dataclasses.dataclass(frozen=True)
+class Mamba1Hyper:
+    d_model: int
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 128          # scan chunk (remat boundary)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(self.d_model // 16, 1)
+
+
+def init_mamba1(rng, h: Mamba1Hyper, dtype) -> dict:
+    r = jax.random.split(rng, 6)
+    I, N, R = h.d_inner, h.d_state, h.dt_rank
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, N + 1, dtype=jnp.float32), (I, N)))
+    return {
+        "in_proj": dense_param(r[0], h.d_model, 2 * I, dtype, "d_model",
+                               "ssm_inner"),
+        "conv_w": box(normal_init(r[1], (I, h.d_conv), dtype, h.d_conv ** -0.5),
+                      "ssm_inner", "conv_w"),
+        "conv_b": bias_param(I, dtype, "ssm_inner"),
+        "x_proj": dense_param(r[2], I, R + 2 * N, dtype, "ssm_inner", None),
+        "dt_proj": dense_param(r[3], R, I, dtype, "dt_rank", "ssm_inner",
+                               R ** -0.5),
+        "dt_bias": box(jnp.log(jnp.expm1(
+            jnp.full((I,), 0.01, jnp.float32))).astype(dtype), "ssm_inner"),
+        "a_log": box(a_init.astype(jnp.float32), "ssm_inner", "ssm_state"),
+        "d_skip": box(jnp.ones((I,), dtype), "ssm_inner"),
+        "out_proj": dense_param(r[4], I, h.d_model, dtype, "ssm_inner",
+                                "d_model"),
+    }
+
+
+def _mamba1_scan_chunk(h_state, inputs):
+    """One remat chunk: sequential scan over Q steps.
+
+    h_state: (B, I, N) fp32. inputs: (dA, dBx, C) with shapes
+    (B,Q,I,N), (B,Q,I,N), (B,Q,N)."""
+    dA, dBx, Cm = inputs
+
+    def step(hs, xs):
+        da, dbx, c = xs                                   # (B,I,N),(B,I,N),(B,N)
+        hs = da * hs + dbx
+        y = jnp.einsum("bin,bn->bi", hs, c)
+        return hs, y
+
+    h_state, ys = jax.lax.scan(
+        step, h_state,
+        (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+         Cm.transpose(1, 0, 2)))
+    return h_state, ys.transpose(1, 0, 2)                 # (B,Q,I)
+
+
+def apply_mamba1(p: dict, x, h: Mamba1Hyper, rules: ShardingRules, *,
+                 init_state=None, conv_state=None, remat_chunks: bool = True):
+    """x: (B,S,D) -> (y (B,S,D), (conv_state, ssm_state))."""
+    B, S, D = x.shape
+    I, N, R = h.d_inner, h.d_state, h.dt_rank
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xz = constrain(xz, rules, "batch", "seq", "ssm_inner")
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = causal_conv1d(xi, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"])
+    dt_low, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_low, p["dt_proj"])
+        + p["dt_bias"]).astype(jnp.float32)               # (B,S,I)
+    A = -jnp.exp(p["a_log"])                              # (I,N) fp32
+    dA = jnp.exp(dt[..., None] * A)                       # (B,S,I,N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[..., None, :].astype(
+        jnp.float32)                                      # (B,S,I,N)
+
+    Q = min(h.chunk, S)
+    n_chunks = (S + Q - 1) // Q
+    padS = n_chunks * Q - S
+    if padS:
+        dA = jnp.pad(dA, ((0, 0), (0, padS), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, padS), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, padS), (0, 0)))
+    h0 = (jnp.zeros((B, I, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    chunk_fn = (jax.checkpoint(_mamba1_scan_chunk) if remat_chunks
+                else _mamba1_scan_chunk)
+
+    def outer(hs, xs):
+        return chunk_fn(hs, xs)
+
+    reshaped = (
+        dA.reshape(B, n_chunks, Q, I, N).transpose(1, 0, 2, 3, 4),
+        dBx.reshape(B, n_chunks, Q, I, N).transpose(1, 0, 2, 3, 4),
+        Cm.astype(jnp.float32).reshape(B, n_chunks, Q, N).transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(outer, h0, reshaped)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * Q, I)[:, :S]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = constrain(y.astype(x.dtype), rules, "batch", "seq", "ssm_inner")
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return constrain(out, rules, "batch", "seq", "d_model"), (new_conv, h_final)
+
+
+def decode_mamba1_step(p: dict, x, h: Mamba1Hyper, rules: ShardingRules, *,
+                       conv_state, ssm_state):
+    """Single-token decode. x: (B,1,D). States as returned by apply_mamba1."""
+    out, (ncs, nss) = apply_mamba1(p, x, h, rules, init_state=ssm_state,
+                                   conv_state=conv_state, remat_chunks=False)
+    return out, (ncs, nss)
+
+
+# ==================================================================== Mamba 2
+@dataclasses.dataclass(frozen=True)
+class Mamba2Hyper:
+    d_model: int
+    d_state: int
+    head_dim: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(rng, h: Mamba2Hyper, dtype) -> dict:
+    r = jax.random.split(rng, 5)
+    I, N, H, G = h.d_inner, h.d_state, h.n_heads, h.n_groups
+    conv_ch = I + 2 * G * N
+    return {
+        "in_proj": dense_param(r[0], h.d_model, 2 * I + 2 * G * N + H, dtype,
+                               "d_model", "ssm_inner"),
+        "conv_w": box(normal_init(r[1], (conv_ch, h.d_conv), dtype,
+                                  h.d_conv ** -0.5), "ssm_inner", "conv_w"),
+        "conv_b": bias_param(conv_ch, dtype, "ssm_inner"),
+        "dt_bias": box(jnp.log(jnp.expm1(
+            jnp.full((H,), 0.01, jnp.float32))).astype(jnp.float32),
+            "ssm_heads"),
+        "a_log": box(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+                     "ssm_heads"),
+        "d_skip": box(jnp.ones((H,), jnp.float32), "ssm_heads"),
+        "gate_norm": init_norm("rmsnorm", I, dtype)["scale"],
+        "out_proj": dense_param(r[3], I, h.d_model, dtype, "ssm_inner",
+                                "d_model"),
+    }
+
+
+def _ssd_chunk_tensors(xh, dt, A, Bm, Cm, Q):
+    """Reshape (B,S,...) into per-chunk tensors for the SSD algorithm."""
+    B, S = dt.shape[:2]
+    nc = S // Q
+    xh = xh.reshape(B, nc, Q, *xh.shape[2:])
+    dt = dt.reshape(B, nc, Q, -1)
+    Bm = Bm.reshape(B, nc, Q, *Bm.shape[2:])
+    Cm = Cm.reshape(B, nc, Q, *Cm.shape[2:])
+    return xh, dt, Bm, Cm, nc
+
+
+def apply_mamba2(p: dict, x, h: Mamba2Hyper, rules: ShardingRules, *,
+                 init_state=None, conv_state=None):
+    """SSD chunked forward. x: (B,S,D) -> (y, (conv_state, ssm_state)).
+
+    ssm_state: (B, H, P, N) fp32."""
+    B, S, D = x.shape
+    I, N, H, P, G = h.d_inner, h.d_state, h.n_heads, h.head_dim, h.n_groups
+    proj = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    proj = constrain(proj, rules, "batch", "seq", "ssm_inner")
+    z, xBC, dt_raw = jnp.split(proj, [I, 2 * I + 2 * G * N], axis=-1)
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xi, Bm, Cm = jnp.split(xBC, [I, I + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["a_log"])                                         # (H,)
+
+    Q = min(h.chunk, S)
+    padS = (Q - S % Q) % Q
+    if padS:
+        xi = jnp.pad(xi, ((0, 0), (0, padS), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, padS), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, padS), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padS), (0, 0)))
+    Sp = S + padS
+    xh = xi.reshape(B, Sp, H, P)
+    Bg = Bm.reshape(B, Sp, G, N).astype(jnp.float32)
+    Cg = Cm.reshape(B, Sp, G, N).astype(jnp.float32)
+    xh_c, dt_c, B_c, C_c, nc = _ssd_chunk_tensors(xh, dt, A, Bg, Cg, Q)
+
+    a = dt_c * A                                           # (B,nc,Q,H) (<=0)
+    a_cs = jnp.cumsum(a, axis=2)                           # within-chunk cumsum
+    a_total = a_cs[:, :, -1, :]                            # (B,nc,H)
+
+    # --- intra-chunk (attention-like) -------------------------------------
+    # L[i,j] = exp(a_cs[i] - a_cs[j]) for i >= j
+    seg = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqgn,bckgn->bcqkg", C_c, B_c)    # (B,nc,Q,Q,G)
+    # broadcast groups over heads (G divides H)
+    hpg = H // G
+    dx = (dt_c[..., None] * xh_c.astype(jnp.float32))      # (B,nc,Q,H,P)
+    scores_h = jnp.repeat(scores, hpg, axis=-1)            # (B,nc,Q,Q,H)
+    M = scores_h * L.transpose(0, 1, 2, 3, 4)              # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, dx)
+
+    # --- chunk states + inter-chunk recurrence -----------------------------
+    decay_to_end = jnp.exp(a_total[:, :, None, :] - a_cs)  # (B,nc,Q,H)
+    state_c = jnp.einsum("bcqgn,bcqhp->bchpn", B_c,
+                         dx * decay_to_end[..., None])     # (B,nc,H,P,N)
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def chunk_rec(hs, xs):
+        st, atot = xs                                      # (B,H,P,N), (B,H)
+        prev = hs
+        hs = jnp.exp(atot)[:, :, None, None] * hs + st
+        return hs, prev
+
+    h_final, h_prev = jax.lax.scan(
+        chunk_rec, h0,
+        (state_c.transpose(1, 0, 2, 3, 4), a_total.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+
+    decay_from_start = jnp.exp(a_cs)                       # (B,nc,Q,H)
+    # y_inter[q] = C[q] · (decay_from_start[q] * h_prev)
+    y_inter = jnp.einsum("bcqgn,bchpn->bcqhp",
+                         C_c, h_prev) * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+    y = y + xh[:, :S].astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, I)
+    # gated RMSNorm (mamba2 norm-before-gate)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jnp.reciprocal(jnp.sqrt(var + 1e-6)) * p["gate_norm"].astype(
+        jnp.float32)
+    y = constrain(y.astype(x.dtype), rules, "batch", "seq", "ssm_inner")
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return constrain(out, rules, "batch", "seq", "d_model"), (new_conv, h_final)
+
+
+def decode_mamba2_step(p: dict, x, h: Mamba2Hyper, rules: ShardingRules, *,
+                       conv_state, ssm_state):
+    return apply_mamba2(p, x, h, rules, init_state=ssm_state,
+                        conv_state=conv_state)

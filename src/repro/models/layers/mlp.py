@@ -1,0 +1,39 @@
+"""Feed-forward: GLU (llama/gemma style) and plain 2-layer (whisper/opt/
+starcoder2) variants, TP-sharded on d_ff."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.module import dense_param
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(rng, d_model: int, d_ff: int, glu: bool, dtype) -> dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {
+        "w_up": dense_param(r1, d_model, d_ff, dtype, "d_model", "d_ff"),
+        "w_down": dense_param(r2, d_ff, d_model, dtype, "d_ff", "d_model"),
+    }
+    if glu:
+        p["w_gate"] = dense_param(r3, d_model, d_ff, dtype, "d_model", "d_ff")
+    return p
+
+
+def apply_mlp(p: dict, x, activation: str, rules: ShardingRules):
+    act = ACTS[activation]
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    up = constrain(up, rules, "batch", "seq", "d_ff")
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        up = act(gate) * up
+    else:
+        up = act(up)
+    out = jnp.einsum("bsf,fd->bsd", up, p["w_down"])
+    return constrain(out, rules, "batch", "seq", "d_model")

@@ -1,0 +1,183 @@
+"""Top-k routed mixture-of-experts FFN.
+
+Dispatch strategy (TPU/GSPMD-native, see DESIGN.md §4):
+  * routing, sorting and capacity-dropping happen **per batch row**, so every
+    op is batched over the data-sharded batch dim and GSPMD keeps all
+    dispatch work local (no cross-device sort).
+  * expert FFN weights are TP-sharded on the per-expert d_ff dim (the mesh
+    pins axes to (data, model); grok's 8 experts don't divide model=16, so
+    expert-parallelism proper is not expressible — recorded as an adaptation).
+  * capacity = ceil(S·top_k/E · capacity_factor); overflow tokens are dropped
+    (their FFN output is 0, residual passes through) — standard GShard-style
+    dropping.
+
+FLOPs scale with *active* parameters (top-k · capacity_factor), which is what
+the roofline MODEL_FLOPS ratio checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers.mlp import ACTS
+from repro.models.module import box, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEHyper:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    activation: str = "silu"
+    glu: bool = True
+    capacity_factor: float = 1.25
+    # §Perf variant: defer the model-axis reduction of the expert outputs
+    # until AFTER the scatter back to token positions — the all-reduce then
+    # moves (B,S,D) instead of (B,E,C,D) = top_k·capacity_factor× less bytes.
+    # GSPMD refuses to defer (measured, see EXPERIMENTS.md §Perf), so the
+    # late combine is forced with shard_map + explicit psum.
+    late_combine: bool = False
+
+
+def init_moe(rng, h: MoEHyper, dtype) -> dict:
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    E, D, F = h.n_experts, h.d_model, h.d_ff
+    p = {
+        "router": box(normal_init(r1, (D, E), dtype, D ** -0.5),
+                      "d_model", "experts"),
+        "w_up": box(normal_init(r2, (E, D, F), dtype, D ** -0.5),
+                    "experts", "d_model", "d_ff"),
+        "w_down": box(normal_init(r3, (E, F, D), dtype, F ** -0.5),
+                      "experts", "d_ff", "d_model"),
+    }
+    if h.glu:
+        p["w_gate"] = box(normal_init(r4, (E, D, F), dtype, D ** -0.5),
+                          "experts", "d_model", "d_ff")
+    return p
+
+
+def apply_moe(p: dict, x, h: MoEHyper, rules: ShardingRules):
+    """x: (B, S, D) -> (B, S, D).  Per-row capacity-dropping dispatch."""
+    if h.late_combine:
+        mesh = jax.sharding.get_abstract_mesh()
+        if not mesh.empty and "model" in mesh.axis_names \
+                and mesh.shape["model"] > 1 \
+                and rules.rules.get("d_ff") == "model":
+            return _apply_moe_shard_map(p, x, h, rules, mesh)
+    return _apply_moe_gspmd(p, x, h, rules)
+
+
+def _apply_moe_shard_map(p, x, h: MoEHyper, rules: ShardingRules, mesh):
+    """shard_map MoE: dispatch runs per data-shard; expert FFNs use the
+    local d_ff slice; ONE psum over `model` AFTER the token scatter."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import ShardingRules as SR
+
+    batch_spec = rules.spec(("batch", None, None))
+    local_rules = SR({})                      # constraints no-op inside
+
+    def body(xl, pl):
+        out, probs = _apply_moe_gspmd(pl, xl, h, local_rules,
+                                      skip_pin=True)
+        out = jax.lax.psum(out, "model")
+        return out, probs
+
+    w_spec = P(None, None, "model")
+    p_specs = {"router": P(None, None), "w_up": w_spec,
+               "w_down": P(None, "model", None)}
+    if "w_gate" in p:
+        p_specs["w_gate"] = w_spec
+    out, probs = shard_map(
+        body, mesh=mesh, in_specs=(batch_spec, p_specs),
+        out_specs=(batch_spec, rules.spec(("batch", None, None))),
+        check_rep=False)(x, dict(p))
+    return out, probs
+
+
+def _apply_moe_gspmd(p: dict, x, h: MoEHyper, rules: ShardingRules,
+                     skip_pin: bool = False):
+    # pin 2D-sharded expert weights (grok: fsdp->data) to their layout HERE,
+    # inside the layer-scan body — stops XLA hoisting a full-stack all-gather
+    # (+f32 upcast) out of the loop (64×8×6144×2048 f32 = 24 GiB/device)
+    if not skip_pin:
+        p = dict(p)
+        p["w_up"] = constrain(p["w_up"], rules, "experts", "fsdp", "d_ff")
+        p["w_down"] = constrain(p["w_down"], rules, "experts", "d_ff",
+                                "fsdp")
+        if "w_gate" in p:
+            p["w_gate"] = constrain(p["w_gate"], rules, "experts", "fsdp",
+                                    "d_ff")
+    B, S, D = x.shape
+    E, K = h.n_experts, h.top_k
+    C = math.ceil(S * K / E * h.capacity_factor) if S * K >= E else S * K
+    C = max(min(C, S), 1)
+    act = ACTS[h.activation]
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                    # (B, S, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-row stable sort by expert id ---------------------------------
+    flat_e = top_e.reshape(B, S * K)                          # (B, T)
+    flat_t = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K)).reshape(S * K)
+    flat_p = top_p.reshape(B, S * K)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)         # (B, T)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_t = flat_t[order]                                  # (B, T) token ids
+    sorted_p = jnp.take_along_axis(flat_p, order, axis=-1)
+
+    # position of each entry within its expert group
+    group_start = jnp.cumsum(
+        jax.nn.one_hot(sorted_e, E, dtype=jnp.int32).sum(axis=1), axis=-1)  # (B,E)
+    starts = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32), group_start[:, :-1]], axis=-1)
+    pos_in_e = jnp.arange(S * K)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)                            # (B, T)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)    # dropped -> sentinel
+
+    # scatter token ids / weights into (B, E*C) slot buffers
+    def row_scatter(slots, vals, fill):
+        buf = jnp.full((E * C + 1,), fill, vals.dtype)
+        return buf.at[slots].set(vals)[:-1]
+
+    tok_buf = jax.vmap(lambda s, t: row_scatter(s, t, jnp.int32(-1)))(
+        slot, sorted_t.astype(jnp.int32))                     # (B, E*C)
+    w_buf = jax.vmap(lambda s, w: row_scatter(s, w, jnp.float32(0)))(
+        slot, sorted_p.astype(jnp.float32))
+
+    gathered = jnp.take_along_axis(
+        x, jnp.maximum(tok_buf, 0)[..., None], axis=1)        # (B, E*C, D)
+    gathered = gathered * (tok_buf >= 0)[..., None].astype(x.dtype)
+    ge = gathered.reshape(B, E, C, D)
+    ge = constrain(ge, rules, "batch", "experts", None, "d_model")
+
+    up = jnp.einsum("becd,edf->becf", ge, p["w_up"])
+    up = constrain(up, rules, "batch", "experts", None, "d_ff")
+    if "w_gate" in p:
+        gate = jnp.einsum("becd,edf->becf", ge, p["w_gate"])
+        up = act(gate) * up
+    else:
+        up = act(up)
+    out_e = jnp.einsum("becf,efd->becd", up, p["w_down"])
+    if not h.late_combine:
+        # baseline: reduce partial sums over the model axis here (the
+        # paper-faithful naive TP layout; see EXPERIMENTS.md §Perf)
+        out_e = constrain(out_e, rules, "batch", "experts", None, "d_model")
+    out_e = out_e.reshape(B, E * C, D) * w_buf[..., None].astype(x.dtype)
+
+    # scatter-add back to token positions
+    def row_combine(tok, vals):
+        return jnp.zeros((S, D), vals.dtype).at[
+            jnp.maximum(tok, 0)].add(vals * (tok >= 0)[:, None].astype(vals.dtype))
+
+    out = jax.vmap(row_combine)(tok_buf, out_e)
+    return constrain(out, rules, "batch", "seq", "d_model"), probs

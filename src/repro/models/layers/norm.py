@@ -1,0 +1,29 @@
+"""RMSNorm / LayerNorm (pre-norm transformer style), fp32 internals."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.module import bias_param, scale_param
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    p = {"scale": scale_param(d, dtype, None)}
+    if kind == "layernorm":
+        p["bias"] = bias_param(d, dtype, None)
+    return p
+
+
+def apply_norm(p: dict, x, kind: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+        out = out * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return out.astype(x.dtype)

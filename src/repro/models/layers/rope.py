@@ -1,0 +1,33 @@
+"""Rotary position embeddings (llama-style half-split rotation) and
+sinusoidal absolute positions (whisper encoder)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> cos, sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, head_dim); positions: (B, S) token positions."""
+    head_dim = x.shape[-1]
+    cos, sin = rope_angles(positions, head_dim, theta)   # (B, S, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal table (n_pos, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,303 @@
+"""Unified model facade.
+
+One `Model` object per architecture dispatches to the family implementation
+(transformer / ssm / hybrid / encdec) behind a uniform API used by the
+serving engine, the trainer, and the multi-pod dry-run:
+
+    init(rng)                          -> boxed params
+    forward(params, batch)             -> train-path logits dict
+    prefill(params, batch, ...)        -> logits + cache pieces (+ hidden)
+    decode_step(params, cache, tokens) -> (logits, new cache)
+    restore_cache(params, saved, ...)  -> HCache restoration (per family)
+    *_inputs(shape)                    -> ShapeDtypeStruct trees + logical
+                                          sharding specs for the dry-run
+
+Whisper uses a fixed decoder prompt length (DEC_PROMPT) / training target
+length (DEC_TRAIN); InternVL2 reserves the first ``n_vis`` positions of the
+sequence for stubbed patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.arch import ArchConfig
+from repro.config.shapes import InputShape
+from repro.distributed.sharding import ShardingRules
+from repro.models import encdec, hybrid, ssm as ssm_mod, transformer as tfm
+from repro.models.module import split
+
+DEC_PROMPT = 128      # whisper decoder prompt length in prefill cells
+DEC_TRAIN = 448       # whisper decoder target length in train cells
+DEC_BUF = 1024        # whisper decoder self-KV buffer for decode cells
+N_VIS = 256           # internvl2 patch positions
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    rules: ShardingRules
+    model_axis: int = 1
+    dtype: Any = jnp.float32
+    remat: str = "full"
+    attn_chunk: int = 1024
+    tri_prefill: bool = False        # §Perf variants (see layers)
+    moe_late_combine: bool = False
+
+    def __post_init__(self):
+        c = self.cfg
+        if c.is_encoder_decoder:
+            self.h = encdec.EncDecHyper(
+                cfg=c, rules=self.rules, model_axis=self.model_axis,
+                dtype=self.dtype, attn_chunk=self.attn_chunk,
+                remat=self.remat)
+            self.kind = "encdec"
+        elif c.family == "ssm":
+            self.h = ssm_mod.SSMHyper(cfg=c, rules=self.rules,
+                                      model_axis=self.model_axis,
+                                      dtype=self.dtype, remat=self.remat)
+            self.kind = "ssm"
+        elif c.family == "hybrid":
+            self.h = hybrid.HybridHyper(
+                cfg=c, rules=self.rules, model_axis=self.model_axis,
+                dtype=self.dtype, attn_chunk=self.attn_chunk,
+                remat=self.remat)
+            self.kind = "hybrid"
+        else:
+            self.h = tfm.LMHyper(
+                cfg=c, rules=self.rules, model_axis=self.model_axis,
+                dtype=self.dtype, attn_chunk=self.attn_chunk,
+                remat=self.remat, n_vis=N_VIS if c.family == "vlm" else 0,
+                tri_prefill=self.tri_prefill,
+                moe_late_combine=self.moe_late_combine)
+            self.kind = "lm"
+
+    # ----------------------------------------------------------------- init
+    def init(self, rng):
+        if self.kind == "encdec":
+            return encdec.init_encdec(rng, self.h)
+        if self.kind == "ssm":
+            return ssm_mod.init_ssm_lm(rng, self.h)
+        if self.kind == "hybrid":
+            return hybrid.init_hybrid(rng, self.h)
+        return tfm.init_lm(rng, self.h)
+
+    def abstract_params(self, rng=None):
+        """(ShapeDtypeStruct values tree, logical axes tree) — no alloc."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        boxed = jax.eval_shape(self.init, rng)
+        return split(boxed)
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params, batch: Dict[str, Any], *,
+                skip_logits: bool = False) -> Dict[str, Any]:
+        """Training-path forward -> dict with 'logits' (B,S,V) + 'aux'
+        (or 'final_x' (B,S,D) when skip_logits — chunked-CE training)."""
+        if self.kind == "encdec":
+            enc_out, _ = encdec.encode(params, batch["frames"], self.h)
+            return encdec.decode_prefill(params, batch["tokens"], enc_out,
+                                         self.h, skip_logits=skip_logits)
+        if self.kind == "ssm":
+            return ssm_mod.ssm_forward(params, batch["tokens"], self.h,
+                                       skip_logits=skip_logits)
+        if self.kind == "hybrid":
+            return hybrid.hybrid_forward(params, batch["tokens"], self.h,
+                                         skip_logits=skip_logits)
+        return tfm.lm_forward(params, batch["tokens"], self.h,
+                              patch_embeds=batch.get("patches"),
+                              skip_logits=skip_logits)
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, batch, *, capture_hidden=False,
+                hist_kv=None, hist_len=None):
+        if self.kind == "encdec":
+            enc_out, enc_hidden = encdec.encode(params, batch["frames"],
+                                                self.h,
+                                                capture_hidden=capture_hidden)
+            out = encdec.decode_prefill(params, batch["tokens"], enc_out,
+                                        self.h, capture_hidden=capture_hidden,
+                                        emit_kv=True, final_logits_only=True)
+            out["enc_out"] = enc_out
+            out["enc_hidden"] = enc_hidden
+            return out
+        if self.kind == "ssm":
+            return ssm_mod.ssm_forward(params, batch["tokens"], self.h,
+                                       capture_hidden=capture_hidden,
+                                       emit_state=True,
+                                       final_logits_only=True)
+        if self.kind == "hybrid":
+            return hybrid.hybrid_forward(params, batch["tokens"], self.h,
+                                         capture_hidden=capture_hidden,
+                                         emit_state=True,
+                                         final_logits_only=True)
+        return tfm.lm_forward(params, batch["tokens"], self.h,
+                              patch_embeds=batch.get("patches"),
+                              hist_kv=hist_kv, hist_len=hist_len,
+                              capture_hidden=capture_hidden, emit_kv=True,
+                              final_logits_only=True)
+
+    # --------------------------------------------------------------- decode
+    def decode_step(self, params, cache, tokens):
+        lg, cache, _ = self.decode_step_full(params, cache, tokens)
+        return lg, cache
+
+    def decode_step_full(self, params, cache, tokens):
+        """(logits, cache, per-layer hidden states) — HCache save path."""
+        if self.kind == "encdec":
+            return encdec.decode_step(params, cache, tokens, self.h)
+        if self.kind == "ssm":
+            return ssm_mod.ssm_decode_step(params, cache, tokens, self.h)
+        if self.kind == "hybrid":
+            return hybrid.hybrid_decode_step(params, cache, tokens, self.h)
+        return tfm.lm_decode_step(params, cache, tokens, self.h)
+
+    # ------------------------------------------------------------ HCache op
+    def restore_kv_from_hidden(self, params, hidden, *, positions):
+        """The paper's restoration GEMM (families with attention)."""
+        if self.kind == "lm":
+            return tfm.lm_restore_kv(params, hidden, self.h,
+                                     positions=positions)
+        if self.kind == "hybrid":
+            return hybrid.hybrid_restore_attn_kv(params, hidden, self.h,
+                                                 positions=positions)
+        if self.kind == "encdec":
+            return encdec.restore_self_kv(params, hidden, self.h,
+                                          positions=positions)
+        raise ValueError(f"{self.cfg.name}: attention-free arch; use "
+                         "restore_ssm_states (ssm-rescan)")
+
+    def restore_ssm_states(self, params, hidden):
+        if self.kind == "ssm":
+            return ssm_mod.ssm_restore_states(params, hidden, self.h)
+        if self.kind == "hybrid":
+            return hybrid.hybrid_restore_mamba_states(params, hidden, self.h)
+        raise ValueError(f"{self.cfg.name}: no SSM states")
+
+    # ====================================================== dry-run input specs
+    def _tok(self, b, s):
+        return _sds((b, s), jnp.int32)
+
+    def train_batch_spec(self, shape: InputShape):
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if self.kind == "encdec":
+            return {"frames": _sds((B, S, c.d_model), self.dtype),
+                    "tokens": self._tok(B, DEC_TRAIN),
+                    "targets": self._tok(B, DEC_TRAIN)}
+        batch = {"tokens": self._tok(B, S), "targets": self._tok(B, S)}
+        if c.family == "vlm":
+            batch["patches"] = _sds((B, N_VIS, c.d_model), self.dtype)
+        return batch
+
+    def train_batch_sharding(self):
+        r = self.rules
+        out = {"tokens": r.spec(("batch", "seq")),
+               "targets": r.spec(("batch", "seq"))}
+        if self.kind == "encdec":
+            out["frames"] = r.spec(("batch", "seq", "d_model"))
+            del out["targets"]
+            out["targets"] = r.spec(("batch", None))
+            out["tokens"] = r.spec(("batch", None))
+        if self.cfg.family == "vlm":
+            out["patches"] = r.spec(("batch", None, "d_model"))
+        return out
+
+    def prefill_batch_spec(self, shape: InputShape):
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if self.kind == "encdec":
+            return {"frames": _sds((B, S, c.d_model), self.dtype),
+                    "tokens": self._tok(B, DEC_PROMPT)}
+        batch = {"tokens": self._tok(B, S)}
+        if c.family == "vlm":
+            batch["patches"] = _sds((B, N_VIS, c.d_model), self.dtype)
+        return batch
+
+    def prefill_batch_sharding(self):
+        out = self.train_batch_sharding()
+        out.pop("targets", None)
+        return out
+
+    def cache_spec(self, batch: int, ctx_len: int):
+        """Decode-cell cache ShapeDtypeStructs (fully-populated context)."""
+        c = self.cfg
+        hd = c.head_dim_
+        L = c.n_layers
+        lengths = _sds((batch,), jnp.int32)
+        if self.kind == "lm":
+            kv = _sds((L, batch, ctx_len, c.n_kv_heads, hd), self.dtype)
+            return {"k": kv, "v": kv, "lengths": lengths}
+        if self.kind == "ssm":
+            hyper = self.h.mamba
+            return {
+                "conv": _sds((L, batch, hyper.d_conv - 1, hyper.d_inner),
+                             self.dtype),
+                "ssm": _sds((L, batch, hyper.d_inner, hyper.d_state),
+                            jnp.float32),
+                "lengths": lengths}
+        if self.kind == "hybrid":
+            hh = self.h
+            m = hh.mamba
+            conv_ch = m.d_inner + 2 * m.n_groups * m.d_state
+            kv = _sds((hh.n_super, batch, ctx_len, c.n_kv_heads, hd),
+                      self.dtype)
+            return {
+                "attn_k": kv, "attn_v": kv,
+                "conv": _sds((hh.n_super, hh.k - 1, batch, m.d_conv - 1,
+                              conv_ch), self.dtype),
+                "ssm": _sds((hh.n_super, hh.k - 1, batch, m.n_heads,
+                             m.head_dim, m.d_state), jnp.float32),
+                "lengths": lengths}
+        # encdec: 32k/500k context is the *cross* (encoder) side
+        kv_self = _sds((L, batch, DEC_BUF, c.n_heads, hd), self.dtype)
+        kv_cross = _sds((L, batch, ctx_len, c.n_heads, hd), self.dtype)
+        return {"self_k": kv_self, "self_v": kv_self,
+                "cross_k": kv_cross, "cross_v": kv_cross,
+                "enc_len": _sds((), jnp.int32), "lengths": lengths}
+
+    def cache_sharding(self):
+        r = self.rules
+        if self.kind == "lm":
+            kv = r.spec(("layers", "batch", "kv_seq", "kv_heads", "head_dim"))
+            return {"k": kv, "v": kv, "lengths": r.spec(("batch",))}
+        if self.kind == "ssm":
+            return {
+                "conv": r.spec(("layers", "batch", "conv_w", "ssm_inner")),
+                "ssm": r.spec(("layers", "batch", "ssm_inner", "ssm_state")),
+                "lengths": r.spec(("batch",))}
+        if self.kind == "hybrid":
+            kv = r.spec(("layers", "batch", "kv_seq", "kv_heads", "head_dim"))
+            return {
+                "attn_k": kv, "attn_v": kv,
+                "conv": r.spec(("layers", None, "batch", "conv_w",
+                                "ssm_inner")),
+                "ssm": r.spec(("layers", None, "batch", "ssm_heads",
+                               None, "ssm_state")),
+                "lengths": r.spec(("batch",))}
+        kv_self = r.spec(("layers", "batch", None, "kv_heads", "head_dim"))
+        kv_cross = r.spec(("layers", "batch", "kv_seq", "kv_heads",
+                           "head_dim"))
+        return {"self_k": kv_self, "self_v": kv_self,
+                "cross_k": kv_cross, "cross_v": kv_cross,
+                "enc_len": jax.sharding.PartitionSpec(),
+                "lengths": r.spec(("batch",))}
+
+    def init_cache(self, batch: int, ctx_len: int, *, enc_len: int = 0):
+        """Concrete zero-initialized cache (serving engine)."""
+        spec = self.cache_spec(batch, ctx_len)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        cache["lengths"] = jnp.zeros((batch,), jnp.int32)
+        if "enc_len" in cache:
+            cache["enc_len"] = jnp.asarray(enc_len, jnp.int32)
+        return cache
+
+    def param_shardings(self, mesh):
+        _, axes = self.abstract_params()
+        return self.rules.tree_shardings(mesh, axes)

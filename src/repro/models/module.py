@@ -1,0 +1,97 @@
+"""Minimal pure-JAX module system.
+
+No flax in the container, so parameters are plain pytrees (nested dicts of
+arrays). Every parameter is created *boxed* with its logical sharding axes;
+``split`` separates the value tree from the axes tree so apply-functions see
+plain arrays while the launcher can resolve NamedShardings.
+
+Design rules:
+  * init functions are pure (rng -> boxed tree) and vmap-able, so stacked
+    (scan-over-layers) parameters are built with ``stacked_init``.
+  * logical axes are strings resolved by ``repro.distributed.sharding``.
+    A stacked parameter gets a leading "layers" axis automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Axes = Tuple[Optional[str], ...]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    """A parameter value carrying its logical sharding axes."""
+
+    value: Any
+    axes: Axes
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def box(value, *axes: Optional[str]) -> Boxed:
+    if value.ndim != len(axes):
+        raise ValueError(f"axes {axes} do not match shape {value.shape}")
+    return Boxed(value, tuple(axes))
+
+
+def split(tree):
+    """Boxed tree -> (values tree, axes tree)."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return values, axes
+
+
+def merge(values, axes):
+    return jax.tree.map(Boxed, values, axes,
+                        is_leaf=lambda x: not isinstance(x, dict))
+
+
+# ----------------------------------------------------------------- initializers
+def normal_init(rng, shape, dtype, scale: float):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_param(rng, d_in: int, d_out: int, dtype, in_axis: Optional[str],
+                out_axis: Optional[str], scale: Optional[float] = None) -> Boxed:
+    scale = scale if scale is not None else d_in ** -0.5
+    return box(normal_init(rng, (d_in, d_out), dtype, scale), in_axis, out_axis)
+
+
+def bias_param(d: int, dtype, axis: Optional[str]) -> Boxed:
+    return box(jnp.zeros((d,), dtype), axis)
+
+
+def scale_param(d: int, dtype, axis: Optional[str], value: float = 1.0) -> Boxed:
+    return box(jnp.full((d,), value, dtype), axis)
+
+
+def stacked_init(per_layer_init: Callable, n: int, rng) -> Any:
+    """vmap a per-layer init over ``n`` layers; prepend the "layers" axis."""
+    rngs = jax.random.split(rng, n)
+    stacked = jax.vmap(per_layer_init)(rngs)
+    return jax.tree.map(
+        lambda b: Boxed(b.value, ("layers",) + b.axes), stacked, is_leaf=is_boxed)
+
+
+def count_params(values_tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(values_tree))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

@@ -1,0 +1,124 @@
+"""Pure Mamba1 LM (falcon-mamba-7b). Attention-free.
+
+HCache applicability: no KV cache exists; restoration uses ``ssm-rescan``
+(per-layer state recompute from that layer's saved input hidden states) —
+layer-parallel and linear-time, see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.arch import ArchConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers.embedding import (embed_tokens, init_embedding,
+                                           logits as embed_logits)
+from repro.models.layers.mamba import Mamba1Hyper, apply_mamba1, init_mamba1
+from repro.models.layers.norm import apply_norm, init_norm
+from repro.models.module import stacked_init
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMHyper:
+    cfg: ArchConfig
+    rules: ShardingRules
+    model_axis: int = 1
+    dtype: Any = jnp.float32
+    remat: str = "full"
+
+    @functools.cached_property
+    def mamba(self) -> Mamba1Hyper:
+        c = self.cfg
+        return Mamba1Hyper(d_model=c.d_model, d_state=c.ssm_state,
+                           d_conv=c.ssm_conv, expand=c.ssm_expand)
+
+    @functools.cached_property
+    def lm(self) -> tfm.LMHyper:
+        return tfm.LMHyper(cfg=self.cfg, rules=self.rules,
+                           model_axis=self.model_axis, dtype=self.dtype,
+                           remat=self.remat)
+
+
+def _init_block(rng, h: SSMHyper) -> dict:
+    return {"ln": init_norm(h.cfg.norm, h.cfg.d_model, h.dtype),
+            "m": init_mamba1(rng, h.mamba, h.dtype)}
+
+
+def init_ssm_lm(rng, h: SSMHyper) -> dict:
+    c = h.cfg
+    re, rb = jax.random.split(rng)
+    return {
+        "embed": init_embedding(re, c.vocab_size, c.d_model, h.dtype,
+                                c.tie_embeddings),
+        "blocks": stacked_init(lambda r: _init_block(r, h), c.n_layers, rb),
+        "final_norm": init_norm(c.norm, c.d_model, h.dtype),
+    }
+
+
+def ssm_forward(params, tokens, h: SSMHyper, *, capture_hidden: bool = False,
+                emit_state: bool = False, final_logits_only: bool = False,
+                skip_logits: bool = False):
+    c = h.cfg
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
+                     d_model=c.d_model).astype(h.dtype)
+    x = constrain(x, h.rules, "batch", "seq", "d_model")
+
+    def body(x, bp):
+        hidden = x
+        normed = apply_norm(bp["ln"], x, c.norm, c.norm_eps)
+        out, (ncs, nss) = apply_mamba1(bp["m"], normed, h.mamba, h.rules)
+        x = x + out
+        return x, (hidden if capture_hidden else None,
+                   (ncs, nss) if emit_state else None)
+
+    body = tfm._remat_wrap(body, h.lm)
+    x, (hidden, states) = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    if final_logits_only:
+        x = x[:, -1:]
+    if skip_logits:
+        return {"final_x": x, "hidden": hidden, "states": states, "aux": 0.0}
+    lg = embed_logits(params["embed"], x, h.rules, true_vocab=c.vocab_size)
+    return {"logits": lg, "hidden": hidden, "states": states, "aux": 0.0}
+
+
+def ssm_decode_step(params, cache, tokens, h: SSMHyper):
+    """cache: dict(conv (L,B,W-1,I), ssm (L,B,I,N), lengths (B,))."""
+    c = h.cfg
+    x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
+                     d_model=c.d_model).astype(h.dtype)
+
+    def body(x, xs):
+        bp, cs, ss = xs
+        hidden = x
+        normed = apply_norm(bp["ln"], x, c.norm, c.norm_eps)
+        out, (ncs, nss) = apply_mamba1(bp["m"], normed, h.mamba, h.rules,
+                                       conv_state=cs, init_state=ss,
+                                       remat_chunks=False)
+        return x + out, (ncs, nss, hidden)
+
+    x, (nconv, nssm, hidden) = jax.lax.scan(body, x,
+                                            (params["blocks"], cache["conv"],
+                                             cache["ssm"]))
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    lg = embed_logits(params["embed"], x, h.rules, true_vocab=c.vocab_size)
+    return lg, {"conv": nconv, "ssm": nssm,
+                "lengths": cache["lengths"] + 1}, hidden
+
+
+def ssm_restore_states(params, hidden, h: SSMHyper):
+    """ssm-rescan restoration: (L,B,S,D) hidden -> per-layer final states."""
+    def one(bp, hl):
+        normed = apply_norm(bp["ln"], hl.astype(h.dtype), h.cfg.norm,
+                            h.cfg.norm_eps)
+        _, (ncs, nss) = apply_mamba1(bp["m"], normed, h.mamba, h.rules,
+                                     remat_chunks=False)
+        return ncs, nss
+
+    return jax.vmap(one)(params["blocks"], hidden)

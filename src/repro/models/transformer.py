@@ -1,0 +1,319 @@
+"""Decoder-only LM stack (dense / GQA / MoE / VLM) with scan-over-layers.
+
+Entry points (all pure functions over boxed-param values):
+
+  init_lm           -> boxed params
+  lm_forward        -> full-sequence forward (train / prefill), optionally
+                       capturing per-layer hidden states (HCache save path)
+                       and emitting stacked KV caches (prefill)
+  lm_decode_step    -> single-token continuous-batching decode step
+  lm_restore_kv     -> THE PAPER'S OP: stacked per-layer K,V from stacked
+                       saved hidden states (norm + projection + RoPE only)
+
+HCache definition: the saved "hidden state" of layer *i* is the residual
+stream INPUT to layer *i* (`H_L` in the paper). Restoration recomputes
+`K = W_k·RMSNorm(H)` — the norm is part of the (cheap) restoration compute,
+keeping restore == original bitwise (§3.1; the paper folds the norm into ε).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.arch import ArchConfig
+from repro.distributed.sharding import ShardingRules, constrain, pad_heads
+from repro.models.layers import attention as attn_lib
+from repro.models.layers.attention import AttnHyper
+from repro.models.layers.embedding import (embed_tokens, init_embedding,
+                                           logits as embed_logits, positional)
+from repro.models.layers.mlp import apply_mlp, init_mlp
+from repro.models.layers.moe import MoEHyper, apply_moe, init_moe
+from repro.models.layers.norm import apply_norm, init_norm
+from repro.models.module import stacked_init, split
+
+BIG_WINDOW = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class LMHyper:
+    cfg: ArchConfig
+    rules: ShardingRules
+    model_axis: int = 1
+    dtype: Any = jnp.float32
+    attn_chunk: int = 1024
+    remat: str = "full"              # none | full | dots
+    max_positions: int = 8192        # learned-pos archs only
+    n_vis: int = 0                   # VLM: patch positions at sequence head
+    tri_prefill: bool = False        # §Perf: triangular prefill schedule
+    moe_late_combine: bool = False   # §Perf: see layers/moe.py
+
+    @functools.cached_property
+    def attn(self) -> AttnHyper:
+        c = self.cfg
+        padded, _ = pad_heads(c.n_heads, c.n_kv_heads, self.model_axis)
+        return AttnHyper(
+            n_heads=c.n_heads, n_kv_heads=c.n_kv_heads, head_dim=c.head_dim_,
+            padded_heads=padded, qkv_bias=c.qkv_bias, use_rope=c.use_rope,
+            rope_theta=c.rope_theta, attn_softcap=c.attn_softcap,
+            chunk=self.attn_chunk)
+
+    @functools.cached_property
+    def moe(self) -> Optional[MoEHyper]:
+        c = self.cfg
+        if not c.n_experts:
+            return None
+        return MoEHyper(n_experts=c.n_experts, top_k=c.experts_per_token,
+                        d_model=c.d_model, d_ff=c.d_ff,
+                        activation=c.ffn_activation, glu=c.ffn_glu,
+                        late_combine=self.moe_late_combine)
+
+
+# ------------------------------------------------------------------- params
+def init_block(rng, h: LMHyper) -> dict:
+    c = h.cfg
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {
+        "ln1": init_norm(c.norm, c.d_model, h.dtype),
+        "attn": attn_lib.init_attention(r1, c.d_model, h.attn, h.dtype),
+        "ln2": init_norm(c.norm, c.d_model, h.dtype),
+    }
+    if h.moe is not None:
+        p["moe"] = init_moe(r2, h.moe, h.dtype)
+    else:
+        p["mlp"] = init_mlp(r3, c.d_model, c.d_ff, c.ffn_glu, h.dtype)
+    if c.post_attn_norm:
+        p["post_ln1"] = init_norm(c.norm, c.d_model, h.dtype)
+        p["post_ln2"] = init_norm(c.norm, c.d_model, h.dtype)
+    return p
+
+
+def init_lm(rng, h: LMHyper) -> dict:
+    c = h.cfg
+    re, rb = jax.random.split(rng)
+    learned_pos = not c.use_rope
+    params = {
+        "embed": init_embedding(re, c.vocab_size, c.d_model, h.dtype,
+                                c.tie_embeddings, h.max_positions,
+                                learned_pos),
+        "blocks": stacked_init(lambda r: init_block(r, h), c.n_layers, rb),
+        "final_norm": init_norm(c.norm, c.d_model, h.dtype),
+    }
+    return params
+
+
+def layer_windows(h: LMHyper) -> Optional[jnp.ndarray]:
+    """Per-layer attention window (gemma2 local/global); None if uniform."""
+    c = h.cfg
+    if not c.local_window:
+        return None
+    from repro.config.arch import AttnKind
+    kinds = c.attn_kinds()
+    return jnp.asarray([c.local_window if k == AttnKind.LOCAL else BIG_WINDOW
+                        for k in kinds], jnp.int32)
+
+
+# ----------------------------------------------------------------- block fns
+def _ffn(p, x, h: LMHyper):
+    if h.moe is not None:
+        out, probs = apply_moe(p["moe"], x, h.moe, h.rules)
+        # GShard load-balance aux: E * sum_e f_e * P_e
+        E = h.moe.n_experts
+        top1 = jnp.argmax(probs, axis=-1)
+        f = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+        P = jnp.mean(probs, axis=(0, 1))
+        aux = E * jnp.sum(f * P)
+        return out, aux
+    return apply_mlp(p["mlp"], x, h.cfg.ffn_activation, h.rules), 0.0
+
+
+def block_forward(p, x, h: LMHyper, *, positions, window,
+                  hist_kv=None, hist_len=None, emit_kv: bool):
+    """Full-sequence block. x: (B,S,D). Optional restored history KV
+    (B,Sh,Kv,hd) pair prepended to the attention context (HCache prefill).
+
+    Returns (x_out, aux, (k, v) or None, hidden_in)."""
+    c = h.cfg
+    hidden_in = x
+    normed = apply_norm(p["ln1"], x, c.norm, c.norm_eps)
+    q, k, v = attn_lib.project_qkv(p["attn"], normed, h.attn, h.rules,
+                                   positions)
+    if hist_kv is not None:
+        hk, hv = hist_kv
+        k_all = jnp.concatenate([hk, k], axis=1)
+        v_all = jnp.concatenate([hv, v], axis=1)
+        kv_len = None if hist_len is None else hist_len + x.shape[1]
+    else:
+        k_all, v_all, kv_len = k, v, None
+    w = None
+    if window is not None:
+        w = window if not isinstance(window, int) else jnp.asarray(window)
+    if h.tri_prefill and hist_kv is None and w is None:
+        attn_out = attn_lib.flash_attention_triangular(
+            q, k_all, v_all, h.attn, q_positions=positions, causal=True)
+    else:
+        attn_out = attn_lib.flash_attention_jnp(
+            q, k_all, v_all, h.attn, q_positions=positions, causal=True,
+            window=w, kv_len=kv_len)
+    attn_out = attn_lib.attn_output(p["attn"], attn_out, h.rules)
+    if c.post_attn_norm:
+        attn_out = apply_norm(p["post_ln1"], attn_out, c.norm, c.norm_eps)
+    x = x + attn_out
+    normed2 = apply_norm(p["ln2"], x, c.norm, c.norm_eps)
+    ff, aux = _ffn(p, normed2, h)
+    if c.post_attn_norm:
+        ff = apply_norm(p["post_ln2"], ff, c.norm, c.norm_eps)
+    x = x + ff
+    kv = (k, v) if emit_kv else None
+    return x, aux, kv, hidden_in
+
+
+def block_decode(p, x, h: LMHyper, *, k_cache, v_cache, lengths, window):
+    """Single-token block. x: (B,1,D); caches (B,Smax,Kv,hd); lengths (B,)
+    count tokens ALREADY in the cache (the new token is written at
+    ``lengths``). Returns (x_out, new_k_cache, new_v_cache, hidden_in)."""
+    c = h.cfg
+    hidden_in = x
+    positions = lengths[:, None]                       # (B,1)
+    normed = apply_norm(p["ln1"], x, c.norm, c.norm_eps)
+    q, k, v = attn_lib.project_qkv(p["attn"], normed, h.attn, h.rules,
+                                   positions)
+    B = x.shape[0]
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, lengths].set(k[:, 0], mode="drop")
+    v_cache = v_cache.at[bidx, lengths].set(v[:, 0], mode="drop")
+    k_cache = constrain(k_cache, h.rules, "batch", "kv_seq", "kv_heads",
+                        "head_dim")
+    v_cache = constrain(v_cache, h.rules, "batch", "kv_seq", "kv_heads",
+                        "head_dim")
+    w = None
+    if window is not None:
+        w = window if not isinstance(window, int) else jnp.asarray(window)
+    attn_out = attn_lib.decode_attention_jnp(
+        q, k_cache, v_cache, h.attn, kv_len=lengths + 1, window=w)
+    attn_out = attn_lib.attn_output(p["attn"], attn_out, h.rules)
+    if c.post_attn_norm:
+        attn_out = apply_norm(p["post_ln1"], attn_out, c.norm, c.norm_eps)
+    x = x + attn_out
+    normed2 = apply_norm(p["ln2"], x, c.norm, c.norm_eps)
+    ff, _ = _ffn(p, normed2, h)
+    if c.post_attn_norm:
+        ff = apply_norm(p["post_ln2"], ff, c.norm, c.norm_eps)
+    x = x + ff
+    return x, k_cache, v_cache, hidden_in
+
+
+def _remat_wrap(fn, h: LMHyper):
+    if h.remat == "none":
+        return fn
+    if h.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ------------------------------------------------------------ full forward
+def _embed_input(params, h: LMHyper, tokens, positions, patch_embeds=None):
+    c = h.cfg
+    x = embed_tokens(params["embed"], tokens, h.rules,
+                     scale=c.embedding_scale, d_model=c.d_model)
+    if not c.use_rope and "positions" in params["embed"]:
+        x = x + positional(params["embed"], positions).astype(x.dtype)
+    if patch_embeds is not None:
+        n_vis = patch_embeds.shape[1]
+        x = jnp.concatenate(
+            [patch_embeds.astype(x.dtype), x[:, n_vis:]], axis=1)
+    return x.astype(h.dtype)
+
+
+def lm_forward(params, tokens, h: LMHyper, *, positions=None,
+               patch_embeds=None, hist_kv=None, hist_len=None,
+               capture_hidden: bool = False, emit_kv: bool = False,
+               final_logits_only: bool = False, skip_logits: bool = False):
+    """Train / prefill forward.
+
+    tokens: (B,S) int32. hist_kv: optional restored-history KV caches,
+    stacked (L,B,Sh,Kv,hd) pair — the HCache prefill path.
+    Returns dict(logits, kv, hidden, aux)."""
+    c = h.cfg
+    B, S = tokens.shape
+    if positions is None:
+        base = 0 if hist_len is None else hist_len
+        positions = base + jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = _embed_input(params, h, tokens, positions, patch_embeds)
+    x = constrain(x, h.rules, "batch", "seq", "d_model")
+    windows = layer_windows(h)
+
+    def body(carry, xs):
+        x, aux = carry
+        (bp, win, hkv) = xs
+        x, a, kv, hidden = block_forward(
+            bp, x, h, positions=positions, window=win,
+            hist_kv=hkv, hist_len=hist_len, emit_kv=emit_kv)
+        if kv is not None:
+            kv = tuple(constrain(t, h.rules, "batch", "kv_seq", "kv_heads",
+                                 "head_dim") for t in kv)
+        ys = (kv, hidden if capture_hidden else None)
+        return (x, aux + a), ys
+
+    body = _remat_wrap(body, h)
+    xs = (params["blocks"], windows, hist_kv)
+    (x, aux), ys = jax.lax.scan(body, (x, 0.0), xs)
+    kv_stack, hidden_stack = ys
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    if final_logits_only:
+        x = x[:, -1:]
+    if skip_logits:     # training path: chunked vocab-parallel CE downstream
+        return {"final_x": x, "kv": kv_stack, "hidden": hidden_stack,
+                "aux": aux}
+    lg = embed_logits(params["embed"], x, h.rules, softcap=c.logit_softcap,
+                      true_vocab=c.vocab_size)
+    return {"logits": lg, "kv": kv_stack, "hidden": hidden_stack, "aux": aux}
+
+
+def lm_decode_step(params, cache, tokens, h: LMHyper):
+    """One continuous-batching decode step.
+
+    cache: dict(k (L,B,Smax,Kv,hd), v, lengths (B,)). tokens: (B,1).
+    Returns (logits (B,1,V), new cache)."""
+    c = h.cfg
+    lengths = cache["lengths"]
+    x = _embed_input(params, h, tokens, lengths[:, None])
+    x = constrain(x, h.rules, "batch", None, "d_model")
+    windows = layer_windows(h)
+
+    def body(x, xs):
+        bp, win, kc, vc = xs
+        x, nk, nv, hidden = block_decode(bp, x, h, k_cache=kc, v_cache=vc,
+                                         lengths=lengths, window=win)
+        return x, (nk, nv, hidden)
+
+    xs = (params["blocks"], windows, cache["k"], cache["v"])
+    x, (nk, nv, hidden) = jax.lax.scan(body, x, xs)
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    lg = embed_logits(params["embed"], x, h.rules, softcap=c.logit_softcap,
+                      true_vocab=c.vocab_size)
+    new_cache = {"k": nk, "v": nv, "lengths": lengths + 1}
+    return lg, new_cache, hidden
+
+
+# -------------------------------------------------------------- HCache op
+def lm_restore_kv(params, hidden, h: LMHyper, *, positions):
+    """Restore stacked KV caches from stacked saved hidden states.
+
+    hidden: (L, B, S, D) residual-stream inputs per layer (bf16 on the wire).
+    positions: (B, S). Returns (k, v): (L, B, S, Kv, hd) each — exactly what
+    the prefill with emit_kv=True would have produced for these layers."""
+    c = h.cfg
+
+    def one_layer(bp, hl):
+        normed = apply_norm(bp["ln1"], hl.astype(h.dtype), c.norm, c.norm_eps)
+        return attn_lib.restore_kv(
+            bp["attn"]["wk"], bp["attn"]["wv"],
+            bp["attn"].get("bk"), bp["attn"].get("bv"),
+            normed, h.attn, positions)
+
+    return jax.vmap(one_layer)(params["blocks"], hidden)

@@ -1,0 +1,6 @@
+from repro.serving.engine import EngineMetrics, InferenceEngine
+from repro.serving.request import Phase, Request, SequenceState
+from repro.serving.sampling import sample
+
+__all__ = ["EngineMetrics", "InferenceEngine", "Phase", "Request",
+           "SequenceState", "sample"]

@@ -1,0 +1,297 @@
+"""Inference engine: continuous batching with an HCache restoration phase.
+
+Request lifecycle (paper §5):
+
+    WAITING -> [RESTORING]   if the session has evicted state in the store,
+                             run the bubble-free restoration and place the
+                             rebuilt KV/states into the sequence's slot;
+            -> PREFILL       chunked prompt prefill (SplitFuse-style: at most
+                             ``prefill_chunk`` prompt tokens per engine step,
+                             so decode iterations stay interleaved);
+            -> DECODE        joins the continuous decode batch; every step
+                             streams the new token's hidden states to the
+                             two-stage saver;
+            -> DONE          on EOS/max-tokens: KV-layer tails + SSM states
+                             are dumped (``save_session_pause``) and the slot
+                             is freed — the session remains restorable.
+
+Crash recovery: a fresh engine over the same ChunkStore can resume any
+session (`recoverable_sessions`) — serving-side fault tolerance is HCache
+itself.
+
+Metrics per request: wall TTFT, simulated restoration time (hardware
+profile), TBT; engine-level counters for the benchmark harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hcache import HCacheManager
+from repro.core.pipeline import Timeline
+from repro.models.model import Model
+from repro.serving.request import Phase, Request, SequenceState
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    ttft_wall: List[float] = dataclasses.field(default_factory=list)
+    ttft_sim: List[float] = dataclasses.field(default_factory=list)
+    tbt_wall: List[float] = dataclasses.field(default_factory=list)
+    restored_tokens: int = 0
+    decode_steps: int = 0
+    snapshot_cost: float = 0.0
+
+
+class InferenceEngine:
+    def __init__(self, model: Model, params, manager: HCacheManager, *,
+                 max_batch: int = 4, max_seq: int = 512,
+                 prefill_chunk: int = 128, save_hidden: bool = True,
+                 temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.mgr = manager
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
+        self.save_hidden = save_hidden
+        self.temperature = temperature
+
+        self.cache = model.init_cache(max_batch, max_seq)
+        self.queue: deque = deque()
+        self.slots: List[Optional[SequenceState]] = [None] * max_batch
+        self.sessions: Dict[str, SequenceState] = {}
+        self.metrics = EngineMetrics()
+        self.step_count = 0
+        self._decode = jax.jit(model.decode_step_full)
+
+    # ----------------------------------------------------------- submission
+    def submit(self, request: Request) -> SequenceState:
+        seq = SequenceState(request=request)
+        seq.request.arrival_time = time.perf_counter()
+        self.queue.append(seq)
+        return seq
+
+    def recoverable_sessions(self) -> List[str]:
+        return self.mgr.sessions()
+
+    # ------------------------------------------------------------ lifecycle
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            seq = self.queue.popleft()
+            seq.slot = slot
+            self.slots[slot] = seq
+            self.sessions[seq.request.session_id] = seq
+            if self.mgr.store.get_manifest(seq.request.session_id):
+                seq.phase = Phase.RESTORING
+                self._restore(seq)
+            else:
+                seq.phase = Phase.PREFILL
+            self._prefill_step(seq)
+
+    # ----------------------------------------------------------- restoration
+    def _restore(self, seq: SequenceState) -> None:
+        res = self.mgr.restore(self.params, seq.request.session_id)
+        seq.history_len = res.n_tokens
+        seq.restore_sim = res.timeline.makespan
+        seq.restore_wall = res.wall_time
+        self.metrics.restored_tokens += res.n_tokens
+        self._place_cache(seq.slot, res.cache, res.n_tokens)
+        seq.phase = Phase.PREFILL
+
+    def _place_cache(self, slot: int, piece: dict, n: int) -> None:
+        """Copy a restored (B=1) cache into the batch slot."""
+        for key, val in piece.items():
+            if key == "lengths":
+                self.cache["lengths"] = self.cache["lengths"].at[slot].set(n)
+                continue
+            buf = self.cache.get(key)
+            if buf is None:
+                continue
+            val = jnp.asarray(val, buf.dtype)
+            if key in ("k", "v", "attn_k", "attn_v", "self_k", "self_v"):
+                self.cache[key] = jax.lax.dynamic_update_slice(
+                    buf, val, (0, slot, 0) + (0,) * (buf.ndim - 3))
+            elif key in ("conv", "ssm"):
+                idx = (0,) * (buf.ndim - val.ndim + 1)
+                bdim = buf.ndim - val.ndim + 1  # batch dim position
+                self.cache[key] = jax.lax.dynamic_update_slice(
+                    buf, val, (0,) * (bdim - 1) + (slot,)
+                    + (0,) * (buf.ndim - bdim))
+            elif key in ("cross_k", "cross_v"):
+                self.cache[key] = jax.lax.dynamic_update_slice(
+                    buf, val, (0, slot, 0, 0, 0))
+            elif key == "enc_len":
+                self.cache[key] = val
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_step(self, seq: SequenceState) -> None:
+        """Process up to ``prefill_chunk`` prompt tokens (SplitFuse)."""
+        if seq.phase != Phase.PREFILL:
+            return
+        r = seq.request
+        remaining = r.prompt[seq.prefill_done:]
+        if len(remaining) == 0:
+            seq.phase = Phase.DECODE
+            return
+        chunkable = (self.model.kind == "lm")
+        chunk = remaining[:self.prefill_chunk] if chunkable else remaining
+        hist = seq.history_len + seq.prefill_done
+        batch = {"tokens": jnp.asarray(chunk, jnp.int32)[None]}
+        if self.model.kind == "encdec":
+            raise NotImplementedError(
+                "the continuous-batching engine serves LM-family models; "
+                "enc-dec (whisper) serving uses Model.prefill/decode_step "
+                "directly (see tests/test_models.py::"
+                "test_decode_matches_forward[whisper-medium])")
+        hist_kv = (self._slot_hist_kv(seq.slot, hist)
+                   if (chunkable and hist) else None)
+        out = self.model.prefill(
+            self.params, batch, capture_hidden=self.save_hidden,
+            hist_kv=hist_kv, hist_len=hist if hist_kv is not None else None)
+        self._absorb_prefill(seq, out, chunk, hist)
+        seq.prefill_done += len(chunk)
+        if seq.prefill_done >= len(r.prompt):
+            seq.phase = Phase.DECODE
+            lg = out["logits"]
+            tok = int(sample(lg, temperature=self.temperature)[0])
+            self._emit_token(seq, tok)
+
+    def _slot_hist_kv(self, slot: int, hist: int):
+        """History KV sliced to its true length (hist is concrete, so the
+        concatenated positions in the attention mask line up)."""
+        k = self.cache["k"][:, slot:slot + 1, :hist]
+        v = self.cache["v"][:, slot:slot + 1, :hist]
+        return (k, v)
+
+    def _absorb_prefill(self, seq, out, chunk, hist) -> None:
+        """Write prefill KV/states into the slot + persist via HCache."""
+        slot, n = seq.slot, len(chunk)
+        if self.model.kind == "lm":
+            k, v = out["kv"]
+            self.cache["k"] = jax.lax.dynamic_update_slice(
+                self.cache["k"], k, (0, slot, hist, 0, 0))
+            self.cache["v"] = jax.lax.dynamic_update_slice(
+                self.cache["v"], v, (0, slot, hist, 0, 0))
+        elif self.model.kind == "hybrid":
+            k, v = out["kv"]
+            self.cache["attn_k"] = jax.lax.dynamic_update_slice(
+                self.cache["attn_k"], k, (0, slot, hist, 0, 0))
+            self.cache["attn_v"] = jax.lax.dynamic_update_slice(
+                self.cache["attn_v"], v, (0, slot, hist, 0, 0))
+            conv, ssmst = out["mamba_states"]
+            self._place_cache(slot, {"conv": conv, "ssm": ssmst}, 0)
+        elif self.model.kind == "ssm":
+            conv, ssmst = out["states"]
+            self._place_cache(slot, {"conv": conv, "ssm": ssmst}, 0)
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(hist + n)
+        if self.save_hidden:
+            self.mgr.save_prefill(seq.request.session_id, np.asarray(chunk),
+                                  out, start=hist)
+
+    # --------------------------------------------------------------- decode
+    def _emit_token(self, seq: SequenceState, tok: int) -> None:
+        seq.generated.append(tok)
+        if seq.first_token_step is None:
+            seq.first_token_step = self.step_count
+            seq.ttft_wall = time.perf_counter() - seq.request.arrival_time
+            self.metrics.ttft_wall.append(seq.ttft_wall)
+            self.metrics.ttft_sim.append(seq.restore_sim)
+
+    def _decode_batch(self) -> None:
+        active = [s for s in self.slots
+                  if s is not None and s.phase == Phase.DECODE
+                  and not s.finished()]
+        if not active:
+            return
+        t0 = time.perf_counter()
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for s in self.slots:
+            if s is not None and s.phase == Phase.DECODE and s.generated:
+                tokens[s.slot, 0] = s.generated[-1]
+        lg, self.cache, hidden = self._decode(
+            self.params, self.cache, jnp.asarray(tokens))
+        # inactive slots advanced their length too — undo
+        mask = np.zeros((self.max_batch,), bool)
+        for s in active:
+            mask[s.slot] = True
+        lengths = np.array(self.cache["lengths"], copy=True)
+        lengths[~mask] -= 1
+        self.cache["lengths"] = jnp.asarray(lengths)
+        toks = np.asarray(sample(lg, temperature=self.temperature))
+        if self.save_hidden and hidden is not None:
+            sess = [s.request.session_id if (self.slots[i] is not None
+                    and self.slots[i].phase == Phase.DECODE) else None
+                    for i, s in enumerate(self.slots)]
+            h = hidden if not isinstance(hidden, tuple) else hidden[1]
+            self.metrics.snapshot_cost += self.mgr.save_decode_hidden(
+                sess, np.asarray(h), lengths - 1)
+        dt = time.perf_counter() - t0
+        for s in active:
+            self._emit_token(s, int(toks[s.slot]))
+            self.metrics.tbt_wall.append(dt)
+        self.metrics.decode_steps += 1
+
+    def _retire(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s is None or not s.finished():
+                continue
+            sid = s.request.session_id
+            n = s.total_len
+            cache_slice = {k: (v[:, i:i + 1] if k in
+                               ("k", "v", "attn_k", "attn_v") else v)
+                           for k, v in self.cache.items()
+                           if k not in ("lengths", "enc_len")}
+            if self.model.kind in ("ssm", "hybrid"):
+                cache_slice["conv"] = self._slot_state(self.cache["conv"], i)
+                cache_slice["ssm"] = self._slot_state(self.cache["ssm"], i)
+            tail = np.asarray(s.generated[:-1], np.int32)
+            if self.save_hidden:
+                self.mgr.saver.drain()
+                self.mgr.save_session_pause(sid, cache_slice, n - 1,
+                                            tokens_tail=tail)
+            s.phase = Phase.DONE
+            self.slots[i] = None
+
+    def _slot_state(self, buf, slot):
+        """Extract the batch=1 slice of a (…, B, …) state tensor."""
+        if self.model.kind == "ssm":
+            return buf[:, slot:slot + 1]
+        return buf[:, :, slot:slot + 1]
+
+    # ------------------------------------------------------------ main loop
+    def step(self) -> None:
+        self.step_count += 1
+        self._admit()
+        for s in list(self.slots):
+            if s is not None and s.phase == Phase.PREFILL:
+                self._prefill_step(s)
+        self._decode_batch()
+        self._retire()
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        self.mgr.saver.drain()
+
+    # --------------------------------------------------------------- output
+    def result(self, session_id: str) -> List[int]:
+        return list(self.sessions[session_id].generated)

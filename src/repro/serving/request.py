@@ -1,0 +1,55 @@
+"""Request / sequence bookkeeping for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+class Phase(str, enum.Enum):
+    WAITING = "waiting"          # queued, not yet admitted
+    RESTORING = "restoring"      # HCache restoration phase (paper §5)
+    PREFILL = "prefill"          # chunked prompt prefill
+    DECODE = "decode"            # in the continuous decode batch
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    session_id: str
+    prompt: np.ndarray                       # (n,) int32 new prompt tokens
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+    arrival_time: float = 0.0
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+
+@dataclasses.dataclass
+class SequenceState:
+    request: Request
+    phase: Phase = Phase.WAITING
+    slot: int = -1                           # decode-batch slot
+    history_len: int = 0                     # restored tokens
+    prefill_done: int = 0                    # prompt tokens processed
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # metrics
+    ttft_wall: Optional[float] = None
+    restore_sim: float = 0.0                 # simulated restoration seconds
+    restore_wall: float = 0.0
+    first_token_step: Optional[int] = None
+
+    @property
+    def total_len(self) -> int:
+        return (self.history_len + self.prefill_done + len(self.generated))
+
+    def finished(self) -> bool:
+        r = self.request
+        if len(self.generated) >= r.max_new_tokens:
+            return True
+        return bool(self.generated and r.eos_token is not None
+                    and self.generated[-1] == r.eos_token)

@@ -1,0 +1,15 @@
+"""Token sampling (greedy / temperature)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, *, temperature: float = 0.0, rng=None):
+    """logits: (B, 1, V) -> (B,) int32."""
+    lg = logits[:, -1, :]
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    return jax.random.categorical(rng, lg / temperature, axis=-1).astype(
+        jnp.int32)

@@ -1,0 +1,173 @@
+"""Storage backends for the chunk store.
+
+Three tiers, all exposing the same byte-level API:
+
+  DRAMBackend      — host memory (paper's cloud-server fallback).
+  SimulatedSSD     — host memory + a bandwidth/latency model of one NVMe
+                     device (PM9A3 by default). Reads/writes advance a
+                     device-local clock so benchmarks measure contention and
+                     striping gains without real disks.
+  FileBackend      — real files (persistence across engine restarts —
+                     the serving fault-tolerance path).
+
+A ``StorageArray`` is N devices addressed round-robin by the chunk store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config.hardware import SSD_READ_BW, SSD_WRITE_BW
+
+
+class Backend:
+    """Byte-addressable key-value device."""
+
+    def write(self, key: str, data: np.ndarray) -> float:
+        raise NotImplementedError
+
+    def read(self, key: str) -> np.ndarray:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def contains(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def keys(self) -> List[str]:
+        raise NotImplementedError
+
+    @property
+    def bytes_used(self) -> int:
+        raise NotImplementedError
+
+
+class DRAMBackend(Backend):
+    def __init__(self):
+        self._store: Dict[str, np.ndarray] = {}
+        self._lock = threading.Lock()
+
+    def write(self, key, data):
+        with self._lock:
+            self._store[key] = np.array(data, copy=True)
+        return 0.0
+
+    def read(self, key):
+        with self._lock:
+            return self._store[key]
+
+    def delete(self, key):
+        with self._lock:
+            self._store.pop(key, None)
+
+    def contains(self, key):
+        return key in self._store
+
+    def keys(self):
+        with self._lock:
+            return list(self._store)
+
+    @property
+    def bytes_used(self):
+        with self._lock:
+            return sum(v.nbytes for v in self._store.values())
+
+
+@dataclasses.dataclass
+class SimClock:
+    """Per-device virtual clock: busy-until timestamps for read & write."""
+
+    read_busy_until: float = 0.0
+    write_busy_until: float = 0.0
+
+
+class SimulatedSSD(DRAMBackend):
+    """DRAM-backed with an NVMe timing model (seq BW + per-IO latency)."""
+
+    def __init__(self, read_bw: float = SSD_READ_BW,
+                 write_bw: float = SSD_WRITE_BW, io_latency: float = 80e-6):
+        super().__init__()
+        self.read_bw = read_bw
+        self.write_bw = write_bw
+        self.io_latency = io_latency
+        self.clock = SimClock()
+        self.now = 0.0               # external virtual time (set by the store)
+        self.read_time_total = 0.0
+        self.write_time_total = 0.0
+
+    def write(self, key, data):
+        super().write(key, data)
+        dur = self.io_latency + data.nbytes / self.write_bw
+        start = max(self.now, self.clock.write_busy_until)
+        self.clock.write_busy_until = start + dur
+        self.write_time_total += dur
+        return self.clock.write_busy_until
+
+    def read(self, key):
+        data = super().read(key)
+        dur = self.io_latency + data.nbytes / self.read_bw
+        start = max(self.now, self.clock.read_busy_until)
+        self.clock.read_busy_until = start + dur
+        self.read_time_total += dur
+        return data
+
+    def read_completion(self) -> float:
+        return self.clock.read_busy_until
+
+
+class FileBackend(Backend):
+    """npy files under a directory — survives process restarts."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key.replace("/", "__") + ".npy")
+
+    def write(self, key, data):
+        tmp = self._path(key) + ".tmp"
+        with open(tmp, "wb") as f:               # np.save would append .npy
+            np.save(f, data)
+        os.replace(tmp, self._path(key))         # atomic commit
+        return 0.0
+
+    def read(self, key):
+        return np.load(self._path(key))
+
+    def delete(self, key):
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def contains(self, key):
+        return os.path.exists(self._path(key))
+
+    def keys(self):
+        return [f[:-4].replace("__", "/") for f in os.listdir(self.root)
+                if f.endswith(".npy")]
+
+    @property
+    def bytes_used(self):
+        return sum(os.path.getsize(os.path.join(self.root, f))
+                   for f in os.listdir(self.root))
+
+
+def make_array(kind: str, n_devices: int, root: Optional[str] = None
+               ) -> List[Backend]:
+    if kind == "dram":
+        return [DRAMBackend() for _ in range(n_devices)]
+    if kind == "ssd":
+        return [SimulatedSSD() for _ in range(n_devices)]
+    if kind == "file":
+        assert root is not None
+        return [FileBackend(os.path.join(root, f"dev{i}"))
+                for i in range(n_devices)]
+    raise ValueError(kind)

@@ -1,0 +1,197 @@
+"""Chunk-based storage manager (paper §4.2).
+
+Layout problem: hidden states are *generated* layer-before-token (one layer
+of the whole batch at a time, autoregressively growing in tokens) but
+*restored* token-before-layer (all tokens of one layer as a batch). The
+store therefore:
+
+  * keys data by (session, stream, layer, chunk): a chunk holds
+    ``chunk_tokens`` consecutive tokens of one layer — the restoration unit;
+  * distributes the chunks of a layer **round-robin across devices** so a
+    layer read aggregates the bandwidth of all devices (paper: multiple
+    SSDs; here: backend array, possibly simulated);
+  * never reserves a layer's worth of contiguous space (output length is
+    unpredictable — chunks allocate incrementally, no internal
+    fragmentation beyond the final partial chunk).
+
+Chunk size is 128 tokens on TPU (MXU/lane alignment; the paper uses 64 on
+GPU — see DESIGN.md §2). Partial chunks live in a staging dict until full
+or flushed.
+
+Streams: "h" (hidden states), "kv" (offloaded KV layers), "tok" (token
+ids), "state" (SSM recurrent states). A JSON manifest per session makes the
+store self-describing — the serving engine's crash-recovery path rebuilds
+sessions from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config.hardware import TPU_CHUNK_TOKENS
+from repro.storage.backend import Backend, SimulatedSSD
+
+
+def _key(session: str, stream: str, layer: int, chunk: int) -> str:
+    return f"{session}/{stream}/L{layer}/C{chunk}"
+
+
+def _meta_key(session: str) -> str:
+    return f"{session}/meta/L0/C0"
+
+
+@dataclasses.dataclass
+class _Partial:
+    start_token: int
+    rows: List[np.ndarray]
+
+    @property
+    def n(self) -> int:
+        return sum(r.shape[0] for r in self.rows)
+
+
+class ChunkStore:
+    """Round-robin chunked store over a backend array."""
+
+    def __init__(self, devices: Sequence[Backend],
+                 chunk_tokens: int = TPU_CHUNK_TOKENS):
+        self.devices = list(devices)
+        self.chunk_tokens = chunk_tokens
+        self._partials: Dict[Tuple[str, str, int], _Partial] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- placement
+    def _device_for(self, layer: int, chunk: int) -> Backend:
+        return self.devices[(layer + chunk) % len(self.devices)]
+
+    # ----------------------------------------------------------------- write
+    def append_tokens(self, session: str, stream: str, layer: int,
+                      start_token: int, data: np.ndarray) -> None:
+        """Append ``data`` (n_tokens, width) for one layer starting at
+        ``start_token``; fills chunks and flushes the complete ones."""
+        C = self.chunk_tokens
+        with self._lock:
+            key = (session, stream, layer)
+            part = self._partials.get(key)
+            if part is None:
+                part = _Partial(start_token - start_token % C, [])
+                pad = start_token - part.start_token
+                if pad:
+                    # resuming mid-chunk (multi-round session): recover the
+                    # previously-flushed partial chunk as the prefix
+                    ci = part.start_token // C
+                    dev = self._device_for(layer, ci)
+                    kstr = _key(session, stream, layer, ci)
+                    if dev.contains(kstr):
+                        prev = np.asarray(dev.read(kstr))[:pad]
+                    else:
+                        prev = np.zeros((0,) + data.shape[1:], data.dtype)
+                    if prev.shape[0] < pad:
+                        prev = np.concatenate(
+                            [prev, np.zeros((pad - prev.shape[0],)
+                                            + data.shape[1:], data.dtype)])
+                    part.rows.append(prev)
+                self._partials[key] = part
+            part.rows.append(np.asarray(data))
+            while part.n >= C:
+                block = np.concatenate(part.rows, axis=0)
+                chunk_idx = part.start_token // C
+                self._device_for(layer, chunk_idx).write(
+                    _key(session, stream, layer, chunk_idx), block[:C])
+                part.start_token += C
+                part.rows = [block[C:]] if block.shape[0] > C else []
+
+    def flush(self, session: str) -> None:
+        """Persist all partial chunks of a session (padded to chunk size is
+        NOT needed — partial chunks are stored at their true length)."""
+        with self._lock:
+            for (s, stream, layer), part in list(self._partials.items()):
+                if s != session or part.n == 0:
+                    continue
+                block = np.concatenate(part.rows, axis=0)
+                chunk_idx = part.start_token // self.chunk_tokens
+                self._device_for(layer, chunk_idx).write(
+                    _key(session, stream, layer, chunk_idx), block)
+                del self._partials[(s, stream, layer)]
+
+    def put_blob(self, session: str, stream: str, layer: int,
+                 data: np.ndarray) -> None:
+        """Whole-object write (SSM states, token ids)."""
+        self._device_for(layer, 0).write(_key(session, stream, layer, 0),
+                                         np.asarray(data))
+
+    def get_blob(self, session: str, stream: str, layer: int) -> np.ndarray:
+        return self._device_for(layer, 0).read(_key(session, stream, layer, 0))
+
+    # ------------------------------------------------------------------ read
+    def read_layer(self, session: str, stream: str, layer: int,
+                   n_tokens: int) -> np.ndarray:
+        """Restoration read: all chunks of one layer, token order.
+
+        With SimulatedSSD devices the per-device clocks advance in parallel
+        (round-robin striping aggregates bandwidth); completion time is
+        queried via ``read_completion``."""
+        C = self.chunk_tokens
+        n_chunks = (n_tokens + C - 1) // C
+        parts = []
+        for ci in range(n_chunks):
+            parts.append(self._device_for(layer, ci).read(
+                _key(session, stream, layer, ci)))
+        out = np.concatenate(parts, axis=0)
+        return out[:n_tokens]
+
+    def layer_available(self, session: str, stream: str, layer: int) -> bool:
+        return self._device_for(layer, 0).contains(
+            _key(session, stream, layer, 0)) or (
+            (session, stream, layer) in self._partials)
+
+    # ------------------------------------------------------------- manifest
+    def put_manifest(self, session: str, manifest: dict) -> None:
+        raw = np.frombuffer(json.dumps(manifest).encode(), dtype=np.uint8)
+        self.devices[0].write(_meta_key(session), raw.copy())
+
+    def get_manifest(self, session: str) -> Optional[dict]:
+        if not self.devices[0].contains(_meta_key(session)):
+            return None
+        raw = self.devices[0].read(_meta_key(session))
+        return json.loads(raw.tobytes().decode())
+
+    def sessions(self) -> List[str]:
+        out = set()
+        for d in self.devices:
+            for k in d.keys():
+                if "/meta/" in k:
+                    out.add(k.split("/")[0])
+        return sorted(out)
+
+    # -------------------------------------------------------------- eviction
+    def drop_session(self, session: str) -> None:
+        with self._lock:
+            for key in list(self._partials):
+                if key[0] == session:
+                    del self._partials[key]
+        for d in self.devices:
+            for k in d.keys():
+                if k.startswith(session + "/"):
+                    d.delete(k)
+
+    # -------------------------------------------------------------- accounting
+    @property
+    def bytes_used(self) -> int:
+        return sum(d.bytes_used for d in self.devices)
+
+    def sync_clocks(self, now: float) -> None:
+        for d in self.devices:
+            if isinstance(d, SimulatedSSD):
+                d.now = now
+
+    def read_completion(self) -> float:
+        done = 0.0
+        for d in self.devices:
+            if isinstance(d, SimulatedSSD):
+                done = max(done, d.read_completion())
+        return done

@@ -1,0 +1,4 @@
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, batch_at, leval_trace, sharegpt_trace
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.train_step import Trainer, chunked_ce_loss

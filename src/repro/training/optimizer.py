@@ -1,0 +1,113 @@
+"""AdamW in pure JAX with ZeRO-1 sharding metadata.
+
+The container has no optax; this is a complete, production-shaped AdamW:
+global-norm clipping, decoupled weight decay, bias correction, and an
+optional bf16 error-feedback compensation buffer (gradient "compression":
+the backward all-reduces run in the bf16 compute dtype — half the DP
+collective bytes — and the feedback buffer folds the quantization error
+into the next step, 1-bit-Adam style but at 16 bits).
+
+ZeRO-1: optimizer moments (and the fp32 master params) are sharded over the
+data axis on top of the model-parallel sharding — `opt_axes` rewrites each
+parameter's logical axes so the largest divisible unsharded dim maps to
+"opt_fsdp" (resolved to the data axis by the sharding rules). Required for
+grok-1-314b: 12 bytes/param of optimizer state fits 256 chips only when
+data-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    error_feedback: bool = False
+
+
+def init_opt_state(params, *, error_feedback: bool = False) -> dict:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    state = {"m": zeros(params), "v": zeros(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if error_feedback:
+        state["ef"] = zeros(params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig
+                 ) -> Tuple[Any, dict, dict]:
+    """params/grads fp32 trees -> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    if cfg.error_feedback:
+        grads = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, state["ef"])
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p - cfg.lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                              + cfg.weight_decay * p)
+        return new_p, m, v
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tree.unflatten([o[0] for o in out])
+    new_state = {"m": tree.unflatten([o[1] for o in out]),
+                 "v": tree.unflatten([o[2] for o in out]),
+                 "step": step}
+    if cfg.error_feedback:
+        # error feedback vs the bf16-quantized gradient actually applied
+        def ef(g):
+            return (g - g.astype(jnp.bfloat16).astype(jnp.float32))
+        new_state["ef"] = jax.tree.map(ef, grads)
+    return new_params, new_state, {"grad_norm": gnorm}
+
+
+# ------------------------------------------------------------ ZeRO-1 sharding
+def opt_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             data_size: int) -> Tuple[Optional[str], ...]:
+    """Rewrite a param's logical axes for optimizer/master storage: the
+    largest unsharded, divisible dim becomes "opt_fsdp" (ZeRO-1)."""
+    best, best_dim = None, 0
+    for i, (ax, d) in enumerate(zip(axes, shape)):
+        if ax is None and d % data_size == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is None:
+        return axes
+    new = list(axes)
+    new[best] = "opt_fsdp"
+    return tuple(new)
+
+
+def opt_axes_tree(axes_tree, shapes_tree, data_size: int):
+    return jax.tree.map(
+        lambda a, s: opt_axes(a, s.shape, data_size), axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,107 @@
+"""Train step: mixed precision, chunked vocab-parallel cross-entropy,
+ZeRO-1 resharding, remat — the function the dry-run lowers for train_4k.
+
+Structure (GSPMD handles every collective):
+
+  master params: fp32, sharded (model × data) via ``opt_axes``   [ZeRO-1/3]
+  fwd/bwd:       bf16 cast + constraint to model-only specs      [all-gather]
+  grads:         flow back onto the master sharding              [reduce-scatter]
+  loss:          scan over sequence chunks; per-chunk logits are
+                 vocab-sharded and never materialized for the full sequence
+                 (gemma2: 1M tokens × 256k vocab would be 0.5 TB).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers.embedding import logits as embed_logits
+from repro.models.model import Model
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      init_opt_state, opt_axes_tree)
+
+
+def chunked_ce_loss(embed_params, final_x, targets, rules: ShardingRules, *,
+                    softcap: Optional[float], true_vocab: Optional[int] = None,
+                    n_chunks: int = 8):
+    """Mean CE over (B,S) targets from final hidden states (B,S,D).
+
+    The per-chunk function is rematerialized: backward recomputes each
+    chunk's logits instead of keeping (B, S, V) alive."""
+    B, S, D = final_x.shape
+    while S % n_chunks:
+        n_chunks -= 1
+    C = S // n_chunks
+    xc = final_x.reshape(B, n_chunks, C, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n_chunks, C).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        x, t = xs
+        lg = embed_logits(embed_params, x, rules, softcap=softcap,
+                          true_vocab=true_vocab)
+        lg = lg.astype(jnp.float32)
+        m = jax.lax.stop_gradient(lg.max(axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+        label_lg = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - label_lg), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xc, tc))
+    return total / (B * S)
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Builds the jit-able train_step for one model + mesh."""
+
+    model: Model
+    rules: ShardingRules
+    opt: AdamWConfig = AdamWConfig()
+    loss_chunks: int = 8
+    aux_weight: float = 0.01          # MoE load-balance loss weight
+
+    def init_state(self, rng) -> Tuple[dict, Any]:
+        """Returns (state, logical axes tree for sharding resolution)."""
+        from repro.models.module import split
+        boxed = self.model.init(rng)
+        values, axes = split(boxed)
+        params = jax.tree.map(lambda x: x.astype(jnp.float32), values)
+        state = {"params": params,
+                 "opt": init_opt_state(params,
+                                       error_feedback=self.opt.error_feedback)}
+        return state, axes
+
+    def state_axes(self, axes, state, data_size: int = 1):
+        """Logical axes for every leaf of the train state (ZeRO-1)."""
+        shapes = state["params"]
+        p_axes = opt_axes_tree(axes, shapes, data_size)
+        opt_state_axes = {"m": p_axes, "v": p_axes, "step": ()}
+        if "ef" in state["opt"]:
+            opt_state_axes["ef"] = p_axes
+        return {"params": p_axes, "opt": opt_state_axes}
+
+    def loss_fn(self, params_f32, batch) -> Tuple[jnp.ndarray, Dict]:
+        compute = jax.tree.map(
+            lambda x: x.astype(self.model.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params_f32)
+        out = self.model.forward(compute, batch, skip_logits=True)
+        loss = chunked_ce_loss(
+            compute["embed"], out["final_x"], batch["targets"], self.rules,
+            softcap=self.model.cfg.logit_softcap,
+            true_vocab=self.model.cfg.vocab_size, n_chunks=self.loss_chunks)
+        aux = out.get("aux", 0.0)
+        total = loss + self.aux_weight * aux
+        return total, {"ce": loss, "aux": aux}
+
+    def train_step(self, state: dict, batch: dict) -> Tuple[dict, Dict]:
+        (loss, parts), grads = jax.value_and_grad(
+            self.loss_fn, has_aux=True)(state["params"], batch)
+        new_params, new_opt, om = adamw_update(state["params"], grads,
+                                               state["opt"], self.opt)
+        metrics = {"loss": loss, **parts, **om}
+        return {"params": new_params, "opt": new_opt}, metrics

@@ -1,0 +1,20 @@
+import jax
+import pytest
+
+from repro.distributed.sharding import default_rules
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def rules(mesh):
+    return default_rules(mesh)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,139 @@
+"""HCache core correctness: restoration must reproduce the exact
+accelerator state the prefill produced (the paper's lossless claim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.arch import reduced_for_smoke
+from repro.config.hardware import PAPER_A100
+from repro.configs import get_arch
+from repro.core.hcache import HCacheManager
+from repro.models import Model
+from repro.models.module import split
+from repro.storage import ChunkStore, make_array
+
+B, S = 1, 40
+
+
+def build(arch, rules, override=None, compress="none"):
+    cfg = reduced_for_smoke(get_arch(arch))
+    model = Model(cfg, rules=rules, model_axis=1, dtype=jnp.float32,
+                  remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override=override, compress=compress)
+    return cfg, model, params, mgr
+
+
+def prefill_and_save(cfg, model, params, mgr, key=1):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(jax.random.PRNGKey(2),
+                                            (B, 24, cfg.d_model)) * 0.1
+    pre = model.prefill(params, batch, capture_hidden=True)
+    mgr.save_prefill("sess", np.asarray(toks[0]), pre)
+    return toks, pre
+
+
+def test_restore_equals_prefill_kv_exact(rules):
+    """K,V restored from hidden states == prefill K,V (paper's core op)."""
+    cfg, model, params, mgr = build("llama2-7b", rules, override="hidden")
+    toks, pre = prefill_and_save(cfg, model, params, mgr)
+    res = mgr.restore(params, "sess")
+    # fp16 storage round-trip is the only loss source
+    np.testing.assert_allclose(np.asarray(res.cache["k"]),
+                               np.asarray(pre["kv"][0]), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(res.cache["v"]),
+                               np.asarray(pre["kv"][1]), atol=2e-3)
+
+
+@pytest.mark.parametrize("override", ["hidden", "kv", None])
+@pytest.mark.parametrize("arch", ["qwen2-7b", "llama2-7b", "zamba2-2.7b",
+                                  "whisper-medium", "falcon-mamba-7b",
+                                  "gemma2-9b", "internvl2-26b"])
+def test_restore_then_decode_matches_ground_truth(arch, override, rules):
+    cfg, model, params, mgr = build(arch, rules, override=override)
+    toks, pre = prefill_and_save(cfg, model, params, mgr)
+    res = mgr.restore(params, "sess")
+    nt = jnp.argmax(pre["logits"][:, -1], -1).astype(jnp.int32)[:, None]
+    lg_r, _ = model.decode_step(params, _pad(model, res.cache), nt)
+    lg_g, _ = model.decode_step(params, _gt_cache(model, pre), nt)
+    err = float(jnp.abs(lg_r - lg_g).max())
+    # tolerance: the only loss source is the fp16 hidden-state storage
+    # round-trip; gemma2's sqrt(d)-scaled embeddings push |hidden|≈32, so
+    # its quantization error lands at ~2e-3 on the logits (measured)
+    assert err < 5e-3, f"{arch}/{override}: {err}"
+
+
+def test_int8_compression_bounded_error(rules):
+    """Beyond-paper: int8 hidden-state storage halves IO again at small,
+    bounded restoration error."""
+    cfg, model, params, mgr = build("llama2-7b", rules, override="hidden",
+                                    compress="int8")
+    toks, pre = prefill_and_save(cfg, model, params, mgr)
+    res = mgr.restore(params, "sess")
+    k_err = np.abs(np.asarray(res.cache["k"])
+                   - np.asarray(pre["kv"][0]))
+    scale = np.abs(np.asarray(pre["kv"][0])).max()
+    assert k_err.max() / scale < 0.05
+    # and it actually stores ~half the bytes of fp16
+    h_bytes = sum(d.bytes_used for d in mgr.store.devices)
+    mgr2 = build("llama2-7b", rules, override="hidden")[3]
+    cfg2, model2, params2 = cfg, model, params
+    prefill_and_save(cfg2, model2, params2, mgr2)
+    f16_bytes = sum(d.bytes_used for d in mgr2.store.devices)
+    assert h_bytes < 0.75 * f16_bytes
+
+
+def test_restoration_timeline_simulated(rules):
+    cfg, model, params, mgr = build("llama2-7b", rules)
+    prefill_and_save(cfg, model, params, mgr)
+    res = mgr.restore(params, "sess")
+    assert res.timeline.makespan > 0
+    assert res.n_tokens == S
+
+
+def test_evict_removes_state(rules):
+    cfg, model, params, mgr = build("llama2-7b", rules)
+    prefill_and_save(cfg, model, params, mgr)
+    assert "sess" in mgr.sessions()
+    mgr.evict("sess")
+    assert "sess" not in mgr.sessions()
+    with pytest.raises(KeyError):
+        mgr.restore(params, "sess")
+
+
+def _pad(model, cache, ctx=64):
+    def padkv(x):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, ctx - x.shape[2]),
+                           (0, 0), (0, 0)))
+
+    out = dict(cache)
+    for key in ("k", "v", "attn_k", "attn_v", "self_k", "self_v"):
+        if key in out:
+            out[key] = padkv(out[key])
+    return out
+
+
+def _gt_cache(model, pre, ctx=64):
+    lengths = jnp.full((B,), S, jnp.int32)
+    if model.kind == "lm":
+        cache = {"k": pre["kv"][0], "v": pre["kv"][1], "lengths": lengths}
+    elif model.kind == "ssm":
+        conv, ssm = pre["states"]
+        return {"conv": conv, "ssm": ssm, "lengths": lengths}
+    elif model.kind == "hybrid":
+        conv, ssm = pre["mamba_states"]
+        cache = {"attn_k": pre["kv"][0], "attn_v": pre["kv"][1],
+                 "conv": conv, "ssm": ssm, "lengths": lengths}
+    else:
+        ck, cv = pre["cross_kv"]
+        cache = {"self_k": pre["kv"][0], "self_v": pre["kv"][1],
+                 "cross_k": ck, "cross_v": cv,
+                 "enc_len": jnp.asarray(ck.shape[2], jnp.int32),
+                 "lengths": lengths}
+    return _pad(model, cache, ctx)

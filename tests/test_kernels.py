@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("S,D,Kv,hd", [(32, 64, 2, 16), (128, 128, 4, 32),
+                                       (64, 256, 1, 64), (96, 64, 2, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bias", [False, True])
+def test_restore_kv_sweep(S, D, Kv, hd, dtype, bias):
+    h = jnp.asarray(RNG.normal(size=(S, D)), dtype)
+    wk = jnp.asarray(RNG.normal(size=(D, Kv * hd)) * D ** -0.5, dtype)
+    wv = jnp.asarray(RNG.normal(size=(D, Kv * hd)) * D ** -0.5, dtype)
+    bk = jnp.asarray(RNG.normal(size=(Kv * hd,)) * 0.1, dtype) if bias \
+        else None
+    bv = jnp.asarray(RNG.normal(size=(Kv * hd,)) * 0.1, dtype) if bias \
+        else None
+    ang = (jnp.arange(S, dtype=jnp.float32)[:, None]
+           * 10000.0 ** (-jnp.arange(hd // 2) / (hd // 2)))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    got = ops.restore_kv(h, wk, wv, bk, bv, cos, sin, head_dim=hd,
+                         use_pallas=True)
+    want = ref.restore_kv_ref(h, wk, wv, bk, bv, cos, sin, head_dim=hd)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("Sq,Skv,hd,group", [(64, 64, 16, 1), (64, 64, 32, 2),
+                                             (32, 96, 16, 4)])
+@pytest.mark.parametrize("kwargs", [dict(causal=True), dict(causal=False),
+                                    dict(causal=True, window=24),
+                                    dict(causal=True, softcap=30.0)])
+def test_flash_attention_sweep(Sq, Skv, hd, group, kwargs):
+    BKv = 2
+    q = jnp.asarray(RNG.normal(size=(BKv * group, Sq, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(BKv, Skv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(BKv, Skv, hd)), jnp.float32)
+    got = ops.flash_attention(q, k, v, group=group, use_pallas=True,
+                              **kwargs)
+    want = ref.flash_attention_ref(q, k, v, group=group, **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("G,Smax", [(1, 64), (4, 128), (7, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(G, Smax, dtype):
+    BKv, hd = 3, 32
+    q = jnp.asarray(RNG.normal(size=(BKv, G, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(BKv, Smax, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(BKv, Smax, hd)), dtype)
+    kl = jnp.asarray(RNG.integers(1, Smax, BKv), jnp.int32)
+    got = ops.decode_attention(q, k, v, kl, use_pallas=True)
+    want = ref.decode_attention_ref(q, k, v, kl)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("Bt,I,N", [(1, 64, 16), (2, 128, 8), (3, 96, 4)])
+def test_ssm_update_sweep(Bt, I, N):
+    h = jnp.asarray(RNG.normal(size=(Bt, I, N)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(Bt, I)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(Bt, I)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(I, N)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(Bt, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(Bt, N)), jnp.float32)
+    dsk = jnp.ones((I,), jnp.float32)
+    got = ops.ssm_update(h, dt, x, A, Bm, C, dsk, use_pallas=True)
+    want = ref.ssm_update_ref(h, dt, x, A, Bm, C, dsk)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_flash_matches_model_attention():
+    """Pallas flash kernel == the model's jnp chunked attention path."""
+    from repro.models.layers.attention import (AttnHyper,
+                                               flash_attention_jnp)
+    B, S, Kv, g, hd = 2, 64, 2, 3, 16
+    Hp = Kv * g
+    q = jnp.asarray(RNG.normal(size=(B, S, Hp, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Kv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Kv, hd)), jnp.float32)
+    hyp = AttnHyper(n_heads=Hp, n_kv_heads=Kv, head_dim=hd, padded_heads=Hp,
+                    chunk=16)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    want = flash_attention_jnp(q, k, v, hyp, q_positions=pos, causal=True)
+    # kernel layout: (B*H, S, hd) grouped by kv head
+    qk = q.reshape(B, S, Kv, g, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B * Kv * g, S, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    vv = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, hd)
+    got = ops.flash_attention(qk, kk, vv, group=g, causal=True,
+                              use_pallas=True)
+    got = got.reshape(B, Kv, g, S, hd).transpose(0, 3, 1, 2, 4).reshape(
+        B, S, Hp, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

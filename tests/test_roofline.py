@@ -1,0 +1,74 @@
+"""HLO cost parser: loop-aware flops / collective bytes on known programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.hlo_cost import analyze_hlo, shape_bytes
+from repro.launch.roofline import analyze, model_flops
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]") == 128
+    assert shape_bytes("bf16[10]{0}") == 20
+    assert shape_bytes("(f32[2,2], s32[3])") == 28
+    assert shape_bytes("pred[16]") == 16
+
+
+def test_scan_flops_multiplied():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), "float32"),
+        jax.ShapeDtypeStruct((6, 128, 128), "float32")).compile()
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == pytest.approx(6 * 2 * 128 ** 3, rel=0.01)
+
+
+def test_nested_scan_flops():
+    def g(x, ws):
+        def outer(c, wset):
+            def inner(c2, w):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, wset)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, ws)
+        return out
+
+    c = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((64, 64), "float32"),
+        jax.ShapeDtypeStruct((3, 4, 64, 64), "float32")).compile()
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == pytest.approx(12 * 2 * 64 ** 3, rel=0.01)
+
+
+def test_collective_bytes_from_sharded_contraction():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device (run under dryrun XLA_FLAGS)")
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.config.shapes import TRAIN_4K
+    from repro.configs import get_arch
+    cfg = get_arch("qwen2-7b")
+    rep = analyze(cfg, TRAIN_4K, mesh_name="16x16", chips=256,
+                  flops_per_device=1e15, bytes_per_device=1e11,
+                  coll_breakdown={"all-reduce": 1e9})
+    assert rep.compute_s == pytest.approx(1e15 / 197e12)
+    assert rep.memory_s == pytest.approx(1e11 / 819e9)
+    assert rep.collective_s == pytest.approx(1e9 / 50e9)
+    assert rep.bottleneck == "compute"
+    assert rep.model_flops == pytest.approx(
+        6 * cfg.active_param_count() * 4096 * 256)
+
+
+def test_model_flops_decode_counts_one_token():
+    from repro.config.shapes import DECODE_32K
+    from repro.configs import get_arch
+    cfg = get_arch("qwen2-7b")
+    assert model_flops(cfg, DECODE_32K) == pytest.approx(
+        2 * cfg.active_param_count() * 128)
