@@ -1,7 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only fig9,fig12]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,fig12] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run --mode bench_restoration
+
+``--smoke`` runs the fast analytic suites only (CI gate). ``--mode
+bench_restoration`` compares blocking vs pipelined restoration TTFT from
+the executor's task graph and writes BENCH_restoration.json.
 """
 from __future__ import annotations
 
@@ -20,18 +25,36 @@ SUITES = [
     ("table3 storage cost", "benchmarks.bench_storage_cost"),
 ]
 
+# analytic suites that finish in seconds without a model forward pass
+SMOKE = ("bench_restoration", "bench_sensitivity", "bench_scheduler",
+         "bench_partition", "bench_storage_cost")
+
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma-separated substring filters")
+    p.add_argument("--smoke", action="store_true",
+                   help="fast analytic suites only (CI)")
+    p.add_argument("--mode", default=None, choices=["bench_restoration"],
+                   help="special modes: bench_restoration compares "
+                        "blocking vs pipelined TTFT -> "
+                        "BENCH_restoration.json")
     args = p.parse_args()
-    filters = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
+    if args.mode == "bench_restoration":
+        from benchmarks.bench_restoration import run_pipeline_comparison
+        rows = run_pipeline_comparison()
+        print(f"# {len(rows)} rows -> BENCH_restoration.json",
+              file=sys.stderr)
+        return
+    filters = args.only.split(",") if args.only else None
     t0 = time.time()
     n_rows = 0
     for label, module in SUITES:
         if filters and not any(f in label or f in module for f in filters):
+            continue
+        if args.smoke and module.rsplit(".", 1)[-1] not in SMOKE:
             continue
         print(f"# --- {label} ({module}) ---", file=sys.stderr)
         mod = __import__(module, fromlist=["run"])

@@ -8,8 +8,12 @@ Responsibilities (paper Fig 7):
     manifest (crash recovery);
   * RESTORE: rebuild the exact KV cache / SSM states for a session from
     host storage — recompute-prefix from tokens, projections from hidden
-    states, raw reads for KV layers — with the pipelined timeline simulated
-    against a hardware profile (this container has no real accelerator/SSD).
+    states, raw reads for KV layers — delegated to the pipelined
+    RestorationExecutor (core/restoration.py): the serving engine steps it
+    incrementally into batch-slot buffers, while ``restore`` here runs it
+    to completion into a B=1 cache for offline/test use. The reported
+    timeline derives from the executed task order under a hardware
+    profile (this container has no real accelerator/SSD).
 
 Optional beyond-paper extension: int8 per-token quantization of stored
 hidden states (`compress="int8"`), halving IO/storage again at a measured
@@ -20,19 +24,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config.arch import BlockKind
 from repro.config.hardware import HardwareProfile, TPU_V5E
-from repro.core.cost_model import layer_costs, method_times
-from repro.core.pipeline import Timeline, simulate
+from repro.core.pipeline import Timeline
+from repro.core.restoration import (CacheAssembler, RestorationExecutor,
+                                    quantize_hidden_int8)
 from repro.core.scheduler import Schedule, solve
-from repro.models.layers.norm import apply_norm
-from repro.models.layers import attention as attn_lib
 from repro.models.model import Model
 from repro.storage.chunk_store import ChunkStore
 from repro.storage.two_stage import SnapshotTask, TwoStageSaver
@@ -45,17 +46,6 @@ class RestoreResult:
     timeline: Timeline               # simulated restoration timing
     wall_time: float                 # actual CPU seconds (functional path)
     n_tokens: int
-
-
-def _quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    scale = np.abs(x).max(axis=-1, keepdims=True).astype(np.float32) / 127.0
-    scale = np.maximum(scale, 1e-8)
-    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
-    return q, scale
-
-
-def _dequantize_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
-    return q.astype(np.float32) * scale
 
 
 class HCacheManager:
@@ -186,7 +176,7 @@ class HCacheManager:
     def _append_hidden(self, session: str, layer: int, start: int,
                        h: np.ndarray) -> None:
         if self.compress == "int8":
-            q, scale = _quantize_int8(h)
+            q, scale = quantize_hidden_int8(h)
             self.store.append_tokens(session, "h", layer, start, q)
             self.store.append_tokens(session, "hs", layer, start, scale)
         else:
@@ -221,149 +211,27 @@ class HCacheManager:
     def _tokens(self, session: str) -> np.ndarray:
         return np.asarray(self.store.get_blob(session, "tok", 0))
 
+    def begin_restore(self, params, session: str, sink=None
+                      ) -> RestorationExecutor:
+        """Start an incremental restoration (serving path). The returned
+        executor is stepped by the engine a bounded number of tasks per
+        engine iteration; finished layers stream into ``sink``."""
+        return RestorationExecutor(self, params, session, sink=sink)
+
     def restore(self, params, session: str) -> RestoreResult:
-        """Rebuild the session's accelerator state from host storage."""
+        """Rebuild the session's accelerator state from host storage.
+
+        Standalone (offline/test) API: runs the pipelined executor to
+        completion into a B=1 ``CacheAssembler``. The serving engine
+        instead steps the executor incrementally with a batch-slot sink
+        (see serving/engine.py)."""
         t0 = time.perf_counter()
-        manifest = self.store.get_manifest(session)
-        if manifest is None:
-            raise KeyError(f"no stored state for session {session!r}")
-        n = manifest["n_tokens"]
-        sched = Schedule(tuple(manifest["methods"]), 0, 0, 0, 0)
-        self.store.sync_clocks(0.0)
-        cache = self._restore_family(params, session, n, sched.methods)
+        sink = CacheAssembler(self.model)
+        ex = self.begin_restore(params, session, sink=sink)
+        ex.run()
         wall = time.perf_counter() - t0
-        times = [method_times(c, self.hw)
-                 for c in layer_costs(self.cfg, n, self.dtype_bytes)]
-        timeline = simulate(sched.methods, times)
-        return RestoreResult(cache, sched, timeline, wall, n)
-
-    # ---- family-specific assembly -----------------------------------------
-    def _restore_family(self, params, session, n, methods):
-        kind = self.model.kind
-        if kind in ("lm", "hybrid"):
-            return self._restore_attn_like(params, session, n, methods)
-        if kind == "ssm":
-            conv = jnp.asarray(self.store.get_blob(session, "state_conv", 0))
-            ssm = jnp.asarray(self.store.get_blob(session, "state_ssm", 0))
-            return {"conv": conv, "ssm": ssm,
-                    "lengths": jnp.asarray([n], jnp.int32)}
-        # encdec: cross KV from the saved encoder output + self KV from H
-        enc_out = jnp.asarray(self.store.get_blob(session, "enc", 0))[None]
-        from repro.models import encdec as encdec_mod
-        ck, cv = encdec_mod.cross_kv(params, enc_out, self.model.h)
-        self_kv = self._restore_attn_like(params, session, n, methods)
-        return {"self_k": self_kv["k"], "self_v": self_kv["v"],
-                "cross_k": ck, "cross_v": cv,
-                "enc_len": jnp.asarray(enc_out.shape[1], jnp.int32),
-                "lengths": jnp.asarray([n], jnp.int32)}
-
-    def _read_hidden(self, session: str, layer: int, n: int) -> np.ndarray:
-        if self.compress == "int8":
-            q = self.store.read_layer(session, "h", layer, n)
-            s = self.store.read_layer(session, "hs", layer, n)
-            return _dequantize_int8(q, s)
-        return self.store.read_layer(session, "h", layer, n)
-
-    def _restore_attn_like(self, params, session: str, n: int,
-                           methods: Sequence[str]) -> dict:
-        cfg = self.cfg
-        kinds = cfg.block_kinds()
-        attn_layers = [i for i, k in enumerate(kinds)
-                       if k == BlockKind.ATTENTION]
-        pos = jnp.arange(n)[None, :]
-        hd = cfg.head_dim_
-
-        h_idx = [i for i in attn_layers if methods[i] == "hidden"]
-        kv_idx = [i for i in attn_layers if methods[i] == "kv"]
-        re_idx = [i for i in attn_layers if methods[i] == "recompute"]
-
-        k_parts: Dict[int, jnp.ndarray] = {}
-        v_parts: Dict[int, jnp.ndarray] = {}
-
-        # 1. recompute prefix from tokens (must be layers 0..len(re)-1)
-        if re_idx:
-            toks = jnp.asarray(self._tokens(session))[None, :n]
-            k_re, v_re = self._recompute_prefix(params, toks, len(re_idx))
-            for j, li in enumerate(sorted(re_idx)):
-                k_parts[li], v_parts[li] = k_re[j], v_re[j]
-
-        # 2. hidden-state layers: fetch + project (pipelined on hardware;
-        #    functionally a vmap over the H-layer subset here)
-        if h_idx:
-            hs = np.stack([self._read_hidden(session, li, n) for li in h_idx])
-            hidden = jnp.asarray(hs, self.model.dtype)[:, None]  # (Lh,1,n,D)
-            sub = self._subset_blocks(params, h_idx)
-            k_h, v_h = self._project_subset(sub, hidden, pos)
-            for j, li in enumerate(h_idx):
-                k_parts[li], v_parts[li] = k_h[j], v_h[j]
-
-        # 3. raw KV reads
-        for li in kv_idx:
-            k = self.store.read_layer(session, "kvk", li, n)
-            v = self.store.read_layer(session, "kvv", li, n)
-            k_parts[li] = jnp.asarray(k).reshape(1, n, cfg.n_kv_heads, hd)
-            v_parts[li] = jnp.asarray(v).reshape(1, n, cfg.n_kv_heads, hd)
-
-        k_stack = jnp.stack([k_parts[i] for i in attn_layers])
-        v_stack = jnp.stack([v_parts[i] for i in attn_layers])
-        out = {"k": k_stack.astype(self.model.dtype),
-               "v": v_stack.astype(self.model.dtype),
-               "lengths": jnp.asarray([n], jnp.int32)}
-        if self.model.kind == "hybrid":
-            conv = jnp.asarray(self.store.get_blob(session, "state_conv", 0))
-            ssm = jnp.asarray(self.store.get_blob(session, "state_ssm", 0))
-            out = {"attn_k": out["k"], "attn_v": out["v"], "conv": conv,
-                   "ssm": ssm, "lengths": out["lengths"]}
-        return out
-
-    def _subset_blocks(self, params, idx: List[int]):
-        arr = np.asarray(idx)
-        blocks = (params["blocks"] if self.model.kind == "lm" else
-                  params["attn"] if self.model.kind == "hybrid" else
-                  params["dec_blocks"])
-        if self.model.kind == "hybrid":
-            # attn params are stacked per super-block; map layer->super idx
-            k = self.model.h.k
-            arr = np.asarray([i // k for i in idx])
-        return jax.tree.map(lambda x: x[arr], blocks)
-
-    def _project_subset(self, blocks, hidden, pos):
-        cfg, mh = self.cfg, self.model.h
-        attn_h = mh.attn if hasattr(mh, "attn") else mh.lm.attn
-        attn_key = ("attn" if self.model.kind in ("lm", "hybrid")
-                    else "self_attn")
-        ln_key = "ln1"
-
-        def one(bp, hl):
-            normed = apply_norm(bp[ln_key], hl, cfg.norm, cfg.norm_eps)
-            ap = bp[attn_key] if attn_key in bp else bp
-            return attn_lib.restore_kv(ap["wk"], ap["wv"], ap.get("bk"),
-                                       ap.get("bv"), normed, attn_h,
-                                       jnp.broadcast_to(pos, hl.shape[:2]))
-
-        return jax.vmap(one)(blocks, hidden)
-
-    def _recompute_prefix(self, params, tokens, n_layers: int):
-        """Run the embedding + first ``n_layers`` blocks, emitting KV."""
-        from repro.models import transformer as tfm
-        mh = self.model.h
-        sliced = dict(params)
-        sliced["blocks"] = jax.tree.map(lambda x: x[:n_layers],
-                                        params["blocks"])
-        B, S = tokens.shape
-        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        x = tfm._embed_input(sliced, mh, tokens, positions)
-        windows = tfm.layer_windows(mh)
-        windows = windows[:n_layers] if windows is not None else None
-
-        def body(x, xs):
-            bp, win = xs
-            x, _, kv, _ = tfm.block_forward(bp, x, mh, positions=positions,
-                                            window=win, emit_kv=True)
-            return x, kv
-
-        _, (k, v) = jax.lax.scan(body, x, (sliced["blocks"], windows))
-        return k, v
+        return RestoreResult(sink.cache, ex.schedule, ex.timeline(), wall,
+                             ex.n_tokens)
 
     # -------------------------------------------------------------- eviction
     def evict(self, session: str) -> None:

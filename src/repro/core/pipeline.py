@@ -3,8 +3,9 @@
 The paper overlaps per-layer hidden-state transmission with the previous
 layer's KV projection (Fig 5). On TPU the same structure holds (host→HBM
 DMA vs MXU GEMMs); since this container is CPU-only the *timing* comes from
-an event-driven simulation over a hardware profile, while the *functional*
-restoration (actual tensors) runs through ``core/restore.py``.
+replaying the restoration executor's task graph over a hardware profile,
+while the *functional* restoration (actual tensors) runs through the same
+graph in ``core/restoration.py`` — one source of truth for both.
 
 Stream rules (paper §4.1):
   * recompute layers form a prefix and run on the compute stream from t=0;
@@ -19,7 +20,7 @@ fractions (Fig 12) and the TTFT decomposition (Figs 9/10).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Sequence
 
 from repro.config.arch import ArchConfig
 from repro.config.hardware import GEMM_EFFICIENCY, HardwareProfile
@@ -45,32 +46,14 @@ class Timeline:
 
 
 def simulate(methods: Sequence[str], times: Sequence[MethodTimes]) -> Timeline:
-    """Simulate a restoration schedule. methods[i] in {hidden, kv, recompute}."""
-    n = len(methods)
-    io_done = [0.0] * n
-    io_t = 0.0
-    # IO queue: hidden fetches first (layer order), then kv fetches
-    for phase in ("hidden", "kv"):
-        for i in range(n):
-            if methods[i] == phase:
-                dur = times[i].io_h if phase == "hidden" else times[i].io_kv
-                io_t += dur
-                io_done[i] = io_t
-    io_busy = io_t
+    """Simulate a restoration schedule. methods[i] in {hidden, kv, recompute}.
 
-    comp_t = 0.0
-    comp_busy = 0.0
-    for i in range(n):                         # recompute prefix
-        if methods[i] == "recompute":
-            comp_t += times[i].c_token
-            comp_busy += times[i].c_token
-    for i in range(n):                         # projections, fetch-ordered
-        if methods[i] == "hidden":
-            start = max(comp_t, io_done[i])
-            comp_t = start + times[i].c_h
-            comp_busy += times[i].c_h
-    makespan = max(io_t, comp_t)
-    return Timeline(makespan, io_busy, comp_busy, io_t, comp_t)
+    Thin wrapper over the restoration executor's task graph: the same
+    ``compile_tasks`` + ``replay`` that drive the serving engine's
+    incremental execution produce this timeline, so the simulated and the
+    executed orders cannot drift apart (see core/restoration.py)."""
+    from repro.core.restoration import compile_tasks, replay
+    return replay(compile_tasks(methods), times)
 
 
 def restore_timeline(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile,

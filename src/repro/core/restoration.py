@@ -1,0 +1,487 @@
+"""Pipelined restoration executor (paper §4.1, DESIGN.md §5).
+
+One source of truth for restoration: a ``Schedule`` compiles into an
+ordered task graph (``compile_tasks``) of per-layer steps — striped
+chunk-store IO reads, hidden→KV projections, recompute-prefix segments,
+SSM/enc-dec blob loads. The same graph serves three consumers:
+
+  * ``replay``                — virtual two-stream replay of a task order
+                                under a hardware profile → ``Timeline``.
+                                ``core.pipeline.simulate`` is exactly
+                                ``replay(compile_tasks(methods), times)``.
+  * ``RestorationExecutor``   — executes the graph *incrementally*
+                                (``step(max_tasks)``), interleaving the IO
+                                and compute streams event-driven, writing
+                                each finished layer straight into a
+                                ``RestoreSink`` (the serving engine's batch
+                                slot — no intermediate B=1 cache).
+  * prefetch                  — an executor without a sink may run IO
+                                tasks early (queued sessions warm their
+                                layer-0 reads before a slot frees).
+
+The executor records the order tasks actually executed in; its reported
+``Timeline`` is ``replay`` over that executed order, so the engine's
+numbers and the analytic simulation can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.arch import BlockKind
+from repro.core.cost_model import MethodTimes, layer_costs, method_times
+from repro.core.scheduler import Schedule
+from repro.models.layers.norm import apply_norm
+from repro.models.layers import attention as attn_lib
+
+# Task kinds. IO-stream: io_h (hidden fetch), io_kv (raw KV fetch),
+# blob (state/encoder/token whole-object reads — O(1) in tokens, charged
+# zero virtual time as in the paper's model). Compute-stream: recompute
+# (one prefix layer from tokens), project (hidden → K,V GEMM).
+IO_KINDS = ("io_h", "io_kv", "blob")
+COMPUTE_KINDS = ("recompute", "project")
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    kind: str                 # io_h | io_kv | blob | recompute | project
+    layer: int                # global layer index (-1 for blob tasks)
+    dep: Optional[int] = None  # task-list index that must execute first
+
+    @property
+    def stream(self) -> str:
+        return "io" if self.kind in IO_KINDS else "compute"
+
+
+def compile_tasks(methods: Sequence[str], *,
+                  n_blobs: int = 0) -> List[Task]:
+    """Compile a per-layer method assignment into the ordered task graph.
+
+    List order encodes per-stream priority (paper §4.1): the IO stream
+    runs hidden fetches first (layer order) so projections can start,
+    then KV fetches fill the IO tail; the compute stream runs the
+    recompute prefix from t=0, then projections in fetch order. A
+    projection depends on its own fetch."""
+    tasks: List[Task] = []
+    io_of: Dict[int, int] = {}
+    for i, m in enumerate(methods):
+        if m == "hidden":
+            io_of[i] = len(tasks)
+            tasks.append(Task("io_h", i))
+    for i, m in enumerate(methods):
+        if m == "kv":
+            tasks.append(Task("io_kv", i))
+    for _ in range(n_blobs):
+        tasks.append(Task("blob", -1))
+    for i, m in enumerate(methods):
+        if m == "recompute":
+            tasks.append(Task("recompute", i))
+    for i, m in enumerate(methods):
+        if m == "hidden":
+            tasks.append(Task("project", i, dep=io_of[i]))
+    return tasks
+
+
+def task_duration(task: Task, times: Sequence[MethodTimes]) -> float:
+    if task.kind == "io_h":
+        return times[task.layer].io_h
+    if task.kind == "io_kv":
+        return times[task.layer].io_kv
+    if task.kind == "recompute":
+        return times[task.layer].c_token
+    if task.kind == "project":
+        return times[task.layer].c_h
+    return 0.0                                 # blob reads: O(1) in tokens
+
+
+def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
+           order: Optional[Sequence[int]] = None):
+    """Two-stream virtual replay of ``tasks`` in ``order`` → Timeline.
+
+    Each stream is serial; a compute task with a dep starts no earlier
+    than the dep's completion on the IO stream. ``order`` defaults to
+    list order (the compiled priority); the executor passes the order it
+    actually ran."""
+    from repro.core.pipeline import Timeline
+    if order is None:
+        order = range(len(tasks))
+    done = [0.0] * len(tasks)
+    io_t = comp_t = io_busy = comp_busy = 0.0
+    for idx in order:
+        t = tasks[idx]
+        dur = task_duration(t, times)
+        if t.stream == "io":
+            io_t += dur
+            io_busy += dur
+            done[idx] = io_t
+        else:
+            start = comp_t if t.dep is None else max(comp_t, done[t.dep])
+            comp_t = start + dur
+            comp_busy += dur
+            done[idx] = comp_t
+    return Timeline(max(io_t, comp_t), io_busy, comp_busy, io_t, comp_t)
+
+
+# ----------------------------------------------------- hidden-state codec
+def quantize_hidden_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-token int8 quantization of stored hidden states (save path in
+    hcache, dequantized here on restore — one codec for both)."""
+    scale = np.abs(x).max(axis=-1, keepdims=True).astype(np.float32) / 127.0
+    scale = np.maximum(scale, 1e-8)
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_hidden_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale.astype(np.float32)
+
+
+# ------------------------------------------------------------------- sinks
+class RestoreSink:
+    """Receives restored state one piece at a time, in any order."""
+
+    def put_kv(self, row: int, k, v) -> None:
+        """One attention layer's KV; row indexes the stacked-KV buffer
+        (k, v: (1, n, kv_heads, head_dim))."""
+        raise NotImplementedError
+
+    def put_states(self, conv, ssm) -> None:
+        raise NotImplementedError
+
+    def put_cross(self, ck, cv, enc_len: int) -> None:
+        raise NotImplementedError
+
+    def finish(self, n_tokens: int) -> None:
+        raise NotImplementedError
+
+
+class CacheAssembler(RestoreSink):
+    """Builds the family-specific B=1 cache dict — the standalone
+    ``HCacheManager.restore`` API (tests, offline tools). The serving
+    engine does NOT use this: its sink writes batch-slot buffers."""
+
+    def __init__(self, model):
+        self.model = model
+        self.k_parts: Dict[int, jnp.ndarray] = {}
+        self.v_parts: Dict[int, jnp.ndarray] = {}
+        self.states = None
+        self.cross = None
+        self.cache: Optional[dict] = None
+
+    def put_kv(self, row, k, v):
+        self.k_parts[row] = k
+        self.v_parts[row] = v
+
+    def put_states(self, conv, ssm):
+        self.states = (conv, ssm)
+
+    def put_cross(self, ck, cv, enc_len):
+        self.cross = (ck, cv, enc_len)
+
+    def finish(self, n_tokens):
+        model = self.model
+        lengths = jnp.asarray([n_tokens], jnp.int32)
+        if model.kind == "ssm":
+            conv, ssm = self.states
+            self.cache = {"conv": conv, "ssm": ssm, "lengths": lengths}
+            return
+        rows = sorted(self.k_parts)
+        k = jnp.stack([self.k_parts[r] for r in rows]).astype(model.dtype)
+        v = jnp.stack([self.v_parts[r] for r in rows]).astype(model.dtype)
+        if model.kind == "lm":
+            self.cache = {"k": k, "v": v, "lengths": lengths}
+        elif model.kind == "hybrid":
+            conv, ssm = self.states
+            self.cache = {"attn_k": k, "attn_v": v, "conv": conv,
+                          "ssm": ssm, "lengths": lengths}
+        else:                                   # encdec
+            ck, cv, enc_len = self.cross
+            self.cache = {"self_k": k, "self_v": v, "cross_k": ck,
+                          "cross_v": cv,
+                          "enc_len": jnp.asarray(enc_len, jnp.int32),
+                          "lengths": lengths}
+
+
+# -------------------------------------------------------- param projections
+def subset_blocks(model, params, idx: List[int]):
+    """Stacked block params for the given global layer indices."""
+    arr = np.asarray(idx)
+    blocks = (params["blocks"] if model.kind == "lm" else
+              params["attn"] if model.kind == "hybrid" else
+              params["dec_blocks"])
+    if model.kind == "hybrid":
+        # attn params are stacked per super-block; map layer->super idx
+        k = model.h.k
+        arr = np.asarray([i // k for i in idx])
+    return jax.tree.map(lambda x: x[arr], blocks)
+
+
+def project_hidden(model, blocks, hidden, pos):
+    """K,V projection of saved hidden states (the paper's core GEMM).
+
+    hidden: (L_sub, 1, n, D); returns (k, v): (L_sub, 1, n, Kv, hd)."""
+    cfg, mh = model.cfg, model.h
+    attn_h = mh.attn if hasattr(mh, "attn") else mh.lm.attn
+    attn_key = "attn" if model.kind in ("lm", "hybrid") else "self_attn"
+
+    def one(bp, hl):
+        normed = apply_norm(bp["ln1"], hl, cfg.norm, cfg.norm_eps)
+        ap = bp[attn_key] if attn_key in bp else bp
+        return attn_lib.restore_kv(ap["wk"], ap["wv"], ap.get("bk"),
+                                   ap.get("bv"), normed, attn_h,
+                                   jnp.broadcast_to(pos, hl.shape[:2]))
+
+    return jax.vmap(one)(blocks, hidden)
+
+
+# --------------------------------------------------------------- executor
+class RestorationExecutor:
+    """Incremental, sink-directed execution of one session's restoration.
+
+    Created by ``HCacheManager.begin_restore``. ``step(max_tasks)`` runs a
+    bounded number of tasks, event-driven across the two virtual streams
+    (whichever stream's clock is behind goes next, so layers finish in
+    pipelined order); ``prefetch_step`` runs IO tasks only (no sink
+    needed). All finished pieces flow to the sink immediately; pieces
+    produced before a sink is attached are buffered (numpy/array handles,
+    never a stacked B=1 cache) and flushed on ``attach_sink``."""
+
+    def __init__(self, mgr, params, session: str,
+                 sink: Optional[RestoreSink] = None):
+        manifest = mgr.store.get_manifest(session)
+        if manifest is None:
+            raise KeyError(f"no stored state for session {session!r}")
+        self.mgr = mgr
+        self.model = mgr.model
+        self.params = params
+        self.session = session
+        self.sink = sink
+        self.n_tokens = int(manifest["n_tokens"])
+        self.methods = tuple(manifest["methods"])
+        self.schedule = Schedule(self.methods, 0.0, 0.0, 0.0, 0.0)
+        self.compress = manifest.get("compress", mgr.compress)
+        mgr.store.sync_clocks(0.0)
+
+        kinds = mgr.cfg.block_kinds()
+        self._attn_layers = [i for i, k in enumerate(kinds)
+                             if k == BlockKind.ATTENTION]
+        self._row_of = {li: r for r, li in enumerate(self._attn_layers)}
+        n_blobs = self._count_blobs()
+        self.tasks = compile_tasks(self.methods, n_blobs=n_blobs)
+        self.times = [method_times(c, mgr.hw)
+                      for c in layer_costs(mgr.cfg, self.n_tokens,
+                                           mgr.dtype_bytes)]
+        self.executed: List[int] = []
+        self._done = [False] * len(self.tasks)
+        # event-driven stream interleaving state
+        self._io_queue = [i for i, t in enumerate(self.tasks)
+                          if t.stream == "io"]
+        self._comp_queue = [i for i, t in enumerate(self.tasks)
+                            if t.stream == "compute"]
+        self._io_clock = 0.0
+        self._comp_clock = 0.0
+        self._hbuf: Dict[int, np.ndarray] = {}
+        self._pending: List[Tuple[str, tuple]] = []   # sink-less buffer
+        # recompute-prefix carry
+        self._re_layers = [i for i, m in enumerate(self.methods)
+                           if m == "recompute"]
+        self._re_x = None
+        self._re_pos = None
+        self._re_windows = None
+        self._re_next = 0
+        self._blobs_emitted = 0
+        self._finished = False
+        # striped-device completion, relative to the device clocks at
+        # executor start (the clocks are shared and monotonic across
+        # restores; under concurrent restores this correctly includes
+        # queueing behind the other session's reads)
+        self._io_base = mgr.store.read_completion()
+        self.io_measured = 0.0
+        self.wall_time = 0.0
+
+    # ------------------------------------------------------------- plumbing
+    def _count_blobs(self) -> int:
+        kind = self.model.kind
+        if kind in ("ssm", "hybrid"):
+            return 1                            # conv+ssm state blobs
+        if kind == "encdec":
+            return 1                            # encoder output blob
+        return 0
+
+    @property
+    def done(self) -> bool:
+        return all(self._done)
+
+    def attach_sink(self, sink: RestoreSink) -> None:
+        self.sink = sink
+        for op, args in self._pending:
+            getattr(sink, op)(*args)
+        self._pending.clear()
+
+    def _emit(self, op: str, *args) -> None:
+        if self.sink is not None:
+            getattr(self.sink, op)(*args)
+        else:
+            self._pending.append((op, args))
+
+    def timeline(self):
+        """Timeline derived from the order tasks actually executed in."""
+        order = self.executed + [i for i in range(len(self.tasks))
+                                 if not self._done[i]]
+        return replay(self.tasks, self.times, order)
+
+    # ------------------------------------------------------------ stepping
+    def _ready(self, idx: int) -> bool:
+        t = self.tasks[idx]
+        if t.dep is not None and not self._done[t.dep]:
+            return False
+        if t.kind == "recompute":
+            # prefix layers carry the residual stream in order
+            return self._re_layers[self._re_next] == t.layer
+        return True
+
+    def _pick(self) -> Optional[int]:
+        """Event-driven pick: advance whichever stream is behind."""
+        io_idx = self._io_queue[0] if self._io_queue else None
+        comp_idx = (self._comp_queue[0]
+                    if self._comp_queue and self._ready(self._comp_queue[0])
+                    else None)
+        if io_idx is None:
+            return comp_idx
+        if comp_idx is None:
+            return io_idx
+        return comp_idx if self._comp_clock <= self._io_clock else io_idx
+
+    def step(self, max_tasks: int = 4) -> bool:
+        """Execute up to ``max_tasks`` tasks; True when restoration done."""
+        t0 = time.perf_counter()
+        for _ in range(max_tasks):
+            idx = self._pick()
+            if idx is None:
+                break
+            self._run_task(idx)
+        if self.done and not self._finished and self.sink is not None:
+            self.sink.finish(self.n_tokens)
+            self._finished = True
+        self.wall_time += time.perf_counter() - t0
+        return self.done
+
+    def prefetch_step(self, max_tasks: int = 1) -> int:
+        """Run up to ``max_tasks`` IO tasks (no sink required); returns
+        the number executed. Used to warm queued sessions' reads."""
+        n = 0
+        while n < max_tasks and self._io_queue:
+            self._run_task(self._io_queue[0])
+            n += 1
+        return n
+
+    def run(self) -> None:
+        while not self.step(max_tasks=max(len(self.tasks), 1)):
+            pass
+
+    # ---------------------------------------------------------- task bodies
+    def _run_task(self, idx: int) -> None:
+        t = self.tasks[idx]
+        dur = task_duration(t, self.times)
+        if t.stream == "io":
+            self._io_queue.remove(idx)
+            self._io_clock += dur
+        else:
+            self._comp_queue.remove(idx)
+            start = (self._comp_clock if t.dep is None else
+                     max(self._comp_clock, self._io_clock))
+            self._comp_clock = max(self._comp_clock, start) + dur
+        getattr(self, "_exec_" + t.kind)(t)
+        self._done[idx] = True
+        self.executed.append(idx)
+
+    def _is_attn(self, layer: int) -> bool:
+        return layer in self._row_of
+
+    def _measure(self, *completions: float) -> None:
+        done = max(completions, default=0.0)
+        if done:
+            self.io_measured = max(self.io_measured, done - self._io_base)
+
+    def _exec_io_h(self, t: Task) -> None:
+        if not self._is_attn(t.layer):
+            return          # mamba layers restore via the state blob
+        store, sess, n = self.mgr.store, self.session, self.n_tokens
+        if self.compress == "int8":
+            q = store.read_layer_async(sess, "h", t.layer, n)
+            s = store.read_layer_async(sess, "hs", t.layer, n)
+            self._measure(q.completion, s.completion)
+            self._hbuf[t.layer] = dequantize_hidden_int8(q.data, s.data)
+        else:
+            r = store.read_layer_async(sess, "h", t.layer, n)
+            self._measure(r.completion)
+            self._hbuf[t.layer] = r.data
+
+    def _exec_io_kv(self, t: Task) -> None:
+        if not self._is_attn(t.layer):
+            return
+        cfg = self.mgr.cfg
+        store, sess, n = self.mgr.store, self.session, self.n_tokens
+        rk = store.read_layer_async(sess, "kvk", t.layer, n)
+        rv = store.read_layer_async(sess, "kvv", t.layer, n)
+        self._measure(rk.completion, rv.completion)
+        hd = cfg.head_dim_
+        k = jnp.asarray(rk.data).reshape(1, n, cfg.n_kv_heads, hd)
+        v = jnp.asarray(rv.data).reshape(1, n, cfg.n_kv_heads, hd)
+        self._emit("put_kv", self._row_of[t.layer],
+                   k.astype(self.model.dtype), v.astype(self.model.dtype))
+
+    def _exec_project(self, t: Task) -> None:
+        if not self._is_attn(t.layer):
+            return
+        h_np = self._hbuf.pop(t.layer)
+        hidden = jnp.asarray(h_np, self.model.dtype)[None, None]  # (1,1,n,D)
+        pos = jnp.arange(self.n_tokens)[None, :]
+        sub = subset_blocks(self.model, self.params, [t.layer])
+        k, v = project_hidden(self.model, sub, hidden, pos)
+        self._emit("put_kv", self._row_of[t.layer],
+                   k[0].astype(self.model.dtype),
+                   v[0].astype(self.model.dtype))
+
+    def _exec_recompute(self, t: Task) -> None:
+        from repro.models import transformer as tfm
+        model, params = self.model, self.params
+        mh = model.h
+        if self._re_x is None:
+            toks = jnp.asarray(
+                self.mgr.store.get_blob(self.session, "tok", 0)
+            )[None, :self.n_tokens]
+            B, S = toks.shape
+            self._re_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            self._re_x = tfm._embed_input(params, mh, toks, self._re_pos)
+            self._re_windows = tfm.layer_windows(mh)
+        j = self._re_next
+        bp = jax.tree.map(lambda a: a[j], params["blocks"])
+        win = (self._re_windows[j] if self._re_windows is not None else None)
+        x, _, kv, _ = tfm.block_forward(bp, self._re_x, mh,
+                                        positions=self._re_pos, window=win,
+                                        emit_kv=True)
+        self._re_x = x
+        self._re_next += 1
+        k, v = kv
+        self._emit("put_kv", self._row_of[t.layer],
+                   k.astype(model.dtype), v.astype(model.dtype))
+
+    def _exec_blob(self, t: Task) -> None:
+        store, sess = self.mgr.store, self.session
+        kind = self.model.kind
+        if kind in ("ssm", "hybrid"):
+            conv = jnp.asarray(store.get_blob(sess, "state_conv", 0))
+            ssm = jnp.asarray(store.get_blob(sess, "state_ssm", 0))
+            self._emit("put_states", conv, ssm)
+        elif kind == "encdec":
+            from repro.models import encdec as encdec_mod
+            enc_out = jnp.asarray(store.get_blob(sess, "enc", 0))[None]
+            ck, cv = encdec_mod.cross_kv(self.params, enc_out, self.model.h)
+            self._emit("put_cross", ck, cv, enc_out.shape[1])
+        self._blobs_emitted += 1

@@ -45,6 +45,13 @@ class Schedule:
     def counts(self):
         return {m: self.methods.count(m) for m in METHODS}
 
+    def tasks(self):
+        """The ordered restoration task graph this schedule compiles to —
+        the same graph the executor runs and ``pipeline.simulate``
+        replays (core/restoration.compile_tasks)."""
+        from repro.core.restoration import compile_tasks
+        return compile_tasks(self.methods)
+
     def summary(self) -> str:
         c = self.counts
         return (f"{c['hidden']} H + {c['kv']} KV + {c['recompute']} RE | "

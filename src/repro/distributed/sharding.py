@@ -117,10 +117,27 @@ def fsdp_rules(mesh: Mesh, **kw) -> ShardingRules:
         fsdp=data, d_ff=(*data, "model"))
 
 
+def current_mesh():
+    """The ambient mesh (jax>=0.5 abstract mesh, else the 0.4.x
+    thread-local physical mesh from a ``with mesh:`` context)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def mesh_context(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh on jax>=0.5;
+    on 0.4.x a Mesh is itself the context manager)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def constrain(x, rules: ShardingRules, *axes: Optional[str]):
     """with_sharding_constraint by logical axes (no-op outside a mesh
     context, so layer code runs unchanged in single-device tests)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh.empty:
         return x
     spec = rules.spec(axes)

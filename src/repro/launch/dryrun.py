@@ -174,7 +174,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = 512 if multi_pod else 256
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    from repro.distributed.sharding import mesh_context
+    with mesh_context(mesh):
         fn, args, shardings, donate = build_cell(mesh, cfg, shape, variant)
         lowered = jax.jit(fn, in_shardings=shardings,
                           donate_argnums=donate).lower(*args)

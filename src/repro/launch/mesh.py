@@ -14,7 +14,17 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 — explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: no AxisType; meshes are implicitly Auto
+    AxisType = None
+
+
+def _mesh_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,9 +38,8 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"mesh {shape} needs {n} devices, have {len(jax.devices())} — "
             "run under launch/dryrun.py (it forces 512 host devices)")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         **_mesh_kwargs(len(axes)))
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
@@ -39,8 +48,8 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     for s in shape:
         n *= s
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:n])
+                         devices=jax.devices()[:n],
+                         **_mesh_kwargs(len(axes)))
 
 
 def single_device_mesh():

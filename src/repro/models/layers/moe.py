@@ -64,7 +64,8 @@ def init_moe(rng, h: MoEHyper, dtype) -> dict:
 def apply_moe(p: dict, x, h: MoEHyper, rules: ShardingRules):
     """x: (B, S, D) -> (B, S, D).  Per-row capacity-dropping dispatch."""
     if h.late_combine:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.distributed.sharding import current_mesh
+        mesh = current_mesh()
         if not mesh.empty and "model" in mesh.axis_names \
                 and mesh.shape["model"] > 1 \
                 and rules.rules.get("d_ff") == "model":

@@ -1,10 +1,17 @@
 """Inference engine: continuous batching with an HCache restoration phase.
 
-Request lifecycle (paper §5):
+Request lifecycle (paper §5, DESIGN.md §6):
 
     WAITING -> [RESTORING]   if the session has evicted state in the store,
-                             run the bubble-free restoration and place the
-                             rebuilt KV/states into the sequence's slot;
+                             an incremental RestorationExecutor runs a
+                             bounded number of pipeline tasks per engine
+                             step, writing each finished layer straight
+                             into the sequence's batch-slot buffers. Any
+                             number of sessions restore concurrently, and
+                             restoring sessions never block the decode
+                             batch of active ones. Queued sessions with
+                             stored state get their first hidden-layer IO
+                             prefetched before a slot even frees;
             -> PREFILL       chunked prompt prefill (SplitFuse-style: at most
                              ``prefill_chunk`` prompt tokens per engine step,
                              so decode iterations stay interleaved);
@@ -20,7 +27,8 @@ session (`recoverable_sessions`) — serving-side fault tolerance is HCache
 itself.
 
 Metrics per request: wall TTFT, simulated restoration time (hardware
-profile), TBT; engine-level counters for the benchmark harness.
+profile, restored sessions only), TBT; engine-level counters for the
+benchmark harness.
 """
 from __future__ import annotations
 
@@ -34,7 +42,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hcache import HCacheManager
-from repro.core.pipeline import Timeline
 from repro.models.model import Model
 from repro.serving.request import Phase, Request, SequenceState
 from repro.serving.sampling import sample
@@ -43,18 +50,62 @@ from repro.serving.sampling import sample
 @dataclasses.dataclass
 class EngineMetrics:
     ttft_wall: List[float] = dataclasses.field(default_factory=list)
+    # two TTFT populations: sessions that went through restoration vs
+    # cold starts. ``ttft_sim`` holds simulated restoration makespans for
+    # restored sessions ONLY (a cold start has no restoration to
+    # simulate; recording 0.0 for it would pollute the mean).
     ttft_sim: List[float] = dataclasses.field(default_factory=list)
+    ttft_wall_restored: List[float] = dataclasses.field(default_factory=list)
+    ttft_wall_cold: List[float] = dataclasses.field(default_factory=list)
     tbt_wall: List[float] = dataclasses.field(default_factory=list)
     restored_tokens: int = 0
+    restore_steps: int = 0              # engine steps that ran restore tasks
+    restore_io_measured: float = 0.0    # striped-device completion (sim SSD)
     decode_steps: int = 0
     snapshot_cost: float = 0.0
+
+
+class _SlotSink:
+    """RestoreSink writing restored pieces directly into the engine's
+    batch-slot cache buffers — per layer, as each finishes; there is no
+    intermediate B=1 cache."""
+
+    def __init__(self, engine: "InferenceEngine", slot: int):
+        self.engine = engine
+        self.slot = slot
+
+    def put_kv(self, row, k, v):
+        eng = self.engine
+        k_name, v_name = {"lm": ("k", "v"),
+                          "hybrid": ("attn_k", "attn_v"),
+                          "encdec": ("self_k", "self_v")}[eng.model.kind]
+        row = jnp.asarray(row)                # traced: no recompile per row
+        slot = jnp.asarray(self.slot)
+        for name, val in ((k_name, k), (v_name, v)):
+            buf = eng.cache[name]
+            val = jnp.asarray(val, buf.dtype)[None]       # (1, 1, n, H, hd)
+            eng.cache[name] = eng._slot_update(buf, val, row, slot)
+
+    def put_states(self, conv, ssm):
+        self.engine._place_cache(self.slot, {"conv": conv, "ssm": ssm}, 0)
+
+    def put_cross(self, ck, cv, enc_len):
+        self.engine._place_cache(self.slot, {"cross_k": ck, "cross_v": cv,
+                                             "enc_len": jnp.asarray(
+                                                 enc_len, jnp.int32)}, 0)
+
+    def finish(self, n_tokens):
+        eng = self.engine
+        eng.cache["lengths"] = eng.cache["lengths"].at[self.slot].set(
+            n_tokens)
 
 
 class InferenceEngine:
     def __init__(self, model: Model, params, manager: HCacheManager, *,
                  max_batch: int = 4, max_seq: int = 512,
                  prefill_chunk: int = 128, save_hidden: bool = True,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, restore_tasks_per_step: int = 8,
+                 prefetch_sessions: int = 2):
         self.model = model
         self.params = params
         self.mgr = manager
@@ -63,14 +114,24 @@ class InferenceEngine:
         self.prefill_chunk = prefill_chunk
         self.save_hidden = save_hidden
         self.temperature = temperature
+        self.restore_tasks_per_step = restore_tasks_per_step
+        self.prefetch_sessions = prefetch_sessions
 
         self.cache = model.init_cache(max_batch, max_seq)
         self.queue: deque = deque()
         self.slots: List[Optional[SequenceState]] = [None] * max_batch
         self.sessions: Dict[str, SequenceState] = {}
+        self._prefetch: Dict[str, object] = {}   # session -> warm executor
         self.metrics = EngineMetrics()
         self.step_count = 0
         self._decode = jax.jit(model.decode_step_full)
+        # donated so XLA updates the stacked KV buffer in place — a
+        # per-layer restore write must not copy the whole (L,B,S,H,hd)
+        # cache (retraces only per distinct restored length n)
+        self._slot_update = jax.jit(
+            lambda buf, val, row, slot: jax.lax.dynamic_update_slice(
+                buf, val, (row, slot, 0, 0, 0)),
+            donate_argnums=(0,))
 
     # ----------------------------------------------------------- submission
     def submit(self, request: Request) -> SequenceState:
@@ -93,30 +154,79 @@ class InferenceEngine:
         while self.queue:
             slot = self._free_slot()
             if slot is None:
-                return
+                break
             seq = self.queue.popleft()
             seq.slot = slot
             self.slots[slot] = seq
-            self.sessions[seq.request.session_id] = seq
-            if self.mgr.store.get_manifest(seq.request.session_id):
+            sid = seq.request.session_id
+            self.sessions[sid] = seq
+            manifest = self.mgr.store.get_manifest(sid)
+            if manifest:
                 seq.phase = Phase.RESTORING
-                self._restore(seq)
+                ex = self._prefetch.pop(sid, None)
+                if ex is not None and (
+                        ex.n_tokens != int(manifest["n_tokens"])
+                        or list(ex.methods) != list(manifest["methods"])):
+                    # the session saved more state after the prefetch
+                    # started (e.g. its previous turn retired in between):
+                    # the warm executor is stale — restart from the
+                    # current manifest
+                    ex = None
+                if ex is None:
+                    ex = self.mgr.begin_restore(self.params, sid)
+                ex.attach_sink(_SlotSink(self, slot))
+                seq.executor = ex
+                # reserve [0, n) now: concurrent decode steps park their
+                # scratch KV write at position n (later overwritten by
+                # this session's own prefill), never inside the restored
+                # range
+                self.cache["lengths"] = self.cache["lengths"].at[slot].set(
+                    ex.n_tokens)
             else:
                 seq.phase = Phase.PREFILL
-            self._prefill_step(seq)
+                self._prefill_step(seq)
+        self._prefetch_queued()
 
     # ----------------------------------------------------------- restoration
-    def _restore(self, seq: SequenceState) -> None:
-        res = self.mgr.restore(self.params, seq.request.session_id)
-        seq.history_len = res.n_tokens
-        seq.restore_sim = res.timeline.makespan
-        seq.restore_wall = res.wall_time
-        self.metrics.restored_tokens += res.n_tokens
-        self._place_cache(seq.slot, res.cache, res.n_tokens)
-        seq.phase = Phase.PREFILL
+    def _prefetch_queued(self) -> None:
+        """Warm the first IO reads of queued sessions with stored state
+        before a slot frees (their executor starts part-done on admit)."""
+        for seq in list(self.queue)[:self.prefetch_sessions]:
+            sid = seq.request.session_id
+            ex = self._prefetch.get(sid)
+            if ex is None and self.mgr.store.get_manifest(sid):
+                ex = self.mgr.begin_restore(self.params, sid)
+                self._prefetch[sid] = ex
+            if ex is not None:
+                ex.prefetch_step(1)
+
+    def _restore_step(self) -> None:
+        """Advance every RESTORING session by a bounded number of pipeline
+        tasks. Several sessions restore concurrently; the decode batch of
+        active sessions runs in the same engine step regardless."""
+        ran = False
+        for seq in self.slots:
+            if seq is None or seq.phase != Phase.RESTORING:
+                continue
+            ran = True
+            if seq.executor.step(self.restore_tasks_per_step):
+                ex = seq.executor
+                seq.executor = None
+                seq.restored = True
+                seq.history_len = ex.n_tokens
+                seq.restore_sim = ex.timeline().makespan
+                seq.restore_wall = ex.wall_time
+                self.metrics.restored_tokens += ex.n_tokens
+                self.metrics.restore_io_measured = max(
+                    self.metrics.restore_io_measured, ex.io_measured)
+                seq.phase = Phase.PREFILL
+        if ran:
+            self.metrics.restore_steps += 1
 
     def _place_cache(self, slot: int, piece: dict, n: int) -> None:
-        """Copy a restored (B=1) cache into the batch slot."""
+        """Place whole-object cache pieces (SSM states, cross KV) into the
+        batch slot. Attention KV lands per layer via ``_SlotSink.put_kv``;
+        there is no stacked B=1 cache copy anywhere in the engine."""
         for key, val in piece.items():
             if key == "lengths":
                 self.cache["lengths"] = self.cache["lengths"].at[slot].set(n)
@@ -125,10 +235,7 @@ class InferenceEngine:
             if buf is None:
                 continue
             val = jnp.asarray(val, buf.dtype)
-            if key in ("k", "v", "attn_k", "attn_v", "self_k", "self_v"):
-                self.cache[key] = jax.lax.dynamic_update_slice(
-                    buf, val, (0, slot, 0) + (0,) * (buf.ndim - 3))
-            elif key in ("conv", "ssm"):
+            if key in ("conv", "ssm"):
                 idx = (0,) * (buf.ndim - val.ndim + 1)
                 bdim = buf.ndim - val.ndim + 1  # batch dim position
                 self.cache[key] = jax.lax.dynamic_update_slice(
@@ -212,7 +319,11 @@ class InferenceEngine:
             seq.first_token_step = self.step_count
             seq.ttft_wall = time.perf_counter() - seq.request.arrival_time
             self.metrics.ttft_wall.append(seq.ttft_wall)
-            self.metrics.ttft_sim.append(seq.restore_sim)
+            if seq.restored:
+                self.metrics.ttft_sim.append(seq.restore_sim)
+                self.metrics.ttft_wall_restored.append(seq.ttft_wall)
+            else:
+                self.metrics.ttft_wall_cold.append(seq.ttft_wall)
 
     def _decode_batch(self) -> None:
         active = [s for s in self.slots
@@ -279,6 +390,7 @@ class InferenceEngine:
     def step(self) -> None:
         self.step_count += 1
         self._admit()
+        self._restore_step()
         for s in list(self.slots):
             if s is not None and s.phase == Phase.PREFILL:
                 self._prefill_step(s)

@@ -37,6 +37,9 @@ class SequenceState:
     history_len: int = 0                     # restored tokens
     prefill_done: int = 0                    # prompt tokens processed
     generated: List[int] = dataclasses.field(default_factory=list)
+    # incremental restoration (core/restoration.py); set while RESTORING
+    executor: Optional[object] = None
+    restored: bool = False                   # completed a restoration
     # metrics
     ttft_wall: Optional[float] = None
     restore_sim: float = 0.0                 # simulated restoration seconds

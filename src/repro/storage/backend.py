@@ -18,7 +18,7 @@ import dataclasses
 import os
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -33,6 +33,24 @@ class Backend:
 
     def read(self, key: str) -> np.ndarray:
         raise NotImplementedError
+
+    def read_async(self, key: str) -> "Tuple[np.ndarray, float]":
+        """Read + the device-local virtual completion time of this IO.
+
+        Devices without a timing model complete instantly (0.0). The
+        restoration executor uses the completion times to interleave
+        striped reads with compute (see core/restoration.py)."""
+        return self.read(key), 0.0
+
+    def peek(self, key: str) -> np.ndarray:
+        """Metadata-path read: no virtual-clock charge on timed devices
+        (availability checks must not perturb the IO simulation)."""
+        return self.read(key)
+
+    def nrows(self, key: str) -> int:
+        """Stored row count (first dim) without paying for a data read
+        where the backend can avoid it."""
+        return self.peek(key).shape[0]
 
     def delete(self, key: str) -> None:
         raise NotImplementedError
@@ -117,6 +135,12 @@ class SimulatedSSD(DRAMBackend):
         self.read_time_total += dur
         return data
 
+    def read_async(self, key):
+        return self.read(key), self.clock.read_busy_until
+
+    def peek(self, key):
+        return DRAMBackend.read(self, key)        # no clock charge
+
     def read_completion(self) -> float:
         return self.clock.read_busy_until
 
@@ -149,6 +173,10 @@ class FileBackend(Backend):
 
     def contains(self, key):
         return os.path.exists(self._path(key))
+
+    def nrows(self, key):
+        # mmap reads only the npy header, not the chunk data
+        return np.load(self._path(key), mmap_mode="r").shape[0]
 
     def keys(self):
         return [f[:-4].replace("__", "/") for f in os.listdir(self.root)

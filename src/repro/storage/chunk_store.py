@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
+import urllib.parse
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,12 +37,31 @@ from repro.config.hardware import TPU_CHUNK_TOKENS
 from repro.storage.backend import Backend, SimulatedSSD
 
 
+def _enc(session: str) -> str:
+    """Key-encode a session id: ids may contain '/' (e.g. tenant/user),
+    which would collide with the key separator."""
+    return urllib.parse.quote(session, safe="")
+
+
 def _key(session: str, stream: str, layer: int, chunk: int) -> str:
-    return f"{session}/{stream}/L{layer}/C{chunk}"
+    return f"{_enc(session)}/{stream}/L{layer}/C{chunk}"
 
 
 def _meta_key(session: str) -> str:
-    return f"{session}/meta/L0/C0"
+    return f"{_enc(session)}/meta/L0/C0"
+
+
+@dataclasses.dataclass
+class AsyncRead:
+    """A batched striped layer read + its virtual completion times.
+
+    ``completion`` is the max over the per-device read clocks touched by
+    this read (0.0 for backends without a timing model) — the moment the
+    restoration executor may consume ``data``."""
+
+    data: np.ndarray
+    completion: float
+    device_completions: List[float]
 
 
 @dataclasses.dataclass
@@ -135,19 +155,59 @@ class ChunkStore:
         With SimulatedSSD devices the per-device clocks advance in parallel
         (round-robin striping aggregates bandwidth); completion time is
         queried via ``read_completion``."""
+        return self.read_layer_async(session, stream, layer, n_tokens).data
+
+    def read_layer_async(self, session: str, stream: str, layer: int,
+                         n_tokens: int) -> AsyncRead:
+        """Batched striped read of one layer with completion times.
+
+        Issues every chunk read up front (each device queues its own IOs
+        on its clock) and returns the assembled array plus the per-device
+        virtual completion times — the executor overlaps compute with the
+        stripe instead of re-simulating the IO separately."""
         C = self.chunk_tokens
         n_chunks = (n_tokens + C - 1) // C
         parts = []
+        completions = []
         for ci in range(n_chunks):
-            parts.append(self._device_for(layer, ci).read(
-                _key(session, stream, layer, ci)))
+            data, done = self._device_for(layer, ci).read_async(
+                _key(session, stream, layer, ci))
+            parts.append(data)
+            completions.append(done)
         out = np.concatenate(parts, axis=0)
-        return out[:n_tokens]
+        return AsyncRead(out[:n_tokens], max(completions, default=0.0),
+                         completions)
 
-    def layer_available(self, session: str, stream: str, layer: int) -> bool:
-        return self._device_for(layer, 0).contains(
-            _key(session, stream, layer, 0)) or (
-            (session, stream, layer) in self._partials)
+    def layer_available(self, session: str, stream: str, layer: int,
+                        n_tokens: int = 1) -> bool:
+        """True when the chunks covering tokens [0, n_tokens) exist.
+
+        Checking chunk 0 alone is wrong for multi-chunk layers: a crash
+        mid-save leaves a prefix of chunks, and the restore path must not
+        claim the full range is readable."""
+        C = self.chunk_tokens
+        n_chunks = max((n_tokens + C - 1) // C, 1)
+        with self._lock:
+            part = self._partials.get((session, stream, layer))
+            part_start = part.start_token if part is not None else None
+            part_end = (part.start_token + part.n
+                        if part is not None else None)
+        for ci in range(n_chunks):
+            lo = ci * C
+            hi = min(n_tokens, lo + C)
+            dev = self._device_for(layer, ci)
+            kstr = _key(session, stream, layer, ci)
+            # the stream's final chunk is stored at its true (short)
+            # length — existence alone does not cover the range
+            if dev.contains(kstr) and lo + dev.nrows(kstr) >= hi:
+                continue
+            # staged (unflushed) rows are chunk-aligned and include any
+            # recovered flushed prefix, so they cover [part_start, part_end)
+            if (part_start is not None and part_start <= lo
+                    and part_end >= hi):
+                continue
+            return False
+        return True
 
     # ------------------------------------------------------------- manifest
     def put_manifest(self, session: str, manifest: dict) -> None:
@@ -165,7 +225,7 @@ class ChunkStore:
         for d in self.devices:
             for k in d.keys():
                 if "/meta/" in k:
-                    out.add(k.split("/")[0])
+                    out.add(urllib.parse.unquote(k.split("/")[0]))
         return sorted(out)
 
     # -------------------------------------------------------------- eviction
@@ -174,9 +234,10 @@ class ChunkStore:
             for key in list(self._partials):
                 if key[0] == session:
                     del self._partials[key]
+        prefix = _enc(session) + "/"
         for d in self.devices:
             for k in d.keys():
-                if k.startswith(session + "/"):
+                if k.startswith(prefix):
                     d.delete(k)
 
     # -------------------------------------------------------------- accounting

@@ -1,0 +1,108 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The container image does not ship hypothesis, and tier-1 must still
+collect and run every module. The shim keeps the property tests
+meaningful by drawing a fixed number of pseudo-random examples per test
+(seeded, so failures reproduce) instead of hypothesis' guided search.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: rng.choice(opts))
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def builds(target, *args, **kwargs):
+        def draw(rng):
+            a = [s.example(rng) for s in args]
+            kw = {k: s.example(rng) for k, s in kwargs.items()}
+            return target(*a, **kw)
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+    def wrap(fn):
+        fn._max_examples = max_examples
+        return fn
+    return wrap
+
+
+def given(*arg_strats, **kw_strats):
+    def wrap(fn):
+        inner = fn
+        sig = inspect.signature(inner)
+        params = list(sig.parameters.values())
+        # hypothesis maps positional strategies onto the RIGHTMOST
+        # parameters; the rest (minus kw-strategy names) are pytest
+        # fixtures and must stay visible in the test signature.
+        covered = {p.name for p in params[len(params) - len(arg_strats):]}
+        covered |= set(kw_strats)
+        fixture_params = [p for p in params if p.name not in covered]
+
+        @functools.wraps(inner)
+        def runner(*fixture_args, **fixture_kw):
+            n = getattr(runner, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0)
+            for i in range(n):
+                a = [s.example(rng) for s in arg_strats]
+                kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    inner(*fixture_args, *a, **fixture_kw, **kw)
+                except Exception:
+                    print(f"falsifying example (shim, draw {i}): "
+                          f"args={a} kwargs={kw}")
+                    raise
+        del runner.__wrapped__              # keep pytest off inner's sig
+        runner.__signature__ = sig.replace(parameters=fixture_params)
+        return runner
+    return wrap
+
+
+__all__ = ["given", "settings", "strategies"]

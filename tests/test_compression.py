@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis - seeded shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.distributed.compression import (dequantize_int8, quantize_int8,
                                            tree_cast_bf16)

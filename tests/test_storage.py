@@ -1,7 +1,10 @@
 """Chunk store + two-stage saver: roundtrips, striping, resume, hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis - seeded shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.storage import (ChunkStore, DirectSaver, SimulatedSSD,
                            SnapshotTask, TwoStageSaver, make_array)
@@ -89,6 +92,53 @@ def test_append_roundtrip_property(chunk, pieces, width):
         off += n
     store.flush("s")
     np.testing.assert_array_equal(store.read_layer("s", "h", 0, total), data)
+
+
+def test_session_id_with_slash():
+    """Session ids containing '/' (tenant/user) must not collide with the
+    key separator: listing, reading and dropping all work."""
+    store = make_store(chunk=8)
+    sid = "tenant/alice/chat-1"
+    store.append_tokens(sid, "h", 0, 0, np.ones((8, 2), np.float32))
+    store.flush(sid)
+    store.put_manifest(sid, {"n_tokens": 8, "methods": ["hidden"]})
+    store.put_manifest("bob", {"n_tokens": 1, "methods": []})
+    assert store.sessions() == ["bob", sid]
+    np.testing.assert_array_equal(store.read_layer(sid, "h", 0, 8),
+                                  np.ones((8, 2), np.float32))
+    store.drop_session(sid)
+    assert store.sessions() == ["bob"]
+    assert store.get_manifest(sid) is None
+
+
+def test_layer_available_checks_covering_chunks():
+    """layer_available must check the chunks covering the queried range,
+    not only chunk 0 (a crash mid-save leaves a prefix of chunks)."""
+    store = make_store(chunk=8)
+    store.append_tokens("s", "h", 0, 0, np.ones((12, 2), np.float32))
+    store.flush("s")                       # chunks 0 (full) + 1 (partial)
+    assert store.layer_available("s", "h", 0)
+    assert store.layer_available("s", "h", 0, n_tokens=12)
+    # range ends inside the flushed short chunk: NOT available
+    assert not store.layer_available("s", "h", 0, n_tokens=16)
+    assert not store.layer_available("s", "h", 0, n_tokens=20)
+    assert not store.layer_available("s", "h", 1)
+    # unflushed partial covering the range counts too
+    store.append_tokens("s", "h", 1, 0, np.ones((5, 2), np.float32))
+    assert store.layer_available("s", "h", 1, n_tokens=5)
+
+
+def test_read_layer_async_completions():
+    """The batched async read reports per-device completion times that
+    aggregate striped bandwidth."""
+    store = make_store(n_dev=4, chunk=16, kind="ssd")
+    store.append_tokens("s", "h", 0, 0, np.ones((64, 32), np.float16))
+    store.flush("s")
+    store.sync_clocks(0.0)
+    r = store.read_layer_async("s", "h", 0, 64)
+    assert r.data.shape == (64, 32)
+    assert len(r.device_completions) == 4
+    assert r.completion == max(r.device_completions) > 0
 
 
 def test_simulated_ssd_bandwidth_aggregation():

@@ -92,7 +92,8 @@ def test_dryrun_cell_on_small_mesh(rules):
     mesh = make_mesh((1, 1), ("data", "model"))
     cfg = reduced_for_smoke(get_arch("qwen2-7b"))
     shape = InputShape("tiny_train", 32, 2, "train")
-    with jax.set_mesh(mesh):
+    from repro.distributed.sharding import mesh_context
+    with mesh_context(mesh):
         fn, args, shardings, donate = build_cell(mesh, cfg, shape, "base")
         compiled = jax.jit(fn, in_shardings=shardings,
                            donate_argnums=donate).lower(*args).compile()
