@@ -6,7 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Run:
 
 ``--smoke`` runs the fast analytic suites only (CI gate). ``--mode
 bench_restoration`` compares blocking vs pipelined restoration TTFT from
-the executor's task graph and writes BENCH_restoration.json.
+the executor's task graph and writes BENCH_restoration.json. ``--mode
+bench_capacity`` runs the capacity bake-off (mid-stream eviction policy
+comparison + host-budget degradation) and writes BENCH_capacity.json.
 """
 from __future__ import annotations
 
@@ -36,16 +38,25 @@ def main() -> None:
                    help="comma-separated substring filters")
     p.add_argument("--smoke", action="store_true",
                    help="fast analytic suites only (CI)")
-    p.add_argument("--mode", default=None, choices=["bench_restoration"],
+    p.add_argument("--mode", default=None,
+                   choices=["bench_restoration", "bench_capacity"],
                    help="special modes: bench_restoration compares "
                         "blocking vs pipelined TTFT -> "
-                        "BENCH_restoration.json")
+                        "BENCH_restoration.json; bench_capacity runs the "
+                        "eviction-policy + host-budget bake-off -> "
+                        "BENCH_capacity.json")
     args = p.parse_args()
     print("name,us_per_call,derived")
     if args.mode == "bench_restoration":
         from benchmarks.bench_restoration import run_pipeline_comparison
         rows = run_pipeline_comparison()
         print(f"# {len(rows)} rows -> BENCH_restoration.json",
+              file=sys.stderr)
+        return
+    if args.mode == "bench_capacity":
+        from benchmarks.bench_capacity import run_capacity_comparison
+        rows = run_capacity_comparison()
+        print(f"# {len(rows)} rows -> BENCH_capacity.json",
               file=sys.stderr)
         return
     filters = args.only.split(",") if args.only else None

@@ -1,0 +1,269 @@
+"""Capacity-driven session lifecycle policies (DESIGN.md §8).
+
+HCache exists because GPU memory holds only a few contexts; this module
+is the *policy layer* that turns the restoration mechanism into a
+capacity-managed serving system:
+
+  * ``AdmissionPolicy``   — which queued session gets the next free batch
+                            slot (FIFO, restore-cost-aware/SJF, priority);
+  * ``EvictionPolicy``    — which resident session is paused mid-stream
+                            when the queue is backed up (LRU by admission
+                            recency, restore-cost-weighted);
+  * ``CapacityManager``   — host-storage byte budget enforcement: when
+                            ``ChunkStore.bytes_used`` exceeds the budget,
+                            idle sessions degrade down a ladder —
+                            hot->cold tier demotion, fp16->int8 hidden
+                            re-encode, hidden->token-only (restore by
+                            recompute), and finally outright drop.
+
+Policies are duck-typed over the engine's ``SequenceState`` (this module
+never imports ``repro.serving``); restore-cost estimates come from the
+same compiled task graph the executor runs (``core.restoration``), so a
+policy's notion of "cheap to restore" and the engine's actual
+restoration cost cannot drift apart.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import layer_costs, method_times
+from repro.core.restoration import compile_tasks, replay
+
+
+# ----------------------------------------------------- restore-cost estimate
+def restore_makespan(mgr, n_tokens: int,
+                     methods: Optional[Sequence[str]] = None) -> float:
+    """Estimated restoration makespan (seconds under ``mgr.hw``) for a
+    session of ``n_tokens`` — the two-stream replay of the same task
+    graph the executor would run."""
+    if n_tokens <= 0:
+        return 0.0
+    if methods is None:
+        methods = mgr.plan(n_tokens).methods
+    times = [method_times(c, mgr.hw)
+             for c in layer_costs(mgr.cfg, n_tokens, mgr.dtype_bytes)]
+    return replay(compile_tasks(tuple(methods)), times).makespan
+
+
+def session_restore_cost(mgr, session_id: str) -> float:
+    """Makespan estimate for a *stored* session, from its manifest
+    (0.0 for a cold session with no stored state)."""
+    man = mgr.store.get_manifest(session_id)
+    if not man:
+        return 0.0
+    return restore_makespan(mgr, int(man.get("n_tokens", 0)),
+                            man.get("methods"))
+
+
+# ------------------------------------------------------------- admission
+class AdmissionPolicy:
+    """Picks which queued sequence is admitted into a free batch slot."""
+
+    name = "admission"
+
+    def select(self, queue: Sequence, engine):
+        raise NotImplementedError
+
+
+class FIFOAdmission(AdmissionPolicy):
+    name = "fifo"
+
+    def select(self, queue, engine):
+        return queue[0] if queue else None
+
+
+class RestoreCostAwareAdmission(AdmissionPolicy):
+    """Shortest-restore-first: admit the session whose time-to-resume is
+    smallest (cold sessions estimate 0 — prompt prefill is paid either
+    way). Minimizes mean TTFT at the cost of fairness; pair with a
+    preemption quantum to bound starvation."""
+
+    name = "restore_cost"
+
+    def select(self, queue, engine):
+        if not queue:
+            return None
+        return min(queue, key=lambda s: (
+            session_restore_cost(engine.mgr, s.request.session_id),
+            s.request.request_id))
+
+
+class PriorityAdmission(AdmissionPolicy):
+    """Highest ``Request.priority`` first; FIFO within a priority tier."""
+
+    name = "priority"
+
+    def select(self, queue, engine):
+        if not queue:
+            return None
+        return max(queue, key=lambda s: (s.request.priority,
+                                         -s.request.request_id))
+
+
+# -------------------------------------------------------------- eviction
+class EvictionPolicy:
+    """Picks the resident victim to pause when the queue is backed up."""
+
+    name = "eviction"
+
+    def select_victim(self, candidates: Sequence, engine):
+        raise NotImplementedError
+
+
+class LRUEviction(EvictionPolicy):
+    """Evict the longest-resident session (earliest admission). With a
+    FIFO queue this degenerates to round-robin time slicing."""
+
+    name = "lru"
+
+    def select_victim(self, candidates, engine):
+        if not candidates:
+            return None
+        return min(candidates, key=lambda s: (s.admit_step,
+                                              s.request.request_id))
+
+
+class RestoreCostAwareEviction(EvictionPolicy):
+    """Evict the session that will be cheapest to bring back: its future
+    restoration covers ``total_len - 1`` tokens (the last sampled token
+    is re-fed, not restored). Keeps the expensive long-history sessions
+    resident, so the restore traffic the eviction churn generates is
+    minimized — the knob ``bench_capacity`` compares against LRU."""
+
+    name = "restore_cost"
+
+    def select_victim(self, candidates, engine):
+        if not candidates:
+            return None
+        return min(candidates, key=lambda s: (
+            restore_makespan(engine.mgr, max(s.total_len - 1, 0)),
+            s.request.request_id))
+
+
+EVICTION_POLICIES = {"lru": LRUEviction,
+                     "restore_cost": RestoreCostAwareEviction}
+ADMISSION_POLICIES = {"fifo": FIFOAdmission,
+                      "restore_cost": RestoreCostAwareAdmission,
+                      "priority": PriorityAdmission}
+
+
+# ------------------------------------------------------------ capacity
+class CapacityManager:
+    """Host-storage budget enforcement + per-session footprint tracking.
+
+    Wired two ways (both optional, both safe together):
+
+      * engine-driven — ``maintain(engine)`` once per engine step keeps
+        recency fresh and runs the reclaim ladder;
+      * store-driven  — when the hot tier is a ``StorageArray`` with a
+        ``budget_bytes``, the manager registers a pressure callback so a
+        write burst (e.g. the two-stage saver draining) triggers reclaim
+        without waiting for the next engine step.
+
+    Resident and prefetching sessions are protected: their streams are
+    being appended to / read from and must not be re-encoded under a
+    live executor. The ladder stages, mildest first:
+
+      cold       move all chunks hot->cold tier (needs ``store.cold``)
+      int8       re-encode 'h' fp16 -> int8 (+ per-token scales)
+      recompute  drop 'h'/'kv' streams; token-only, restore by recompute
+      drop       evict the session outright (last resort)
+    """
+
+    LADDER = ("cold", "int8", "recompute", "drop")
+
+    def __init__(self, mgr, *, host_budget_bytes: Optional[int] = None,
+                 ladder: Sequence[str] = LADDER):
+        self.mgr = mgr
+        self.store = mgr.store
+        self.ladder = tuple(ladder)
+        self.host_budget_bytes = host_budget_bytes
+        self.actions: List[Tuple[str, str]] = []   # (stage, session) log
+        self._last_active: Dict[str, int] = {}
+        self._engine = None
+        self._reclaiming = False
+        array = self.store.devices
+        if hasattr(array, "on_pressure"):
+            if host_budget_bytes is not None:
+                array.budget_bytes = host_budget_bytes
+            elif array.budget_bytes is not None:
+                self.host_budget_bytes = array.budget_bytes
+            array.on_pressure(lambda _arr: self.ensure_host_budget())
+
+    # ------------------------------------------------------------ tracking
+    def attach_engine(self, engine) -> None:
+        self._engine = engine
+
+    def touch(self, session_id: str, step: int) -> None:
+        self._last_active[session_id] = step
+
+    def over_budget(self) -> bool:
+        return (self.host_budget_bytes is not None
+                and self.store.bytes_used > self.host_budget_bytes)
+
+    def footprint(self, session_id: str) -> int:
+        return self.store.bytes_for(session_id)
+
+    def _protected(self) -> set:
+        """Sessions the ladder must not touch: resident (streams being
+        appended), prefetching (a live executor reads their chunks), and
+        queued (in-flight requests — dropping a PAUSED session's stored
+        state would silently lose its history)."""
+        eng = self._engine
+        if eng is None:
+            return set()
+        resident = {s.request.session_id for s in eng.slots if s is not None}
+        queued = {s.request.session_id for s in eng.queue}
+        return resident | queued | set(eng._prefetch)
+
+    def _candidates(self, protected: set) -> List[str]:
+        """Evictable stored sessions, coldest (least recently active)
+        first; never-seen sessions sort coldest of all."""
+        sids = [s for s in self.store.sessions() if s not in protected]
+        return sorted(sids, key=lambda s: (self._last_active.get(s, -1), s))
+
+    # ------------------------------------------------------------- reclaim
+    def maintain(self, engine) -> None:
+        """Per-engine-step upkeep: refresh recency for resident sessions
+        and enforce the budget."""
+        for s in engine.slots:
+            if s is not None:
+                self.touch(s.request.session_id, engine.step_count)
+        self.ensure_host_budget()
+
+    def _apply(self, stage: str, sid: str) -> bool:
+        if stage == "cold":
+            return self.store.demote_session_to_cold(sid) > 0
+        if stage == "int8":
+            return self.mgr.demote_hidden_int8(sid)
+        if stage == "recompute":
+            return self.mgr.degrade_to_recompute(sid)
+        if stage == "drop":
+            self._last_active.pop(sid, None)
+            self.mgr.evict(sid)
+            return True
+        raise ValueError(stage)
+
+    def ensure_host_budget(self, protected: Sequence[str] = ()) -> int:
+        """Walk the demotion ladder, coldest sessions first within each
+        stage, until the hot tier fits the budget (or nothing evictable
+        remains — resident sessions alone may exceed it). Returns the
+        number of actions taken."""
+        if self._reclaiming or not self.over_budget():
+            return 0
+        self._reclaiming = True
+        taken = 0
+        try:
+            prot = set(protected) | self._protected()
+            for stage in self.ladder:
+                for sid in self._candidates(prot):
+                    if not self.over_budget():
+                        return taken
+                    if self._apply(stage, sid):
+                        self.actions.append((stage, sid))
+                        taken += 1
+                if not self.over_budget():
+                    return taken
+        finally:
+            self._reclaiming = False
+        return taken

@@ -52,16 +52,29 @@ class HCacheManager:
     def __init__(self, model: Model, store: ChunkStore, *,
                  hw: HardwareProfile = TPU_V5E, saver: Optional[TwoStageSaver]
                  = None, compress: str = "none", dtype_bytes: int = 2,
-                 schedule_override: Optional[str] = None):
+                 schedule_override: Optional[str] = None,
+                 store_dtype=np.float16):
         self.model = model
         self.cfg = model.cfg
         self.store = store
         self.hw = hw
+        # dtype of stored hidden states. fp16 is the paper's setting (its
+        # models run fp16, so storage is lossless); when the functional
+        # model runs fp32, passing float32 makes pause/restore cycles
+        # bit-exact at 2x the 'h' footprint.
+        self.store_dtype = store_dtype
         self.saver = saver or TwoStageSaver(store)
         self.compress = compress
         self.dtype_bytes = dtype_bytes
         self.schedule_override = schedule_override   # None|hidden|kv|recompute
         self._plans: Dict[int, Schedule] = {}
+        # per-session compression overrides (capacity demotion ladder);
+        # synced from the manifest on resume so a fresh manager over a
+        # demoted store keeps appending in the session's stored codec
+        self._session_compress: Dict[str, str] = {}
+
+    def _compress_for(self, session: str) -> str:
+        return self._session_compress.get(session, self.compress)
 
     # ------------------------------------------------------------- planning
     def plan(self, n_tokens: int) -> Schedule:
@@ -103,12 +116,23 @@ class HCacheManager:
     def save_prefill(self, session: str, tokens: np.ndarray, prefill_out:
                      dict, *, start: int = 0) -> None:
         """Persist one sequence's prefill state (B must be 1 in `out`)."""
-        sched = self.plan(start + tokens.shape[-1])
+        prev = self.store.get_manifest(session) if start > 0 else None
+        if prev and prev.get("methods"):
+            # a resumed session must keep appending under its stored
+            # per-layer methods and codec: re-planning could flip a layer
+            # hidden<->kv across a bucket boundary (or fight a capacity
+            # demotion) and leave the stream with a hole at [0, start)
+            methods = list(prev["methods"])
+            comp = prev.get("compress", self.compress)
+            if comp != self.compress:
+                self._session_compress[session] = comp
+        else:
+            methods = list(self.plan(start + tokens.shape[-1]).methods)
         toks = np.asarray(tokens).reshape(-1)
         self.store.put_blob(session, "tok", 0, toks if start == 0 else
                             np.concatenate([self._tokens(session), toks]))
         kinds = self.cfg.block_kinds()
-        for li, method in enumerate(sched.methods):
+        for li, method in enumerate(methods):
             if kinds[li] != BlockKind.ATTENTION:
                 continue  # SSM layers handled via state blobs below
             if method == "hidden":
@@ -127,8 +151,8 @@ class HCacheManager:
         self.store.flush(session)
         self.store.put_manifest(session, {
             "n_tokens": int(start + tokens.shape[-1]),
-            "methods": list(sched.methods),
-            "arch": self.cfg.name, "compress": self.compress,
+            "methods": methods,
+            "arch": self.cfg.name, "compress": self._compress_for(session),
         })
 
     def save_session_pause(self, session: str, cache: dict,
@@ -175,13 +199,13 @@ class HCacheManager:
 
     def _append_hidden(self, session: str, layer: int, start: int,
                        h: np.ndarray) -> None:
-        if self.compress == "int8":
+        if self._compress_for(session) == "int8":
             q, scale = quantize_hidden_int8(h)
             self.store.append_tokens(session, "h", layer, start, q)
             self.store.append_tokens(session, "hs", layer, start, scale)
         else:
             self.store.append_tokens(session, "h", layer, start,
-                                     h.astype(np.float16))
+                                     h.astype(self.store_dtype))
 
     def _save_ssm_states(self, session: str, out: dict) -> None:
         states = out.get("states") or out.get("mamba_states")
@@ -200,11 +224,32 @@ class HCacheManager:
         h = np.asarray(hidden)
         L = h.shape[0]
         cost = 0.0
+        starts = [int(x) for x in lengths]
+        ids = list(session_ids)
+        # sessions demoted to the int8 codec must keep their 'h' stream
+        # dtype-consistent: quantize their rows before the snapshot and
+        # route the scales to 'hs' (per-token scales, so row-at-a-time
+        # quantization matches the bulk codec exactly)
+        int8_rows = [b for b, s in enumerate(ids)
+                     if s is not None and self._compress_for(s) == "int8"]
+        plain_rows = [b for b in range(len(ids)) if b not in int8_rows]
+        plain_ids = [ids[b] for b in plain_rows]
         for li in range(L):
+            data = h[li].astype(self.store_dtype)
+            if int8_rows:
+                # slice the demoted rows out of the bulk snapshot so the
+                # stage-1 copy cost covers only bytes actually written
+                data = data[plain_rows]
             cost += self.saver.snapshot(SnapshotTask(
-                session_ids=session_ids, stream="h", layer=li,
-                start_tokens=[int(x) for x in lengths],
-                data=h[li].astype(np.float16)))
+                session_ids=plain_ids, stream="h", layer=li,
+                start_tokens=[starts[b] for b in plain_rows], data=data))
+            for b in int8_rows:
+                q, scale = quantize_hidden_int8(
+                    h[li][b:b + 1].astype(np.float32))
+                cost += self.saver.snapshot(SnapshotTask(
+                    [ids[b]], "h", li, [starts[b]], q))
+                cost += self.saver.snapshot(SnapshotTask(
+                    [ids[b]], "hs", li, [starts[b]], scale))
         return cost
 
     # -------------------------------------------------------------- restore
@@ -233,8 +278,61 @@ class HCacheManager:
         return RestoreResult(sink.cache, ex.schedule, ex.timeline(), wall,
                              ex.n_tokens)
 
+    # --------------------------------------------------- capacity demotion
+    def demote_hidden_int8(self, session: str) -> bool:
+        """Re-encode a session's stored hidden states to the int8 codec
+        (halves the 'h' footprint). Future appends for the session follow
+        the codec (per-session override + manifest), and restoration
+        dequantizes transparently. Returns False when not applicable."""
+        man = self.store.get_manifest(session)
+        if not man or man.get("compress", "none") == "int8":
+            return False
+        n = int(man.get("n_tokens", 0))
+        kinds = self.cfg.block_kinds()
+        layers = [li for li, m in enumerate(man["methods"])
+                  if m == "hidden" and kinds[li] == BlockKind.ATTENTION
+                  and self.store.layer_available(session, "h", li, n)]
+        if n == 0 or not layers:
+            return False
+        data = {li: np.asarray(self.store.read_layer(session, "h", li, n))
+                for li in layers}
+        self.store.drop_stream(session, "h")
+        self.store.drop_stream(session, "hs")
+        for li, h in data.items():
+            q, scale = quantize_hidden_int8(h.astype(np.float32))
+            self.store.append_tokens(session, "h", li, 0, q)
+            self.store.append_tokens(session, "hs", li, 0, scale)
+        self.store.flush(session)
+        man["compress"] = "int8"
+        self.store.put_manifest(session, man)
+        self._session_compress[session] = "int8"
+        return True
+
+    def degrade_to_recompute(self, session: str) -> bool:
+        """Drop a session's hidden/KV streams entirely, keeping only the
+        token blob + manifest: the session stays restorable by full
+        recompute (LM stacks only — hybrid recompute is undefined).
+        The cheapest possible storage state before dropping outright."""
+        if self.model.kind != "lm":
+            return False
+        man = self.store.get_manifest(session)
+        if not man or all(m == "recompute" for m in man["methods"]):
+            return False
+        if not self.store.has_blob(session, "tok", 0):
+            return False
+        if self._tokens(session).shape[0] < int(man.get("n_tokens", 0)):
+            return False
+        for stream in ("h", "hs", "kvk", "kvv"):
+            self.store.drop_stream(session, stream)
+        man["methods"] = ["recompute"] * len(man["methods"])
+        man["compress"] = "none"
+        self._session_compress.pop(session, None)
+        self.store.put_manifest(session, man)
+        return True
+
     # -------------------------------------------------------------- eviction
     def evict(self, session: str) -> None:
+        self._session_compress.pop(session, None)
         self.store.drop_session(session)
 
     def sessions(self) -> List[str]:

@@ -294,7 +294,6 @@ class RestorationExecutor:
         self._re_pos = None
         self._re_windows = None
         self._re_next = 0
-        self._blobs_emitted = 0
         self._finished = False
         # striped-device completion, relative to the device clocks at
         # executor start (the clocks are shared and monotonic across
@@ -484,4 +483,3 @@ class RestorationExecutor:
             enc_out = jnp.asarray(store.get_blob(sess, "enc", 0))[None]
             ck, cv = encdec_mod.cross_kv(self.params, enc_out, self.model.h)
             self._emit("put_cross", ck, cv, enc_out.shape[1])
-        self._blobs_emitted += 1

@@ -15,6 +15,8 @@ import numpy as np
 from repro.config.arch import reduced_for_smoke
 from repro.config.hardware import PROFILES
 from repro.configs import get_arch
+from repro.core.capacity import (ADMISSION_POLICIES, CapacityManager,
+                                 EVICTION_POLICIES)
 from repro.core.hcache import HCacheManager
 from repro.distributed.sharding import default_rules
 from repro.launch.mesh import make_mesh
@@ -36,6 +38,15 @@ def main() -> None:
     p.add_argument("--profile", default="a100", choices=sorted(PROFILES))
     p.add_argument("--ssds", type=int, default=4)
     p.add_argument("--full", action="store_true")
+    p.add_argument("--preempt-quantum", type=int, default=None,
+                   help="enable mid-stream eviction after N resident steps")
+    p.add_argument("--eviction", default="lru",
+                   choices=sorted(EVICTION_POLICIES))
+    p.add_argument("--admission", default="fifo",
+                   choices=sorted(ADMISSION_POLICIES))
+    p.add_argument("--budget-kb", type=int, default=None,
+                   help="host hot-tier byte budget (KiB); enables the "
+                        "capacity demotion ladder with a DRAM cold tier")
     args = p.parse_args()
 
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -46,10 +57,18 @@ def main() -> None:
     model = Model(cfg, rules=rules, model_axis=1, dtype=jnp.float32,
                   remat="none")
     params, _ = split(model.init(jax.random.PRNGKey(0)))
-    store = ChunkStore(make_array("ssd", args.ssds), chunk_tokens=64)
+    cold = make_array("dram", args.ssds) if args.budget_kb else None
+    store = ChunkStore(make_array("ssd", args.ssds), chunk_tokens=64,
+                       cold_devices=cold)
     mgr = HCacheManager(model, store, hw=PROFILES[args.profile])
+    capacity = (CapacityManager(mgr, host_budget_bytes=args.budget_kb * 1024)
+                if args.budget_kb else None)
     engine = InferenceEngine(model, params, mgr, max_batch=args.max_batch,
-                             max_seq=args.max_seq)
+                             max_seq=args.max_seq,
+                             preempt_quantum=args.preempt_quantum,
+                             eviction=EVICTION_POLICIES[args.eviction](),
+                             admission=ADMISSION_POLICIES[args.admission](),
+                             capacity=capacity)
 
     rng = np.random.default_rng(0)
     for rnd in range(args.rounds):
@@ -67,9 +86,14 @@ def main() -> None:
     m = engine.metrics
     print(f"\nrestored {m.restored_tokens} tokens over "
           f"{len(m.ttft_wall)} requests; decode steps {m.decode_steps}; "
-          f"store {store.bytes_used / 1e6:.1f} MB across "
+          f"preemptions {m.preemptions}; "
+          f"store {store.bytes_used / 1e6:.1f} MB hot "
+          f"/ {store.bytes_cold / 1e6:.1f} MB cold across "
           f"{len(store.devices)} devices")
+    if capacity is not None and capacity.actions:
+        print("capacity ladder actions:", capacity.actions)
     print("recoverable sessions:", engine.recoverable_sessions())
+    engine.close()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
-"""Inference engine: continuous batching with an HCache restoration phase.
+"""Inference engine: continuous batching with an HCache restoration phase
+and a capacity-driven session lifecycle.
 
-Request lifecycle (paper §5, DESIGN.md §6):
+Request lifecycle (paper §5, DESIGN.md §6/§8):
 
     WAITING -> [RESTORING]   if the session has evicted state in the store,
                              an incremental RestorationExecutor runs a
@@ -18,9 +19,23 @@ Request lifecycle (paper §5, DESIGN.md §6):
             -> DECODE        joins the continuous decode batch; every step
                              streams the new token's hidden states to the
                              two-stage saver;
+            -> PAUSED        mid-stream eviction under slot pressure: after
+                             ``preempt_quantum`` steps of residency a
+                             victim (EvictionPolicy) is dumped via
+                             ``save_session_pause``, its slot handed to a
+                             queued session (AdmissionPolicy), and it
+                             re-enters through RESTORING with the last
+                             sampled token as a 1-token resume prefill —
+                             N sessions >> max_batch slots time-share the
+                             batch with no generation-visible difference;
             -> DONE          on EOS/max-tokens: KV-layer tails + SSM states
                              are dumped (``save_session_pause``) and the slot
                              is freed — the session remains restorable.
+
+Admission is pluggable (FIFO / restore-cost-aware / priority — see
+core/capacity.py), as is victim selection (LRU / restore-cost-weighted).
+An optional CapacityManager enforces a host-storage byte budget by
+degrading idle sessions (cold tier, int8, token-only, drop).
 
 Crash recovery: a fresh engine over the same ChunkStore can resume any
 session (`recoverable_sessions`) — serving-side fault tolerance is HCache
@@ -41,6 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.capacity import (CapacityManager, EvictionPolicy,
+                                 AdmissionPolicy, FIFOAdmission, LRUEviction)
 from repro.core.hcache import HCacheManager
 from repro.models.model import Model
 from repro.serving.request import Phase, Request, SequenceState
@@ -58,6 +75,12 @@ class EngineMetrics:
     ttft_wall_restored: List[float] = dataclasses.field(default_factory=list)
     ttft_wall_cold: List[float] = dataclasses.field(default_factory=list)
     tbt_wall: List[float] = dataclasses.field(default_factory=list)
+    # every completed restoration's simulated makespan — includes resumes
+    # of mid-stream-evicted sessions, not only first tokens; the resume
+    # subset is the victim-selection bake-off metric in bench_capacity
+    restore_sim_all: List[float] = dataclasses.field(default_factory=list)
+    restore_sim_resume: List[float] = dataclasses.field(default_factory=list)
+    preemptions: int = 0                # mid-stream evictions (PAUSED)
     restored_tokens: int = 0
     restore_steps: int = 0              # engine steps that ran restore tasks
     restore_io_measured: float = 0.0    # striped-device completion (sim SSD)
@@ -105,7 +128,11 @@ class InferenceEngine:
                  max_batch: int = 4, max_seq: int = 512,
                  prefill_chunk: int = 128, save_hidden: bool = True,
                  temperature: float = 0.0, restore_tasks_per_step: int = 8,
-                 prefetch_sessions: int = 2):
+                 prefetch_sessions: int = 2,
+                 admission: Optional[AdmissionPolicy] = None,
+                 eviction: Optional[EvictionPolicy] = None,
+                 preempt_quantum: Optional[int] = None,
+                 capacity: Optional[CapacityManager] = None):
         self.model = model
         self.params = params
         self.mgr = manager
@@ -116,6 +143,14 @@ class InferenceEngine:
         self.temperature = temperature
         self.restore_tasks_per_step = restore_tasks_per_step
         self.prefetch_sessions = prefetch_sessions
+        self.admission = admission or FIFOAdmission()
+        self.eviction = eviction or LRUEviction()
+        # preempt_quantum: minimum resident steps before a DECODE session
+        # is eviction-eligible; None disables mid-stream eviction
+        self.preempt_quantum = preempt_quantum
+        self.capacity = capacity
+        if capacity is not None:
+            capacity.attach_engine(self)
 
         self.cache = model.init_cache(max_batch, max_seq)
         self.queue: deque = deque()
@@ -155,37 +190,104 @@ class InferenceEngine:
             slot = self._free_slot()
             if slot is None:
                 break
-            seq = self.queue.popleft()
-            seq.slot = slot
-            self.slots[slot] = seq
-            sid = seq.request.session_id
-            self.sessions[sid] = seq
-            manifest = self.mgr.store.get_manifest(sid)
-            if manifest:
-                seq.phase = Phase.RESTORING
-                ex = self._prefetch.pop(sid, None)
-                if ex is not None and (
-                        ex.n_tokens != int(manifest["n_tokens"])
-                        or list(ex.methods) != list(manifest["methods"])):
-                    # the session saved more state after the prefetch
-                    # started (e.g. its previous turn retired in between):
-                    # the warm executor is stale — restart from the
-                    # current manifest
-                    ex = None
-                if ex is None:
-                    ex = self.mgr.begin_restore(self.params, sid)
-                ex.attach_sink(_SlotSink(self, slot))
-                seq.executor = ex
-                # reserve [0, n) now: concurrent decode steps park their
-                # scratch KV write at position n (later overwritten by
-                # this session's own prefill), never inside the restored
-                # range
-                self.cache["lengths"] = self.cache["lengths"].at[slot].set(
-                    ex.n_tokens)
-            else:
-                seq.phase = Phase.PREFILL
-                self._prefill_step(seq)
+            seq = self.admission.select(tuple(self.queue), self)
+            if seq is None:
+                break
+            self.queue.remove(seq)
+            self._place(seq, slot)
         self._prefetch_queued()
+
+    def _place(self, seq: SequenceState, slot: int) -> None:
+        """Bind a (possibly resuming) sequence to a free batch slot."""
+        seq.slot = slot
+        seq.admit_step = self.step_count
+        self.slots[slot] = seq
+        sid = seq.request.session_id
+        self.sessions[sid] = seq
+        if self.capacity is not None:
+            self.capacity.touch(sid, self.step_count)
+        manifest = self.mgr.store.get_manifest(sid)
+        if manifest:
+            seq.phase = Phase.RESTORING
+            ex = self._prefetch.pop(sid, None)
+            if ex is not None and (
+                    ex.n_tokens != int(manifest["n_tokens"])
+                    or list(ex.methods) != list(manifest["methods"])
+                    or ex.compress != manifest.get("compress",
+                                                   self.mgr.compress)):
+                # the session saved more state (or was demoted to another
+                # codec by the capacity ladder) after the prefetch
+                # started: the warm executor is stale — restart from the
+                # current manifest
+                ex = None
+            if ex is None:
+                ex = self.mgr.begin_restore(self.params, sid)
+            ex.attach_sink(_SlotSink(self, slot))
+            seq.executor = ex
+            # reserve [0, n) now: concurrent decode steps park their
+            # scratch KV write at position n (later overwritten by
+            # this session's own prefill), never inside the restored
+            # range
+            self.cache["lengths"] = self.cache["lengths"].at[slot].set(
+                ex.n_tokens)
+        else:
+            seq.phase = Phase.PREFILL
+            self._prefill_step(seq)
+
+    # ----------------------------------------------------------- preemption
+    def _maybe_preempt(self) -> None:
+        """Mid-stream eviction under slot pressure (one victim per step):
+        pause a resident DECODE session past its quantum, hand its slot
+        to the admission policy's next pick. The victim re-enters through
+        the RESTORING pipeline."""
+        # lm-only: the resume feed replays through Model.prefill with
+        # hist_kv, which only attention-history models support — an
+        # ssm/hybrid resume would restart its recurrent states from zero
+        if (self.preempt_quantum is None or not self.save_hidden
+                or self.model.kind != "lm"
+                or not self.queue or self._free_slot() is not None):
+            return
+        candidates = [s for s in self.slots
+                      if s is not None and s.phase == Phase.DECODE
+                      and s.generated and not s.finished()
+                      and self.step_count - s.admit_step
+                      >= self.preempt_quantum]
+        victim = self.eviction.select_victim(candidates, self)
+        if victim is None:
+            return
+        slot = victim.slot
+        self._pause_slot(slot)
+        waiting = [s for s in self.queue if s is not victim]
+        seq = self.admission.select(tuple(waiting), self)
+        if seq is not None:
+            self.queue.remove(seq)
+            self._place(seq, slot)
+
+    def _pause_slot(self, i: int) -> None:
+        """Evict the resident of slot ``i`` mid-decode: dump restorable
+        state (``save_session_pause``), requeue the sequence as PAUSED.
+        The last sampled token (whose KV does not exist yet) becomes the
+        1-token resume prefill after restoration."""
+        s = self.slots[i]
+        sid = s.request.session_id
+        n = s.total_len
+        self.mgr.saver.drain()
+        self.mgr.save_session_pause(
+            sid, self._slot_cache_slice(i), n - 1,
+            tokens_tail=np.asarray(s.generated[s.tok_saved:-1], np.int32))
+        s.tok_saved = len(s.generated) - 1
+        s.gen_absorbed = len(s.generated)
+        s.pending_prompt = np.asarray([s.generated[-1]], np.int32)
+        s.pending_from_gen = True
+        s.prefill_done = 0
+        s.history_len = 0              # re-set when restoration completes
+        s.phase = Phase.PAUSED
+        s.slot = -1
+        s.executor = None
+        s.pauses += 1
+        self.slots[i] = None
+        self.queue.append(s)
+        self.metrics.preemptions += 1
 
     # ----------------------------------------------------------- restoration
     def _prefetch_queued(self) -> None:
@@ -217,6 +319,9 @@ class InferenceEngine:
                 seq.restore_sim = ex.timeline().makespan
                 seq.restore_wall = ex.wall_time
                 self.metrics.restored_tokens += ex.n_tokens
+                self.metrics.restore_sim_all.append(seq.restore_sim)
+                if seq.pending_from_gen:       # resume of a paused session
+                    self.metrics.restore_sim_resume.append(seq.restore_sim)
                 self.metrics.restore_io_measured = max(
                     self.metrics.restore_io_measured, ex.io_measured)
                 seq.phase = Phase.PREFILL
@@ -249,11 +354,15 @@ class InferenceEngine:
 
     # -------------------------------------------------------------- prefill
     def _prefill_step(self, seq: SequenceState) -> None:
-        """Process up to ``prefill_chunk`` prompt tokens (SplitFuse)."""
+        """Process up to ``prefill_chunk`` prompt tokens (SplitFuse).
+
+        After a mid-stream eviction the "prompt" is the resume feed
+        (``effective_prompt``): the last sampled token, whose KV is
+        recreated here on top of the restored [0, n) range."""
         if seq.phase != Phase.PREFILL:
             return
-        r = seq.request
-        remaining = r.prompt[seq.prefill_done:]
+        prompt = seq.effective_prompt
+        remaining = prompt[seq.prefill_done:]
         if len(remaining) == 0:
             seq.phase = Phase.DECODE
             return
@@ -274,7 +383,9 @@ class InferenceEngine:
             hist_kv=hist_kv, hist_len=hist if hist_kv is not None else None)
         self._absorb_prefill(seq, out, chunk, hist)
         seq.prefill_done += len(chunk)
-        if seq.prefill_done >= len(r.prompt):
+        if seq.pending_from_gen and self.save_hidden:
+            seq.tok_saved += len(chunk)   # resume feed landed in tok blob
+        if seq.prefill_done >= len(prompt):
             seq.phase = Phase.DECODE
             lg = out["logits"]
             tok = int(sample(lg, temperature=self.temperature)[0])
@@ -347,9 +458,14 @@ class InferenceEngine:
         self.cache["lengths"] = jnp.asarray(lengths)
         toks = np.asarray(sample(lg, temperature=self.temperature))
         if self.save_hidden and hidden is not None:
-            sess = [s.request.session_id if (self.slots[i] is not None
-                    and self.slots[i].phase == Phase.DECODE) else None
-                    for i, s in enumerate(self.slots)]
+            # only truly-active sessions: a session that finished at
+            # prefill completion still sits in its slot in DECODE phase
+            # until _retire, and saving its masked-out scratch step would
+            # overwrite the last legitimate hidden row
+            active_slots = {s.slot for s in active}
+            sess = [s.request.session_id if (s is not None
+                    and s.slot in active_slots) else None
+                    for s in self.slots]
             h = hidden if not isinstance(hidden, tuple) else hidden[1]
             self.metrics.snapshot_cost += self.mgr.save_decode_hidden(
                 sess, np.asarray(h), lengths - 1)
@@ -359,24 +475,30 @@ class InferenceEngine:
             self.metrics.tbt_wall.append(dt)
         self.metrics.decode_steps += 1
 
+    def _slot_cache_slice(self, i: int) -> dict:
+        """The B=1 restorable view of slot ``i``'s live cache buffers —
+        what ``save_session_pause`` dumps at retire/pause time."""
+        cache_slice = {k: (v[:, i:i + 1] if k in
+                           ("k", "v", "attn_k", "attn_v") else v)
+                       for k, v in self.cache.items()
+                       if k not in ("lengths", "enc_len")}
+        if self.model.kind in ("ssm", "hybrid"):
+            cache_slice["conv"] = self._slot_state(self.cache["conv"], i)
+            cache_slice["ssm"] = self._slot_state(self.cache["ssm"], i)
+        return cache_slice
+
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
             if s is None or not s.finished():
                 continue
             sid = s.request.session_id
             n = s.total_len
-            cache_slice = {k: (v[:, i:i + 1] if k in
-                               ("k", "v", "attn_k", "attn_v") else v)
-                           for k, v in self.cache.items()
-                           if k not in ("lengths", "enc_len")}
-            if self.model.kind in ("ssm", "hybrid"):
-                cache_slice["conv"] = self._slot_state(self.cache["conv"], i)
-                cache_slice["ssm"] = self._slot_state(self.cache["ssm"], i)
-            tail = np.asarray(s.generated[:-1], np.int32)
+            tail = np.asarray(s.generated[s.tok_saved:-1], np.int32)
             if self.save_hidden:
                 self.mgr.saver.drain()
-                self.mgr.save_session_pause(sid, cache_slice, n - 1,
-                                            tokens_tail=tail)
+                self.mgr.save_session_pause(sid, self._slot_cache_slice(i),
+                                            n - 1, tokens_tail=tail)
+                s.tok_saved = len(s.generated) - 1
             s.phase = Phase.DONE
             self.slots[i] = None
 
@@ -390,12 +512,15 @@ class InferenceEngine:
     def step(self) -> None:
         self.step_count += 1
         self._admit()
+        self._maybe_preempt()
         self._restore_step()
         for s in list(self.slots):
             if s is not None and s.phase == Phase.PREFILL:
                 self._prefill_step(s)
         self._decode_batch()
         self._retire()
+        if self.capacity is not None:
+            self.capacity.maintain(self)
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
@@ -403,6 +528,12 @@ class InferenceEngine:
                 break
             self.step()
         self.mgr.saver.drain()
+
+    def close(self) -> None:
+        """Stop the two-stage saver's daemon threads (and surface any
+        write error they captured). Call when done with the engine —
+        tests that build many engines would otherwise leak threads."""
+        self.mgr.saver.close()
 
     # --------------------------------------------------------------- output
     def result(self, session_id: str) -> List[int]:

@@ -16,7 +16,8 @@ class Phase(str, enum.Enum):
     RESTORING = "restoring"      # HCache restoration phase (paper §5)
     PREFILL = "prefill"          # chunked prompt prefill
     DECODE = "decode"            # in the continuous decode batch
-    DONE = "done"
+    PAUSED = "paused"            # evicted mid-stream; requeued, state in
+    DONE = "done"                # the store, resumes via RESTORING
 
 
 @dataclasses.dataclass
@@ -25,6 +26,7 @@ class Request:
     prompt: np.ndarray                       # (n,) int32 new prompt tokens
     max_new_tokens: int = 32
     eos_token: Optional[int] = None
+    priority: int = 0                        # PriorityAdmission: higher wins
     arrival_time: float = 0.0
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
@@ -35,8 +37,20 @@ class SequenceState:
     phase: Phase = Phase.WAITING
     slot: int = -1                           # decode-batch slot
     history_len: int = 0                     # restored tokens
-    prefill_done: int = 0                    # prompt tokens processed
+    prefill_done: int = 0                    # pending-prompt tokens processed
     generated: List[int] = dataclasses.field(default_factory=list)
+    # mid-stream eviction (Phase.PAUSED) bookkeeping. ``generated`` spans
+    # pauses (the full answer so far); the counters record how much of it
+    # has been folded back into history / the pending prompt.
+    pending_prompt: Optional[np.ndarray] = None  # overrides request.prompt
+    pending_from_gen: bool = False           # pending tokens came from
+    #                                          ``generated`` (resume feed)
+    gen_absorbed: int = 0                    # generated tokens counted in
+    #                                          history_len/pending_prompt
+    tok_saved: int = 0                       # generated tokens persisted
+    #                                          to the store's token blob
+    admit_step: int = -1                     # engine step of last admission
+    pauses: int = 0                          # times evicted mid-stream
     # incremental restoration (core/restoration.py); set while RESTORING
     executor: Optional[object] = None
     restored: bool = False                   # completed a restoration
@@ -47,8 +61,19 @@ class SequenceState:
     first_token_step: Optional[int] = None
 
     @property
+    def effective_prompt(self) -> np.ndarray:
+        """Tokens to prefill this residency: the original prompt, or the
+        resume feed (last sampled token) after a mid-stream eviction."""
+        return (self.pending_prompt if self.pending_prompt is not None
+                else self.request.prompt)
+
+    @property
     def total_len(self) -> int:
-        return (self.history_len + self.prefill_done + len(self.generated))
+        """True token length of the session's stream (history + prompt +
+        generated), counting each generated token once even after pauses
+        folded a prefix of ``generated`` into ``history_len``."""
+        return (self.history_len + self.prefill_done + len(self.generated)
+                - self.gen_absorbed)
 
     def finished(self) -> bool:
         r = self.request

@@ -1,8 +1,8 @@
 from repro.storage.backend import (Backend, DRAMBackend, FileBackend,
-                                   SimulatedSSD, make_array)
+                                   SimulatedSSD, StorageArray, make_array)
 from repro.storage.chunk_store import ChunkStore
 from repro.storage.two_stage import DirectSaver, SnapshotTask, TwoStageSaver
 
 __all__ = ["Backend", "DRAMBackend", "FileBackend", "SimulatedSSD",
-           "make_array", "ChunkStore", "DirectSaver", "SnapshotTask",
-           "TwoStageSaver"]
+           "StorageArray", "make_array", "ChunkStore", "DirectSaver",
+           "SnapshotTask", "TwoStageSaver"]

@@ -18,7 +18,8 @@ import dataclasses
 import os
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+import urllib.parse
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,6 +52,10 @@ class Backend:
         """Stored row count (first dim) without paying for a data read
         where the backend can avoid it."""
         return self.peek(key).shape[0]
+
+    def nbytes(self, key: str) -> int:
+        """Stored size of one key (accounting path — no clock charge)."""
+        return self.peek(key).nbytes
 
     def delete(self, key: str) -> None:
         raise NotImplementedError
@@ -85,7 +90,12 @@ class DRAMBackend(Backend):
             self._store.pop(key, None)
 
     def contains(self, key):
-        return key in self._store
+        with self._lock:
+            return key in self._store
+
+    def nbytes(self, key):
+        with self._lock:
+            return self._store[key].nbytes
 
     def keys(self):
         with self._lock:
@@ -153,7 +163,11 @@ class FileBackend(Backend):
         os.makedirs(root, exist_ok=True)
 
     def _path(self, key: str) -> str:
-        return os.path.join(self.root, key.replace("/", "__") + ".npy")
+        # percent-encoding is injective: a session id that legitimately
+        # contains "__" (or "%") survives the keys() round-trip, unlike
+        # the old "/" <-> "__" substitution
+        return os.path.join(self.root,
+                            urllib.parse.quote(key, safe="") + ".npy")
 
     def write(self, key, data):
         tmp = self._path(key) + ".tmp"
@@ -179,8 +193,11 @@ class FileBackend(Backend):
         return np.load(self._path(key), mmap_mode="r").shape[0]
 
     def keys(self):
-        return [f[:-4].replace("__", "/") for f in os.listdir(self.root)
+        return [urllib.parse.unquote(f[:-4]) for f in os.listdir(self.root)
                 if f.endswith(".npy")]
+
+    def nbytes(self, key):
+        return os.path.getsize(self._path(key))
 
     @property
     def bytes_used(self):
@@ -188,14 +205,55 @@ class FileBackend(Backend):
                    for f in os.listdir(self.root))
 
 
-def make_array(kind: str, n_devices: int, root: Optional[str] = None
-               ) -> List[Backend]:
+class StorageArray(list):
+    """A device array with an optional byte budget.
+
+    Behaves as a plain list of backends (the chunk store addresses it
+    round-robin) but additionally tracks a ``budget_bytes`` ceiling and
+    fires registered pressure callbacks — typically the capacity
+    manager's reclaim ladder — when the tier's total footprint exceeds
+    it. Reclaim is re-entrancy guarded: a callback that itself writes or
+    deletes through the store cannot recurse into another reclaim."""
+
+    def __init__(self, devices: Sequence[Backend],
+                 budget_bytes: Optional[int] = None):
+        super().__init__(devices)
+        self.budget_bytes = budget_bytes
+        self._callbacks: List[Callable[["StorageArray"], None]] = []
+        self._reclaiming = False
+
+    @property
+    def bytes_used(self) -> int:
+        return sum(d.bytes_used for d in self)
+
+    def over_budget(self) -> bool:
+        return (self.budget_bytes is not None
+                and self.bytes_used > self.budget_bytes)
+
+    def on_pressure(self, callback: Callable[["StorageArray"], None]) -> None:
+        self._callbacks.append(callback)
+
+    def maybe_reclaim(self) -> None:
+        if self._reclaiming or not self.over_budget():
+            return
+        self._reclaiming = True
+        try:
+            for cb in self._callbacks:
+                cb(self)
+        finally:
+            self._reclaiming = False
+
+
+def make_array(kind: str, n_devices: int, root: Optional[str] = None,
+               budget_bytes: Optional[int] = None) -> StorageArray:
     if kind == "dram":
-        return [DRAMBackend() for _ in range(n_devices)]
-    if kind == "ssd":
-        return [SimulatedSSD() for _ in range(n_devices)]
-    if kind == "file":
+        devs = [DRAMBackend() for _ in range(n_devices)]
+    elif kind == "ssd":
+        devs = [SimulatedSSD() for _ in range(n_devices)]
+    elif kind == "file":
         assert root is not None
-        return [FileBackend(os.path.join(root, f"dev{i}"))
+        devs = [FileBackend(os.path.join(root, f"dev{i}"))
                 for i in range(n_devices)]
-    raise ValueError(kind)
+    else:
+        raise ValueError(kind)
+    return StorageArray(devs, budget_bytes=budget_bytes)

@@ -34,7 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.config.hardware import TPU_CHUNK_TOKENS
-from repro.storage.backend import Backend, SimulatedSSD
+from repro.storage.backend import Backend, SimulatedSSD, StorageArray
 
 
 def _enc(session: str) -> str:
@@ -75,11 +75,22 @@ class _Partial:
 
 
 class ChunkStore:
-    """Round-robin chunked store over a backend array."""
+    """Round-robin chunked store over a backend array.
+
+    Optionally two-tiered: ``cold_devices`` is a second (cheaper, slower)
+    array that cold sessions demote to wholesale
+    (``demote_session_to_cold``); reads fall back hot -> cold per key, so
+    a re-activated session may be tier-mixed (new chunks land hot while
+    its history stays cold) without any promotion step. ``bytes_used``
+    counts the HOT tier only — it is the budgeted quantity; the cold
+    tier is accounted separately (``bytes_cold``)."""
 
     def __init__(self, devices: Sequence[Backend],
-                 chunk_tokens: int = TPU_CHUNK_TOKENS):
-        self.devices = list(devices)
+                 chunk_tokens: int = TPU_CHUNK_TOKENS,
+                 cold_devices: Optional[Sequence[Backend]] = None):
+        self.devices = (devices if isinstance(devices, StorageArray)
+                        else list(devices))
+        self.cold = list(cold_devices) if cold_devices else None
         self.chunk_tokens = chunk_tokens
         self._partials: Dict[Tuple[str, str, int], _Partial] = {}
         self._lock = threading.Lock()
@@ -87,6 +98,25 @@ class ChunkStore:
     # ------------------------------------------------------------- placement
     def _device_for(self, layer: int, chunk: int) -> Backend:
         return self.devices[(layer + chunk) % len(self.devices)]
+
+    def _cold_for(self, layer: int, chunk: int) -> Backend:
+        return self.cold[(layer + chunk) % len(self.cold)]
+
+    def _backend_for(self, layer: int, chunk: int, key: str) -> Backend:
+        """Device holding ``key``: hot placement first, cold fallback."""
+        dev = self._device_for(layer, chunk)
+        if self.cold is not None and not dev.contains(key):
+            cold = self._cold_for(layer, chunk)
+            if cold.contains(key):
+                return cold
+        return dev
+
+    def _maybe_reclaim(self) -> None:
+        """Budget check after a write burst (never under ``self._lock`` —
+        pressure callbacks re-enter the store to demote/drop sessions)."""
+        reclaim = getattr(self.devices, "maybe_reclaim", None)
+        if reclaim is not None:
+            reclaim()
 
     # ----------------------------------------------------------------- write
     def append_tokens(self, session: str, stream: str, layer: int,
@@ -104,8 +134,8 @@ class ChunkStore:
                     # resuming mid-chunk (multi-round session): recover the
                     # previously-flushed partial chunk as the prefix
                     ci = part.start_token // C
-                    dev = self._device_for(layer, ci)
                     kstr = _key(session, stream, layer, ci)
+                    dev = self._backend_for(layer, ci, kstr)
                     if dev.contains(kstr):
                         prev = np.asarray(dev.read(kstr))[:pad]
                     else:
@@ -137,15 +167,22 @@ class ChunkStore:
                 self._device_for(layer, chunk_idx).write(
                     _key(session, stream, layer, chunk_idx), block)
                 del self._partials[(s, stream, layer)]
+        self._maybe_reclaim()
 
     def put_blob(self, session: str, stream: str, layer: int,
                  data: np.ndarray) -> None:
         """Whole-object write (SSM states, token ids)."""
         self._device_for(layer, 0).write(_key(session, stream, layer, 0),
                                          np.asarray(data))
+        self._maybe_reclaim()
 
     def get_blob(self, session: str, stream: str, layer: int) -> np.ndarray:
-        return self._device_for(layer, 0).read(_key(session, stream, layer, 0))
+        key = _key(session, stream, layer, 0)
+        return self._backend_for(layer, 0, key).read(key)
+
+    def has_blob(self, session: str, stream: str, layer: int) -> bool:
+        key = _key(session, stream, layer, 0)
+        return self._backend_for(layer, 0, key).contains(key)
 
     # ------------------------------------------------------------------ read
     def read_layer(self, session: str, stream: str, layer: int,
@@ -170,8 +207,8 @@ class ChunkStore:
         parts = []
         completions = []
         for ci in range(n_chunks):
-            data, done = self._device_for(layer, ci).read_async(
-                _key(session, stream, layer, ci))
+            key = _key(session, stream, layer, ci)
+            data, done = self._backend_for(layer, ci, key).read_async(key)
             parts.append(data)
             completions.append(done)
         out = np.concatenate(parts, axis=0)
@@ -195,8 +232,8 @@ class ChunkStore:
         for ci in range(n_chunks):
             lo = ci * C
             hi = min(n_tokens, lo + C)
-            dev = self._device_for(layer, ci)
             kstr = _key(session, stream, layer, ci)
+            dev = self._backend_for(layer, ci, kstr)
             # the stream's final chunk is stored at its true (short)
             # length — existence alone does not cover the range
             if dev.contains(kstr) and lo + dev.nrows(kstr) >= hi:
@@ -213,16 +250,28 @@ class ChunkStore:
     def put_manifest(self, session: str, manifest: dict) -> None:
         raw = np.frombuffer(json.dumps(manifest).encode(), dtype=np.uint8)
         self.devices[0].write(_meta_key(session), raw.copy())
+        if self.cold is not None:
+            # hot copy is now authoritative — a stale cold copy from an
+            # earlier tier demotion must not shadow future drops/reads
+            self.cold[0].delete(_meta_key(session))
+        self._maybe_reclaim()
 
     def get_manifest(self, session: str) -> Optional[dict]:
-        if not self.devices[0].contains(_meta_key(session)):
+        key = _meta_key(session)
+        dev = self._backend_for(0, 0, key)
+        if not dev.contains(key):
             return None
-        raw = self.devices[0].read(_meta_key(session))
+        # metadata path: admission/eviction policies poll manifests every
+        # step — must not charge the simulated-device read clock
+        raw = dev.peek(key)
         return json.loads(raw.tobytes().decode())
+
+    def _all_devices(self) -> List[Backend]:
+        return list(self.devices) + (self.cold or [])
 
     def sessions(self) -> List[str]:
         out = set()
-        for d in self.devices:
+        for d in self._all_devices():
             for k in d.keys():
                 if "/meta/" in k:
                     out.add(urllib.parse.unquote(k.split("/")[0]))
@@ -235,15 +284,72 @@ class ChunkStore:
                 if key[0] == session:
                     del self._partials[key]
         prefix = _enc(session) + "/"
-        for d in self.devices:
+        for d in self._all_devices():
             for k in d.keys():
                 if k.startswith(prefix):
                     d.delete(k)
 
+    def drop_stream(self, session: str, stream: str) -> int:
+        """Delete every chunk of one (session, stream); returns bytes
+        freed. Used by the capacity ladder to degrade a session to a
+        cheaper representation (e.g. drop 'h' after re-encoding)."""
+        with self._lock:
+            for key in list(self._partials):
+                if key[0] == session and key[1] == stream:
+                    del self._partials[key]
+        prefix = f"{_enc(session)}/{stream}/"
+        freed = 0
+        for d in self._all_devices():
+            for k in d.keys():
+                if k.startswith(prefix):
+                    freed += d.nbytes(k)
+                    d.delete(k)
+        return freed
+
+    # ------------------------------------------------------ tier demotion
+    def demote_session_to_cold(self, session: str) -> int:
+        """Move every stored key of a session from the hot tier to the
+        cold tier (DRAM -> SSD for idle sessions). Returns bytes moved
+        (0 when there is no cold tier or nothing hot remains). Reads fall
+        back to the cold tier per key, so demotion is transparent to
+        restoration; new appends for a re-activated session land hot."""
+        if self.cold is None:
+            return 0
+        self.flush(session)
+        prefix = _enc(session) + "/"
+        moved = 0
+        for d in self.devices:
+            for k in d.keys():
+                if not k.startswith(prefix):
+                    continue
+                parts = k.split("/")
+                layer = int(parts[2][1:])
+                chunk = int(parts[3][1:])
+                data = d.peek(k)
+                self._cold_for(layer, chunk).write(k, np.asarray(data))
+                moved += data.nbytes
+                d.delete(k)
+        return moved
+
     # -------------------------------------------------------------- accounting
     @property
     def bytes_used(self) -> int:
+        """Hot-tier footprint — the budgeted quantity."""
         return sum(d.bytes_used for d in self.devices)
+
+    @property
+    def bytes_cold(self) -> int:
+        return sum(d.bytes_used for d in self.cold) if self.cold else 0
+
+    def bytes_for(self, session: str, stream: Optional[str] = None,
+                  include_cold: bool = True) -> int:
+        """Per-session (optionally per-stream) stored bytes, both tiers
+        by default. Computed by key scan — always consistent with the
+        devices, including after a FileBackend reopen."""
+        prefix = _enc(session) + "/" + (f"{stream}/" if stream else "")
+        devices = self._all_devices() if include_cold else list(self.devices)
+        return sum(d.nbytes(k) for d in devices
+                   for k in d.keys() if k.startswith(prefix))
 
     def sync_clocks(self, now: float) -> None:
         for d in self.devices:

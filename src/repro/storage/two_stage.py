@@ -48,6 +48,8 @@ class TwoStageSaver:
         self.host_bw = host_bw
         self.stall_time = 0.0             # virtual seconds the caller waited
         self.snapshot_time = 0.0          # virtual seconds of stage-1 copies
+        self._exc: Optional[BaseException] = None
+        self._exc_lock = threading.Lock()
         self._threads = [threading.Thread(target=self._daemon, daemon=True)
                          for _ in range(n_threads)]
         for t in self._threads:
@@ -73,23 +75,36 @@ class TwoStageSaver:
             if task is None:
                 self.ring.task_done()
                 return
-            data = task.data
-            for b, sid in enumerate(task.session_ids):
-                if sid is None:
-                    continue
-                self.store.append_tokens(sid, task.stream, task.layer,
-                                         task.start_tokens[b], data[b])
-            self.ring.task_done()
+            try:
+                data = task.data
+                for b, sid in enumerate(task.session_ids):
+                    if sid is None:
+                        continue
+                    self.store.append_tokens(sid, task.stream, task.layer,
+                                             task.start_tokens[b], data[b])
+            except BaseException as e:   # noqa: BLE001 — losing a write
+                # silently would corrupt the store; surface via drain()
+                with self._exc_lock:
+                    if self._exc is None:
+                        self._exc = e
+            finally:
+                self.ring.task_done()
 
     def drain(self):
         self.ring.join()
+        with self._exc_lock:
+            exc, self._exc = self._exc, None
+        if exc is not None:
+            raise exc
 
     def close(self):
-        self.drain()
-        for _ in self._threads:
-            self.ring.put(None)
-        for t in self._threads:
-            t.join()
+        try:
+            self.drain()
+        finally:
+            for _ in self._threads:
+                self.ring.put(None)
+            for t in self._threads:
+                t.join()
 
 
 class DirectSaver:

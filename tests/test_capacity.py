@@ -1,0 +1,326 @@
+"""Capacity-driven session lifecycle: mid-stream eviction equivalence,
+admission/eviction policies, host-budget demotion ladder, tier demotion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.arch import reduced_for_smoke
+from repro.config.hardware import PAPER_A100
+from repro.configs import get_arch
+from repro.core.capacity import (CapacityManager, FIFOAdmission,
+                                 LRUEviction, PriorityAdmission,
+                                 RestoreCostAwareAdmission,
+                                 RestoreCostAwareEviction,
+                                 restore_makespan, session_restore_cost)
+from repro.core.hcache import HCacheManager
+from repro.models import Model
+from repro.models.module import split
+from repro.serving import InferenceEngine, Request
+from repro.storage import ChunkStore, make_array
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced_for_smoke(get_arch("llama2-7b"))
+    model = Model(cfg, rules=default_rules(mesh), model_axis=1,
+                  dtype=jnp.float32, remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def fresh_engine(setup, cold=False, budget=None, **kw):
+    cfg, model, params = setup
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16,
+                       cold_devices=make_array("dram", 4) if cold else None)
+    # store_dtype follows the model dtype (fp32) so pause/restore cycles
+    # are lossless and greedy equivalence is bit-exact, not borderline
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden",
+                        store_dtype=np.float32)
+    capacity = (CapacityManager(mgr, host_budget_bytes=budget)
+                if budget is not None else None)
+    defaults = dict(max_batch=2, max_seq=128, prefill_chunk=8,
+                    capacity=capacity)
+    defaults.update(kw)
+    return InferenceEngine(model, params, mgr, **defaults), mgr
+
+
+def _prompts(cfg, n, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, int(k)).astype(np.int32)
+            for k in rng.integers(6, 24, size=n)]
+
+
+# --------------------------------------------------- mid-stream eviction
+@pytest.mark.parametrize("eviction", [LRUEviction(),
+                                      RestoreCostAwareEviction()],
+                         ids=["lru", "restore_cost"])
+def test_preemption_equivalence_8_sessions_2_slots(setup, eviction):
+    """The acceptance workload: 8 interleaved sessions over 2 slots run
+    to completion via mid-stream eviction + pipelined restoration, with
+    byte-for-byte greedy equivalence to the unconstrained (8-slot) run."""
+    cfg, model, params = setup
+    prompts = _prompts(cfg, 8)
+
+    ref, _ = fresh_engine(setup, max_batch=8)
+    for i, p in enumerate(prompts):
+        ref.submit(Request(f"s{i}", p, max_new_tokens=5))
+    ref.run()
+    want = {f"s{i}": ref.result(f"s{i}") for i in range(8)}
+    ref.close()
+
+    eng, _ = fresh_engine(setup, max_batch=2, preempt_quantum=3,
+                          eviction=eviction)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(f"s{i}", p, max_new_tokens=5))
+    eng.run()
+    got = {f"s{i}": eng.result(f"s{i}") for i in range(8)}
+    assert eng.metrics.preemptions > 0            # eviction actually ran
+    assert len(eng.metrics.restore_sim_all) == eng.metrics.preemptions
+    assert all(s.phase.value == "done" for s in eng.sessions.values())
+    assert got == want
+    eng.close()
+
+
+def test_paused_session_survives_multiple_evictions(setup):
+    """A session paused more than once still matches the straight run."""
+    cfg, model, params = setup
+    p = _prompts(cfg, 3, seed=11)
+
+    ref, _ = fresh_engine(setup, max_batch=3)
+    for i, pr in enumerate(p):
+        ref.submit(Request(f"m{i}", pr, max_new_tokens=8))
+    ref.run()
+    want = ref.result("m2")
+    ref.close()
+
+    eng, _ = fresh_engine(setup, max_batch=1, preempt_quantum=2)
+    for i, pr in enumerate(p):
+        eng.submit(Request(f"m{i}", pr, max_new_tokens=8))
+    eng.run()
+    assert max(s.pauses for s in eng.sessions.values()) >= 2
+    assert eng.result("m2") == want
+    eng.close()
+
+
+def test_finish_at_prefill_does_not_corrupt_hidden_stream(setup):
+    """Regression: a session that hits max_new_tokens at prefill
+    completion sits in its slot (DECODE phase, finished) for one decode
+    batch before _retire; the decode step's hidden save must skip it, or
+    its masked-out scratch step overwrites the last real hidden row and
+    the next round restores corrupted KV. (Surfaced by resume prefills,
+    which commonly finish sessions; reachable before via
+    max_new_tokens=1.)"""
+    cfg, model, params = setup
+    eng, mgr = fresh_engine(setup, max_batch=2)
+    rng = np.random.default_rng(5)
+    p1 = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    pg = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    eng.submit(Request("f", p1, max_new_tokens=1))
+    eng.submit(Request("g", pg, max_new_tokens=6))   # keeps decode running
+    eng.run()
+    p2 = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    eng.submit(Request("f", p2, max_new_tokens=3))
+    eng.run()
+    g2 = eng.result("f")
+
+    full = np.concatenate([p1, p2])    # round-1 output's KV never existed
+    pre = model.prefill(params, {"tokens": jnp.asarray(full)[None]})
+    n = len(full)
+    k = jnp.pad(pre["kv"][0], ((0, 0), (0, 0), (0, 128 - n), (0, 0), (0, 0)))
+    v = jnp.pad(pre["kv"][1], ((0, 0), (0, 0), (0, 128 - n), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "lengths": jnp.asarray([n], jnp.int32)}
+    nt = jnp.argmax(pre["logits"][:, -1], -1).astype(jnp.int32)[:, None]
+    want = []
+    for _ in range(3):
+        want.append(int(nt[0, 0]))
+        lg, cache = model.decode_step(params, cache, nt)
+        nt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    assert g2 == want
+    eng.close()
+
+
+# ------------------------------------------------------------- policies
+def test_priority_admission_order(setup):
+    cfg, model, params = setup
+    eng, _ = fresh_engine(setup, max_batch=1,
+                          admission=PriorityAdmission())
+    rng = np.random.default_rng(0)
+    pr = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    eng.submit(Request("low", pr, max_new_tokens=2, priority=0))
+    eng.submit(Request("high", pr.copy(), max_new_tokens=2, priority=5))
+    eng.run()
+    low, high = eng.sessions["low"], eng.sessions["high"]
+    assert high.first_token_step < low.first_token_step
+    eng.close()
+
+
+def test_restore_cost_aware_selects_cheapest(setup):
+    """Both the admission and eviction cost-aware policies rank by the
+    restoration task-graph makespan, which grows with history length."""
+    cfg, model, params = setup
+    eng, mgr = fresh_engine(setup)
+    short = restore_makespan(mgr, 64)
+    long = restore_makespan(mgr, 4096)
+    assert 0 < short < long
+
+    mgr.store.put_manifest("small", {"n_tokens": 64,
+                                     "methods": ["hidden"] * cfg.n_layers})
+    mgr.store.put_manifest("big", {"n_tokens": 4096,
+                                   "methods": ["hidden"] * cfg.n_layers})
+    assert (session_restore_cost(mgr, "small")
+            < session_restore_cost(mgr, "big"))
+
+    class Seq:                                       # engine duck type
+        def __init__(self, sid, total, rid, step):
+            self.total_len = total
+            self.admit_step = step
+
+            class R:
+                session_id = sid
+                request_id = rid
+            self.request = R()
+
+    a, b = Seq("small", 65, 0, 5), Seq("big", 4097, 1, 2)
+    assert RestoreCostAwareEviction().select_victim([a, b], eng) is a
+    assert LRUEviction().select_victim([a, b], eng) is b   # older admit
+    eng.close()
+
+
+def test_fifo_admission_default(setup):
+    eng, _ = fresh_engine(setup)
+    assert isinstance(eng.admission, FIFOAdmission)
+    assert isinstance(RestoreCostAwareAdmission(), object)
+    eng.close()
+
+
+# ------------------------------------------------- host budget / ladder
+def _save_sessions(setup, mgr, n=4, n_tokens=32):
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    outs = {}
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size, n_tokens).astype(np.int32)
+        out = model.prefill(params, {"tokens": jnp.asarray(toks)[None]},
+                            capture_hidden=True)
+        mgr.save_prefill(f"s{i}", toks, out)
+        outs[f"s{i}"] = out
+    return outs
+
+
+def test_host_budget_keeps_bytes_under_budget(setup):
+    """The satellite acceptance: host-budget eviction keeps
+    ChunkStore.bytes_used under budget_bytes, stepping down the ladder
+    (cold tier first, then int8, recompute, drop)."""
+    cfg, model, params = setup
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16,
+                       cold_devices=make_array("dram", 4))
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden", store_dtype=np.float32)
+    outs = _save_sessions(setup, mgr)
+    full = store.bytes_used
+    budget = int(full * 0.3)
+    cap = CapacityManager(mgr, host_budget_bytes=budget)
+    assert cap.ensure_host_budget() > 0
+    assert store.bytes_used <= budget
+    assert store.bytes_cold > 0
+    assert ("cold", "s0") in cap.actions
+    # demoted sessions remain restorable at full fidelity (cold tier is
+    # a transparent move, not a re-encode)
+    for sid, out in outs.items():
+        res = mgr.restore(params, sid)
+        assert res.n_tokens == 32
+        np.testing.assert_allclose(np.asarray(res.cache["k"]),
+                                   np.asarray(out["kv"][0]), atol=2e-3)
+    mgr.saver.close()
+
+
+def test_budget_ladder_without_cold_tier_degrades_representation(setup):
+    """No cold tier: the ladder re-encodes to int8, then drops streams
+    for restore-by-recompute, then drops sessions outright."""
+    cfg, model, params = setup
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden")
+    _save_sessions(setup, mgr)
+    budget = int(store.bytes_used * 0.05)       # forces deep degradation
+    cap = CapacityManager(mgr, host_budget_bytes=budget)
+    cap.ensure_host_budget(protected=[])
+    assert store.bytes_used <= budget
+    stages = {s for s, _ in cap.actions}
+    assert "int8" in stages and "recompute" in stages
+    # recompute-degraded sessions restore exactly (token recompute)
+    degraded = [sid for sid in store.sessions()
+                if all(m == "recompute"
+                       for m in store.get_manifest(sid)["methods"])]
+    for sid in degraded[:1]:
+        res = mgr.restore(params, sid)
+        assert res.n_tokens == 32
+    mgr.saver.close()
+
+
+def test_int8_demotion_roundtrip_and_appends(setup):
+    """fp16 -> int8 demotion halves the 'h' stream; later appends follow
+    the session codec (manifest-synced), and restoration dequantizes."""
+    cfg, model, params = setup
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden")
+    outs = _save_sessions(setup, mgr, n=1)
+    before = store.bytes_for("s0", "h")
+    assert mgr.demote_hidden_int8("s0")
+    assert not mgr.demote_hidden_int8("s0")       # idempotent
+    assert store.bytes_for("s0", "h") * 2 <= before + 64
+    assert store.get_manifest("s0")["compress"] == "int8"
+    res = mgr.restore(params, "s0")
+    err = np.abs(np.asarray(res.cache["k"])
+                 - np.asarray(outs["s0"]["kv"][0])).max()
+    assert err < 0.05                              # quantization-level
+    mgr.saver.close()
+
+
+def test_storage_array_pressure_callback_fires(setup):
+    """Writing past the StorageArray budget triggers reclaim without an
+    engine in the loop (the store-driven wiring)."""
+    cfg, model, params = setup
+    array = make_array("dram", 4)
+    store = ChunkStore(array, chunk_tokens=16,
+                       cold_devices=make_array("dram", 4))
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden")
+    _save_sessions(setup, mgr, n=1)
+    budget = store.bytes_used + 100
+    cap = CapacityManager(mgr, host_budget_bytes=budget)
+    assert array.budget_bytes == budget
+    _save_sessions(setup, mgr, n=2)      # blows the budget mid-save
+    assert len(cap.actions) > 0
+    assert store.bytes_used <= budget
+    mgr.saver.close()
+
+
+def test_engine_with_budget_serves_under_pressure(setup):
+    """End to end: slot pressure AND storage pressure at once — all
+    sessions complete, hot tier ends within budget."""
+    cfg, model, params = setup
+    eng, mgr = fresh_engine(setup, cold=True, budget=20_000,
+                            max_batch=2, preempt_quantum=3)
+    prompts = _prompts(cfg, 6, seed=3)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(f"b{i}", p, max_new_tokens=4))
+    eng.run()
+    assert all(len(eng.result(f"b{i}")) == 4 for i in range(6))
+    assert eng.capacity.actions                    # ladder engaged
+    assert mgr.store.bytes_used <= 20_000
+    eng.close()
+
+
+def test_engine_close_stops_saver_threads(setup):
+    eng, mgr = fresh_engine(setup)
+    threads = list(mgr.saver._threads)
+    assert all(t.is_alive() for t in threads)
+    eng.close()
+    assert all(not t.is_alive() for t in threads)

@@ -111,6 +111,78 @@ def test_session_id_with_slash():
     assert store.get_manifest(sid) is None
 
 
+def test_file_backend_session_id_with_double_underscore(tmp_path):
+    """Regression: the old filename scheme mapped '/' -> '__' and keys()
+    mapped '__' -> '/', mangling session ids that legitimately contain
+    '__'. The percent-encoding is injective: list/read/drop round-trip."""
+    store = ChunkStore(make_array("file", 2, root=str(tmp_path)),
+                       chunk_tokens=8)
+    sid = "tenant__alice__chat%1"
+    store.append_tokens(sid, "h", 0, 0, np.ones((8, 2), np.float32))
+    store.flush(sid)
+    store.put_manifest(sid, {"n_tokens": 8, "methods": ["hidden"]})
+    store2 = ChunkStore(make_array("file", 2, root=str(tmp_path)),
+                        chunk_tokens=8)
+    assert store2.sessions() == [sid]
+    np.testing.assert_array_equal(store2.read_layer(sid, "h", 0, 8),
+                                  np.ones((8, 2), np.float32))
+    store2.drop_session(sid)
+    assert store2.sessions() == []
+    assert store2.get_manifest(sid) is None
+
+
+def test_two_stage_saver_reraises_daemon_exception():
+    """A stage-2 write failure must not be lost in the daemon thread:
+    drain() re-raises the first captured exception (and the daemon
+    thread survives to process later tasks)."""
+    store = make_store()
+    saver = TwoStageSaver(store, n_threads=1)
+    bad = SnapshotTask(["s", "t"], "h", 0, [0],   # missing start for "t"
+                       np.ones((2, 8, 4), np.float16))
+    saver.snapshot(bad)                         # daemon IndexErrors on b=1
+    with pytest.raises(IndexError):
+        saver.drain()
+    saver.snapshot(SnapshotTask(["s"], "h", 0, [0],
+                                np.ones((1, 8, 4), np.float16)))
+    saver.drain()                               # exception was cleared
+    saver.close()
+
+
+def test_chunk_store_cold_tier_demotion():
+    """demote_session_to_cold moves a session's bytes out of the hot
+    (budgeted) tier; reads fall back transparently, drops cover both."""
+    cold = make_array("dram", 4)
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=8,
+                       cold_devices=cold)
+    data = np.arange(24 * 4, dtype=np.float32).reshape(24, 4)
+    store.append_tokens("s", "h", 0, 0, data)
+    store.flush("s")
+    store.put_manifest("s", {"n_tokens": 24, "methods": ["hidden"]})
+    hot_before = store.bytes_used
+    moved = store.demote_session_to_cold("s")
+    assert moved == hot_before > 0
+    assert store.bytes_used == 0 and store.bytes_cold == moved
+    np.testing.assert_array_equal(store.read_layer("s", "h", 0, 24), data)
+    assert store.get_manifest("s")["n_tokens"] == 24
+    assert store.sessions() == ["s"]
+    assert store.demote_session_to_cold("s") == 0     # nothing hot left
+    store.drop_session("s")
+    assert store.sessions() == [] and store.bytes_cold == 0
+
+
+def test_bytes_for_per_session_per_stream():
+    store = make_store(chunk=8)
+    store.append_tokens("a", "h", 0, 0, np.ones((8, 4), np.float32))
+    store.append_tokens("a", "kvk", 0, 0, np.ones((8, 2), np.float32))
+    store.append_tokens("b", "h", 0, 0, np.ones((8, 4), np.float32))
+    store.flush("a")
+    store.flush("b")
+    assert store.bytes_for("a", "h") == 8 * 4 * 4
+    assert store.bytes_for("a", "kvk") == 8 * 2 * 4
+    assert store.bytes_for("a") == 8 * 6 * 4
+    assert store.bytes_for("b") == 8 * 4 * 4
+
+
 def test_layer_available_checks_covering_chunks():
     """layer_available must check the chunks covering the queried range,
     not only chunk 0 (a crash mid-save leaves a prefix of chunks)."""
