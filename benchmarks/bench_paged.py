@@ -1,0 +1,126 @@
+"""Paged vs contiguous KV cache at an equal cache-memory budget
+(DESIGN.md §9): the occupancy case for block tables.
+
+Both engines get the same physical KV capacity — ``POOL_TOKENS`` cache
+positions. The contiguous layout must carve it into ``max_seq``-sized
+slots (POOL_TOKENS / MAX_SEQ concurrent sessions, however short they
+are); the paged backend reserves pages for each session's actual
+worst-case length, so short chat sessions pack many-per-slot-equivalent
+and admitted concurrency rises. Greedy outputs must stay byte-identical
+— paging is a layout change, not a model change.
+
+Reported per backend: peak admitted concurrency, mean/peak occupancy
+(live tokens / reserved tokens), mean wall TTFT, decode steps to drain
+the workload. Emits BENCH_paged.json for CI trending.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import emit
+
+N_SESSIONS = 8
+MAX_SEQ = 128
+BLOCK_SIZE = 16
+POOL_TOKENS = 2 * MAX_SEQ       # = 2 contiguous slots of cache memory
+GEN_TOKENS = 4
+
+
+def _build_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.config.arch import reduced_for_smoke
+    from repro.configs import get_arch
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    from repro.models import Model
+    from repro.models.module import split
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced_for_smoke(get_arch("llama2-7b"))
+    model = Model(cfg, rules=default_rules(mesh), model_axis=1,
+                  dtype=jnp.float32, remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def _run_engine(cfg, model, params, *, backend: str):
+    from repro.config.hardware import PAPER_A100
+    from repro.core.hcache import HCacheManager
+    from repro.serving import InferenceEngine, Request
+    from repro.storage import ChunkStore, make_array
+
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden", store_dtype=np.float32)
+    if backend == "contiguous":
+        # the memory budget fixes the slot count: POOL_TOKENS / MAX_SEQ
+        eng_kw = dict(max_batch=POOL_TOKENS // MAX_SEQ)
+    else:
+        # same KV bytes as a page pool; slots are now free to exceed it
+        eng_kw = dict(max_batch=N_SESSIONS, block_size=BLOCK_SIZE,
+                      cache_blocks=POOL_TOKENS // BLOCK_SIZE)
+    engine = InferenceEngine(model, params, mgr, max_seq=MAX_SEQ,
+                             prefill_chunk=8, backend=backend, **eng_kw)
+    rng = np.random.default_rng(0)              # same workload per backend
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in rng.integers(8, 24, size=N_SESSIONS)]
+    for i, p in enumerate(prompts):
+        engine.submit(Request(f"chat-{i}", p, max_new_tokens=GEN_TOKENS))
+    engine.run()
+    outputs = {f"chat-{i}": engine.result(f"chat-{i}")
+               for i in range(N_SESSIONS)}
+    m = engine.metrics
+    stats = {
+        "backend": backend,
+        "cache_capacity_tokens": POOL_TOKENS,
+        "sessions": N_SESSIONS,
+        "max_batch": eng_kw["max_batch"],
+        "concurrent_peak": m.concurrent_peak,
+        "live_tokens_peak": m.live_tokens_peak,
+        "reserved_tokens_peak": m.reserved_tokens_peak,
+        "occupancy_mean": m.occupancy_mean,
+        "fragmentation_mean": m.fragmentation_mean,
+        "alloc_stalls": m.alloc_stalls,
+        "decode_steps": m.decode_steps,
+        "engine_steps": engine.step_count,
+        "mean_ttft_wall_s": float(np.mean(m.ttft_wall)),
+        "max_ttft_wall_s": float(np.max(m.ttft_wall)),
+        "mean_tbt_wall_s": (float(np.mean(m.tbt_wall))
+                            if m.tbt_wall else 0.0),
+    }
+    engine.close()
+    return stats, outputs
+
+
+def run_paged_comparison(out_path: str = "BENCH_paged.json"):
+    cfg, model, params = _build_model()
+    results = {"workload": {"sessions": N_SESSIONS, "max_seq": MAX_SEQ,
+                            "block_size": BLOCK_SIZE,
+                            "cache_capacity_tokens": POOL_TOKENS,
+                            "gen_tokens": GEN_TOKENS},
+               "backends": {}}
+    rows, outs = [], {}
+    for backend in ("contiguous", "paged"):
+        stats, outputs = _run_engine(cfg, model, params, backend=backend)
+        results["backends"][backend] = stats
+        outs[backend] = outputs
+        rows.append((f"bench_paged_{backend}",
+                     stats["mean_ttft_wall_s"] * 1e6,
+                     f"concurrency={stats['concurrent_peak']};"
+                     f"occupancy={stats['occupancy_mean']:.2f};"
+                     f"steps={stats['engine_steps']}"))
+    co = results["backends"]["contiguous"]
+    pa = results["backends"]["paged"]
+    results["outputs_identical"] = outs["contiguous"] == outs["paged"]
+    results["paged_admits_more"] = bool(
+        pa["concurrent_peak"] > co["concurrent_peak"])
+    results["concurrency_gain"] = (pa["concurrent_peak"]
+                                   / max(co["concurrent_peak"], 1))
+    results["occupancy_gain"] = (pa["occupancy_mean"]
+                                 / max(co["occupancy_mean"], 1e-9))
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return emit(rows)

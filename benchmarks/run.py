@@ -39,12 +39,15 @@ def main() -> None:
     p.add_argument("--smoke", action="store_true",
                    help="fast analytic suites only (CI)")
     p.add_argument("--mode", default=None,
-                   choices=["bench_restoration", "bench_capacity"],
+                   choices=["bench_restoration", "bench_capacity",
+                            "bench_paged"],
                    help="special modes: bench_restoration compares "
                         "blocking vs pipelined TTFT -> "
                         "BENCH_restoration.json; bench_capacity runs the "
                         "eviction-policy + host-budget bake-off -> "
-                        "BENCH_capacity.json")
+                        "BENCH_capacity.json; bench_paged compares paged "
+                        "vs contiguous KV layouts at equal cache memory "
+                        "-> BENCH_paged.json")
     args = p.parse_args()
     print("name,us_per_call,derived")
     if args.mode == "bench_restoration":
@@ -58,6 +61,11 @@ def main() -> None:
         rows = run_capacity_comparison()
         print(f"# {len(rows)} rows -> BENCH_capacity.json",
               file=sys.stderr)
+        return
+    if args.mode == "bench_paged":
+        from benchmarks.bench_paged import run_paged_comparison
+        rows = run_paged_comparison()
+        print(f"# {len(rows)} rows -> BENCH_paged.json", file=sys.stderr)
         return
     filters = args.only.split(",") if args.only else None
     t0 = time.time()

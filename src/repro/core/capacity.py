@@ -26,6 +26,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.cost_model import layer_costs, method_times
 from repro.core.restoration import compile_tasks, replay
 
@@ -75,17 +77,28 @@ class FIFOAdmission(AdmissionPolicy):
 class RestoreCostAwareAdmission(AdmissionPolicy):
     """Shortest-restore-first: admit the session whose time-to-resume is
     smallest (cold sessions estimate 0 — prompt prefill is paid either
-    way). Minimizes mean TTFT at the cost of fairness; pair with a
-    preemption quantum to bound starvation."""
+    way). Minimizes mean TTFT; pure SJF starves long-history sessions,
+    so an aging credit (seconds of makespan per engine step waited,
+    measured from ``SequenceState.enqueue_step``) lowers a request's
+    effective cost the longer it queues — any session eventually ages
+    below the cheapest newcomer and must be admitted."""
 
     name = "restore_cost"
+
+    def __init__(self, aging: float = 0.0):
+        self.aging = aging
 
     def select(self, queue, engine):
         if not queue:
             return None
-        return min(queue, key=lambda s: (
-            session_restore_cost(engine.mgr, s.request.session_id),
-            s.request.request_id))
+        now = getattr(engine, "step_count", 0)
+
+        def key(s):
+            waited = max(now - getattr(s, "enqueue_step", 0), 0)
+            cost = session_restore_cost(engine.mgr, s.request.session_id)
+            return (cost - self.aging * waited, s.request.request_id)
+
+        return min(queue, key=key)
 
 
 class PriorityAdmission(AdmissionPolicy):
@@ -230,6 +243,43 @@ class CapacityManager:
             if s is not None:
                 self.touch(s.request.session_id, engine.step_count)
         self.ensure_host_budget()
+
+    # ---------------------------------------------------------- promotion
+    def consider_promotion(self, session_id: str) -> bool:
+        """Anti-entropy, minimal on-save variant: when a session demoted
+        to the int8 hidden codec is saved again while the byte budget has
+        headroom, re-encode its 'h' stream at fp16 so the stream stops
+        accumulating quantization loss and restores at full speed. The
+        engine calls this after every save (``_after_save``); it is a
+        no-op without a budget, for non-demoted sessions, or when the
+        fp16 re-encode (~2x the int8 'h' bytes, written to the hot tier)
+        would not fit."""
+        if self.host_budget_bytes is None:
+            return False
+        eng = self._engine
+        if eng is not None:
+            # same rule as the demotion ladder's _protected(): never
+            # re-encode streams a live prefetch executor may be reading —
+            # a *queued* duplicate request for this (resident) session
+            # can have chunk reads in flight against the int8 layout
+            queued = {s.request.session_id for s in eng.queue}
+            if session_id in queued or session_id in eng._prefetch:
+                return False
+        man = self.mgr.store.get_manifest(session_id)
+        if not man or man.get("compress", "none") != "int8":
+            return False
+        headroom = self.host_budget_bytes - self.store.bytes_used
+        # int8 'h' bytes == element count; the re-encode lands in the hot
+        # tier at store_dtype width (fp16 per the paper, fp32 when the
+        # functional model runs fp32 — NOT a hard-coded 2 bytes)
+        itemsize = np.dtype(self.mgr.store_dtype).itemsize
+        extra = itemsize * self.store.bytes_for(session_id, "h")
+        if headroom < extra:
+            return False
+        if self.mgr.promote_hidden_fp16(session_id):
+            self.actions.append(("promote", session_id))
+            return True
+        return False
 
     def _apply(self, stage: str, sid: str) -> bool:
         if stage == "cold":

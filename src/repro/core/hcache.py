@@ -308,6 +308,41 @@ class HCacheManager:
         self._session_compress[session] = "int8"
         return True
 
+    def promote_hidden_fp16(self, session: str) -> bool:
+        """Inverse of ``demote_hidden_int8`` (capacity anti-entropy):
+        re-encode the session's int8 'h' stream at the manager's
+        store_dtype and drop the scales, so future appends and restores
+        run the full-fidelity codec again. The already-quantized prefix
+        keeps its int8-level error (the fp16 values are dequantized int8)
+        — promotion stops *further* loss, it cannot undo past loss.
+        Returns False when not applicable."""
+        man = self.store.get_manifest(session)
+        if not man or man.get("compress", "none") != "int8":
+            return False
+        n = int(man.get("n_tokens", 0))
+        kinds = self.cfg.block_kinds()
+        layers = [li for li, m in enumerate(man["methods"])
+                  if m == "hidden" and kinds[li] == BlockKind.ATTENTION
+                  and self.store.layer_available(session, "h", li, n)
+                  and self.store.layer_available(session, "hs", li, n)]
+        if n == 0 or not layers:
+            return False
+        from repro.core.restoration import dequantize_hidden_int8
+        data = {}
+        for li in layers:
+            q = np.asarray(self.store.read_layer(session, "h", li, n))
+            s = np.asarray(self.store.read_layer(session, "hs", li, n))
+            data[li] = dequantize_hidden_int8(q, s).astype(self.store_dtype)
+        self.store.drop_stream(session, "h")
+        self.store.drop_stream(session, "hs")
+        for li, h in data.items():
+            self.store.append_tokens(session, "h", li, 0, h)
+        self.store.flush(session)
+        man["compress"] = "none"
+        self.store.put_manifest(session, man)
+        self._session_compress[session] = "none"
+        return True
+
     def degrade_to_recompute(self, session: str) -> bool:
         """Drop a session's hidden/KV streams entirely, keeping only the
         token blob + manifest: the session stays restorable by full

@@ -1,9 +1,21 @@
-"""Pallas TPU kernel: single-token decode attention (flash-decoding style).
+"""Pallas TPU kernels: single-token decode attention (flash-decoding style).
 
 One query token per sequence against a long KV cache. Grid =
 (batch·kv_heads, Skv/BK): each cell processes one KV block for all the
 query heads of that kv group (GQA rows share the block), maintaining
 running max/sum in VMEM scratch. Blocks past the live length are skipped.
+
+Two cache layouts share the same kernel body:
+
+  * ``decode_attention_pallas``       — contiguous (BKv, Smax, hd) caches;
+  * ``decode_attention_paged_pallas`` — a physical page pool
+    (num_blocks, block_size, hd) addressed through a per-sequence block
+    table. The table rides in as a scalar-prefetch argument
+    (``PrefetchScalarGridSpec``), so the K/V BlockSpec index maps read
+    ``table[b, j]`` and the grid walks *logical* pages while DMA fetches
+    *physical* ones — the vLLM paged-attention structure. The j-th grid
+    cell still covers logical positions [j·bs, (j+1)·bs), so the masking
+    arithmetic is unchanged from the contiguous kernel.
 """
 from __future__ import annotations
 
@@ -61,6 +73,57 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr,
     def _finalize():
         o_ref[0] = (acc_scr[...]
                     / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, len_ref, o_ref,
+                         m_scr, l_scr, acc_scr, **kw):
+    # the block table only changes *which* physical page the BlockSpec
+    # index maps DMA'd in — positions/masking are identical, so the
+    # contiguous kernel body is reused verbatim
+    _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr,
+                   acc_scr, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window",
+                                             "interpret"))
+def decode_attention_paged_pallas(q, k_pool, v_pool, block_table, kv_len, *,
+                                  softcap=None, window=None,
+                                  interpret: bool = True):
+    """Paged decode attention. q: (BKv, G, hd); k_pool/v_pool:
+    (num_blocks, block_size, hd) physical pages; block_table: (BKv, MB)
+    logical→physical page map — entries >= num_blocks are unallocated
+    sentinels (clamped here; they can only alias pages past ``kv_len``,
+    which the mask zeroes); kv_len: (BKv,) live lengths (int32).
+    Returns (BKv, G, hd)."""
+    BKv, G, hd = q.shape
+    NB, bs, _ = k_pool.shape
+    MB = block_table.shape[1]
+    tbl = jnp.minimum(block_table.astype(jnp.int32), NB - 1)
+    kernel = functools.partial(_paged_decode_kernel, block_k=bs,
+                               scale=hd ** -0.5, softcap=softcap,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BKv, MB),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, j, t: (b, 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, j, t: (t[b, j], 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda b, j, t: (t[b, j], 0, 0)),
+            pl.BlockSpec((1,), lambda b, j, t: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j, t: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BKv, G, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, q, k_pool, v_pool, kv_len)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "window", "block_k",

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_paged_pallas,
+                                            decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.restore_kv import restore_kv_pallas
 from repro.kernels.ssm_update import ssm_update_pallas
@@ -50,6 +51,20 @@ def decode_attention(q, k, v, kv_len, *, softcap=None, window=None,
     interpret = (not on_tpu()) if interpret is None else interpret
     return decode_attention_pallas(q, k, v, kv_len, softcap=softcap,
                                    window=window, interpret=interpret)
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_table, kv_len, *,
+                           softcap=None, window=None, use_pallas=True,
+                           interpret=None):
+    """Paged (block-table) decode attention — see decode_attention.py."""
+    if not use_pallas:
+        return ref.decode_attention_paged_ref(
+            q, k_pool, v_pool, block_table, kv_len, softcap=softcap,
+            window=window)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return decode_attention_paged_pallas(
+        q, k_pool, v_pool, block_table, kv_len, softcap=softcap,
+        window=window, interpret=interpret)
 
 
 def ssm_update(h, dt, x, A, B, C, d_skip, *, use_pallas=True,

@@ -67,6 +67,22 @@ def decode_attention_ref(q, k, v, kv_len, *, softcap=None, window=None):
         q.dtype)
 
 
+def decode_attention_paged_ref(q, k_pool, v_pool, block_table, kv_len, *,
+                               softcap=None, window=None):
+    """jnp oracle for the paged kernel: materialize the logical layout by
+    block-table gather (sentinel entries clamp; whatever they alias lies
+    past ``kv_len`` and carries exactly-zero probability), then reuse the
+    contiguous decode oracle. q (BKv,G,hd); pools (NB,bs,hd);
+    block_table (BKv,MB); kv_len (BKv,)."""
+    NB, bs, hd = k_pool.shape
+    BKv, MB = block_table.shape
+    tbl = jnp.minimum(block_table.astype(jnp.int32), NB - 1)
+    k = k_pool[tbl].reshape(BKv, MB * bs, hd)
+    v = v_pool[tbl].reshape(BKv, MB * bs, hd)
+    return decode_attention_ref(q, k, v, kv_len, softcap=softcap,
+                                window=window)
+
+
 def ssm_update_ref(h, dt, x, A, B, C, d_skip):
     """Mamba1 decode update (see ssm_update.py)."""
     dtf = dt.astype(jnp.float32)

@@ -16,13 +16,15 @@ from repro.config.arch import reduced_for_smoke
 from repro.config.hardware import PROFILES
 from repro.configs import get_arch
 from repro.core.capacity import (ADMISSION_POLICIES, CapacityManager,
-                                 EVICTION_POLICIES)
+                                 EVICTION_POLICIES,
+                                 RestoreCostAwareAdmission)
 from repro.core.hcache import HCacheManager
 from repro.distributed.sharding import default_rules
 from repro.launch.mesh import make_mesh
 from repro.models import Model
 from repro.models.module import split
 from repro.serving import InferenceEngine, Request
+from repro.serving.kv_cache import BACKENDS
 from repro.storage import ChunkStore, make_array
 
 
@@ -47,6 +49,18 @@ def main() -> None:
     p.add_argument("--budget-kb", type=int, default=None,
                    help="host hot-tier byte budget (KiB); enables the "
                         "capacity demotion ladder with a DRAM cold tier")
+    p.add_argument("--backend", default="contiguous",
+                   choices=sorted(BACKENDS),
+                   help="KV-cache layout: contiguous slots or a "
+                        "block-table page pool (lm models)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="paged backend: tokens per physical page")
+    p.add_argument("--cache-blocks", type=int, default=None,
+                   help="paged backend: physical pages in the pool "
+                        "(default max_batch * max_seq / block_size)")
+    p.add_argument("--admission-aging", type=float, default=0.0,
+                   help="restore_cost admission: seconds of makespan "
+                        "credit per queued engine step (anti-starvation)")
     args = p.parse_args()
 
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -63,12 +77,18 @@ def main() -> None:
     mgr = HCacheManager(model, store, hw=PROFILES[args.profile])
     capacity = (CapacityManager(mgr, host_budget_bytes=args.budget_kb * 1024)
                 if args.budget_kb else None)
+    admission = (RestoreCostAwareAdmission(aging=args.admission_aging)
+                 if args.admission == "restore_cost"
+                 else ADMISSION_POLICIES[args.admission]())
     engine = InferenceEngine(model, params, mgr, max_batch=args.max_batch,
                              max_seq=args.max_seq,
                              preempt_quantum=args.preempt_quantum,
                              eviction=EVICTION_POLICIES[args.eviction](),
-                             admission=ADMISSION_POLICIES[args.admission](),
-                             capacity=capacity)
+                             admission=admission,
+                             capacity=capacity,
+                             backend=args.backend,
+                             block_size=args.block_size,
+                             cache_blocks=args.cache_blocks)
 
     rng = np.random.default_rng(0)
     for rnd in range(args.rounds):
@@ -90,6 +110,12 @@ def main() -> None:
           f"store {store.bytes_used / 1e6:.1f} MB hot "
           f"/ {store.bytes_cold / 1e6:.1f} MB cold across "
           f"{len(store.devices)} devices")
+    print(f"cache backend {engine.kv.name}: peak concurrency "
+          f"{m.concurrent_peak} slots, peak live/reserved tokens "
+          f"{m.live_tokens_peak}/{m.reserved_tokens_peak}, mean occupancy "
+          f"{m.occupancy_mean:.2f} (fragmentation "
+          f"{m.fragmentation_mean:.2f}), free blocks {m.free_blocks}, "
+          f"alloc stalls {m.alloc_stalls}")
     if capacity is not None and capacity.actions:
         print("capacity ladder actions:", capacity.actions)
     print("recoverable sessions:", engine.recoverable_sessions())

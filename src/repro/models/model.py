@@ -158,6 +158,15 @@ class Model:
             return hybrid.hybrid_decode_step(params, cache, tokens, self.h)
         return tfm.lm_decode_step(params, cache, tokens, self.h)
 
+    def decode_step_paged(self, params, cache, tokens):
+        """Decode step over a block-table paged cache (serving engine's
+        'paged' KVCacheBackend; see serving/kv_cache.py)."""
+        if self.kind != "lm":
+            raise NotImplementedError(
+                f"paged decode requires an lm-family model; "
+                f"{self.cfg.name} is {self.kind!r}")
+        return tfm.lm_decode_step_paged(params, cache, tokens, self.h)
+
     # ------------------------------------------------------------ HCache op
     def restore_kv_from_hidden(self, params, hidden, *, positions):
         """The paper's restoration GEMM (families with attention)."""
@@ -297,6 +306,25 @@ class Model:
         if "enc_len" in cache:
             cache["enc_len"] = jnp.asarray(enc_len, jnp.int32)
         return cache
+
+    def init_paged_cache(self, batch: int, num_blocks: int,
+                         block_size: int, max_blocks_per_seq: int):
+        """Zero-initialized block-table paged decode cache (lm family).
+
+        k_pool/v_pool: (L, num_blocks, block_size, Kv, hd) physical
+        pages; block_table: (batch, max_blocks_per_seq) int32 with
+        ``num_blocks`` as the unallocated sentinel; lengths: (batch,)."""
+        if self.kind != "lm":
+            raise NotImplementedError(
+                f"paged KV cache requires an lm-family model; "
+                f"{self.cfg.name} is {self.kind!r}")
+        c = self.cfg
+        kv = jnp.zeros((c.n_layers, num_blocks, block_size, c.n_kv_heads,
+                        c.head_dim_), self.dtype)
+        return {"k_pool": kv, "v_pool": jnp.zeros_like(kv),
+                "block_table": jnp.full((batch, max_blocks_per_seq),
+                                        num_blocks, jnp.int32),
+                "lengths": jnp.zeros((batch,), jnp.int32)}
 
     def param_shardings(self, mesh):
         _, axes = self.abstract_params()

@@ -206,6 +206,50 @@ def block_decode(p, x, h: LMHyper, *, k_cache, v_cache, lengths, window):
     return x, k_cache, v_cache, hidden_in
 
 
+def block_decode_paged(p, x, h: LMHyper, *, k_pool, v_pool, block_table,
+                       blk, off, lengths, window):
+    """Single-token block over a paged KV cache.
+
+    x: (B,1,D); pools (NB, bs, Kv, hd) physical pages; block_table
+    (B, MB) logical→physical page map (entries >= NB are unallocated
+    sentinels); blk/off (B,) precomputed write address of the new token.
+    The new KV is scattered into its page (sentinel writes drop), then
+    attention runs over the block-table gather of the logical layout —
+    identical math to ``block_decode``: masked positions contribute
+    exactly-zero probability, so gathered junk past the live length
+    cannot perturb the output."""
+    c = h.cfg
+    hidden_in = x
+    positions = lengths[:, None]                       # (B,1)
+    normed = apply_norm(p["ln1"], x, c.norm, c.norm_eps)
+    q, k, v = attn_lib.project_qkv(p["attn"], normed, h.attn, h.rules,
+                                   positions)
+    k_pool = k_pool.at[blk, off].set(k[:, 0], mode="drop")
+    v_pool = v_pool.at[blk, off].set(v[:, 0], mode="drop")
+    k_pool = constrain(k_pool, h.rules, None, None, "kv_heads", "head_dim")
+    v_pool = constrain(v_pool, h.rules, None, None, "kv_heads", "head_dim")
+    B, MB = block_table.shape
+    NB, bs = k_pool.shape[0], k_pool.shape[1]
+    table = jnp.minimum(block_table, NB - 1)           # clamp sentinels
+    k_cache = k_pool[table].reshape(B, MB * bs, *k_pool.shape[2:])
+    v_cache = v_pool[table].reshape(B, MB * bs, *v_pool.shape[2:])
+    w = None
+    if window is not None:
+        w = window if not isinstance(window, int) else jnp.asarray(window)
+    attn_out = attn_lib.decode_attention_jnp(
+        q, k_cache, v_cache, h.attn, kv_len=lengths + 1, window=w)
+    attn_out = attn_lib.attn_output(p["attn"], attn_out, h.rules)
+    if c.post_attn_norm:
+        attn_out = apply_norm(p["post_ln1"], attn_out, c.norm, c.norm_eps)
+    x = x + attn_out
+    normed2 = apply_norm(p["ln2"], x, c.norm, c.norm_eps)
+    ff, _ = _ffn(p, normed2, h)
+    if c.post_attn_norm:
+        ff = apply_norm(p["post_ln2"], ff, c.norm, c.norm_eps)
+    x = x + ff
+    return x, k_pool, v_pool, hidden_in
+
+
 def _remat_wrap(fn, h: LMHyper):
     if h.remat == "none":
         return fn
@@ -297,6 +341,48 @@ def lm_decode_step(params, cache, tokens, h: LMHyper):
     lg = embed_logits(params["embed"], x, h.rules, softcap=c.logit_softcap,
                       true_vocab=c.vocab_size)
     new_cache = {"k": nk, "v": nv, "lengths": lengths + 1}
+    return lg, new_cache, hidden
+
+
+def lm_decode_step_paged(params, cache, tokens, h: LMHyper):
+    """One continuous-batching decode step over a paged KV cache.
+
+    cache: dict(k_pool/v_pool (L, NB, bs, Kv, hd), block_table (B, MB)
+    int32, lengths (B,)). tokens: (B,1). Returns (logits, new cache,
+    per-layer hidden) — same contract as ``lm_decode_step``; with every
+    live position mapped by the block table this is byte-identical to
+    the contiguous step at logical width MB·bs == Smax."""
+    c = h.cfg
+    lengths = cache["lengths"]
+    bt = cache["block_table"]
+    bs = cache["k_pool"].shape[2]
+    x = _embed_input(params, h, tokens, lengths[:, None])
+    x = constrain(x, h.rules, "batch", None, "d_model")
+    windows = layer_windows(h)
+    B = tokens.shape[0]
+    MB = bt.shape[1]
+    NB = cache["k_pool"].shape[1]
+    bidx = jnp.arange(B)
+    li = lengths // bs
+    # a logical page past the table (slot exactly full) must become a
+    # dropped sentinel write, not clamp into the slot's last live page
+    blk = jnp.where(li < MB, bt[bidx, jnp.minimum(li, MB - 1)], NB)
+    off = lengths % bs
+
+    def body(x, xs):
+        bp, win, kp, vp = xs
+        x, nk, nv, hidden = block_decode_paged(
+            bp, x, h, k_pool=kp, v_pool=vp, block_table=bt, blk=blk,
+            off=off, lengths=lengths, window=win)
+        return x, (nk, nv, hidden)
+
+    xs = (params["blocks"], windows, cache["k_pool"], cache["v_pool"])
+    x, (nk, nv, hidden) = jax.lax.scan(body, x, xs)
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    lg = embed_logits(params["embed"], x, h.rules, softcap=c.logit_softcap,
+                      true_vocab=c.vocab_size)
+    new_cache = {"k_pool": nk, "v_pool": nv, "block_table": bt,
+                 "lengths": lengths + 1}
     return lg, new_cache, hidden
 
 

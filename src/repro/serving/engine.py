@@ -32,6 +32,14 @@ Request lifecycle (paper §5, DESIGN.md §6/§8):
                              are dumped (``save_session_pause``) and the slot
                              is freed — the session remains restorable.
 
+Cache state lives behind a ``KVCacheBackend`` (serving/kv_cache.py,
+DESIGN.md §9): the classic ``contiguous`` layout (max_seq positions per
+slot) or the block-table ``paged`` layout, where admission reserves only
+the pages a session can actually use — a full page pool, not a full slot
+table, is what back-pressures the queue. The engine touches cache state
+exclusively through per-slot ``CacheView`` handles (restore writes,
+history gathers, pause/retire snapshots, frees).
+
 Admission is pluggable (FIFO / restore-cost-aware / priority — see
 core/capacity.py), as is victim selection (LRU / restore-cost-weighted).
 An optional CapacityManager enforces a host-storage byte budget by
@@ -42,17 +50,16 @@ session (`recoverable_sessions`) — serving-side fault tolerance is HCache
 itself.
 
 Metrics per request: wall TTFT, simulated restoration time (hardware
-profile, restored sessions only), TBT; engine-level counters for the
-benchmark harness.
+profile, restored sessions only), TBT; engine-level counters plus
+occupancy/fragmentation gauges for the benchmark harness.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -60,6 +67,7 @@ from repro.core.capacity import (CapacityManager, EvictionPolicy,
                                  AdmissionPolicy, FIFOAdmission, LRUEviction)
 from repro.core.hcache import HCacheManager
 from repro.models.model import Model
+from repro.serving.kv_cache import KVCacheBackend, ViewSink, make_backend
 from repro.serving.request import Phase, Request, SequenceState
 from repro.serving.sampling import sample
 
@@ -86,41 +94,31 @@ class EngineMetrics:
     restore_io_measured: float = 0.0    # striped-device completion (sim SSD)
     decode_steps: int = 0
     snapshot_cost: float = 0.0
+    # occupancy / fragmentation gauges (KVCacheBackend.occupancy, sampled
+    # once per engine step while any slot is occupied). live = tokens in
+    # occupied slots; reserved = capacity handed out to them — the gap is
+    # internal fragmentation (max_seq over-reservation under contiguous,
+    # page rounding under paged).
+    live_tokens: int = 0                # last sample
+    reserved_tokens: int = 0
+    free_blocks: int = 0
+    live_tokens_peak: int = 0
+    reserved_tokens_peak: int = 0
+    concurrent_peak: int = 0            # max sessions resident at once
+    # running (sum, count) rather than a per-step list: a long-lived
+    # serving process must not grow memory linearly with engine steps
+    occupancy_sum: float = 0.0
+    occupancy_count: int = 0
+    alloc_stalls: int = 0               # admissions deferred: pool exhausted
 
+    @property
+    def occupancy_mean(self) -> float:
+        return (self.occupancy_sum / self.occupancy_count
+                if self.occupancy_count else 0.0)
 
-class _SlotSink:
-    """RestoreSink writing restored pieces directly into the engine's
-    batch-slot cache buffers — per layer, as each finishes; there is no
-    intermediate B=1 cache."""
-
-    def __init__(self, engine: "InferenceEngine", slot: int):
-        self.engine = engine
-        self.slot = slot
-
-    def put_kv(self, row, k, v):
-        eng = self.engine
-        k_name, v_name = {"lm": ("k", "v"),
-                          "hybrid": ("attn_k", "attn_v"),
-                          "encdec": ("self_k", "self_v")}[eng.model.kind]
-        row = jnp.asarray(row)                # traced: no recompile per row
-        slot = jnp.asarray(self.slot)
-        for name, val in ((k_name, k), (v_name, v)):
-            buf = eng.cache[name]
-            val = jnp.asarray(val, buf.dtype)[None]       # (1, 1, n, H, hd)
-            eng.cache[name] = eng._slot_update(buf, val, row, slot)
-
-    def put_states(self, conv, ssm):
-        self.engine._place_cache(self.slot, {"conv": conv, "ssm": ssm}, 0)
-
-    def put_cross(self, ck, cv, enc_len):
-        self.engine._place_cache(self.slot, {"cross_k": ck, "cross_v": cv,
-                                             "enc_len": jnp.asarray(
-                                                 enc_len, jnp.int32)}, 0)
-
-    def finish(self, n_tokens):
-        eng = self.engine
-        eng.cache["lengths"] = eng.cache["lengths"].at[self.slot].set(
-            n_tokens)
+    @property
+    def fragmentation_mean(self) -> float:
+        return 1.0 - self.occupancy_mean if self.occupancy_count else 0.0
 
 
 class InferenceEngine:
@@ -132,7 +130,10 @@ class InferenceEngine:
                  admission: Optional[AdmissionPolicy] = None,
                  eviction: Optional[EvictionPolicy] = None,
                  preempt_quantum: Optional[int] = None,
-                 capacity: Optional[CapacityManager] = None):
+                 capacity: Optional[CapacityManager] = None,
+                 backend: Union[str, KVCacheBackend] = "contiguous",
+                 block_size: int = 16,
+                 cache_blocks: Optional[int] = None):
         self.model = model
         self.params = params
         self.mgr = manager
@@ -152,26 +153,23 @@ class InferenceEngine:
         if capacity is not None:
             capacity.attach_engine(self)
 
-        self.cache = model.init_cache(max_batch, max_seq)
+        # all cache state (contiguous slots or a paged pool + block
+        # tables) lives behind the backend; the engine only holds views
+        self.kv = make_backend(backend, model, max_batch, max_seq,
+                               block_size=block_size,
+                               num_blocks=cache_blocks)
         self.queue: deque = deque()
         self.slots: List[Optional[SequenceState]] = [None] * max_batch
         self.sessions: Dict[str, SequenceState] = {}
         self._prefetch: Dict[str, object] = {}   # session -> warm executor
         self.metrics = EngineMetrics()
         self.step_count = 0
-        self._decode = jax.jit(model.decode_step_full)
-        # donated so XLA updates the stacked KV buffer in place — a
-        # per-layer restore write must not copy the whole (L,B,S,H,hd)
-        # cache (retraces only per distinct restored length n)
-        self._slot_update = jax.jit(
-            lambda buf, val, row, slot: jax.lax.dynamic_update_slice(
-                buf, val, (row, slot, 0, 0, 0)),
-            donate_argnums=(0,))
 
     # ----------------------------------------------------------- submission
     def submit(self, request: Request) -> SequenceState:
         seq = SequenceState(request=request)
         seq.request.arrival_time = time.perf_counter()
+        seq.enqueue_step = self.step_count
         self.queue.append(seq)
         return seq
 
@@ -185,6 +183,16 @@ class InferenceEngine:
                 return i
         return None
 
+    def _tokens_needed(self, seq: SequenceState) -> int:
+        """Worst-case final token length of this residency: stored
+        history + the pending prompt + the decode tokens still owed.
+        What a paged reservation must cover (contiguous always reserves
+        max_seq)."""
+        manifest = self.mgr.store.get_manifest(seq.request.session_id)
+        stored = int(manifest["n_tokens"]) if manifest else 0
+        return (stored + len(seq.effective_prompt)
+                + seq.request.max_new_tokens - len(seq.generated))
+
     def _admit(self) -> None:
         while self.queue:
             slot = self._free_slot()
@@ -193,16 +201,29 @@ class InferenceEngine:
             seq = self.admission.select(tuple(self.queue), self)
             if seq is None:
                 break
+            if not self.kv.can_reserve(self._tokens_needed(seq)):
+                # allocator backpressure: a free slot exists but the page
+                # pool cannot hold the session — wait for retires/frees
+                self.metrics.alloc_stalls += 1
+                break
             self.queue.remove(seq)
-            self._place(seq, slot)
+            if not self._place(seq, slot):
+                break
         self._prefetch_queued()
 
-    def _place(self, seq: SequenceState, slot: int) -> None:
-        """Bind a (possibly resuming) sequence to a free batch slot."""
+    def _place(self, seq: SequenceState, slot: int) -> bool:
+        """Bind a (possibly resuming) sequence to a free batch slot.
+        False iff the backend could not reserve capacity (the sequence is
+        requeued and the slot stays free)."""
+        sid = seq.request.session_id
+        if not self.kv.reserve(slot, self._tokens_needed(seq)):
+            self.metrics.alloc_stalls += 1
+            self.queue.appendleft(seq)
+            return False
         seq.slot = slot
         seq.admit_step = self.step_count
+        seq.view = self.kv.view(slot)
         self.slots[slot] = seq
-        sid = seq.request.session_id
         self.sessions[sid] = seq
         if self.capacity is not None:
             self.capacity.touch(sid, self.step_count)
@@ -222,17 +243,17 @@ class InferenceEngine:
                 ex = None
             if ex is None:
                 ex = self.mgr.begin_restore(self.params, sid)
-            ex.attach_sink(_SlotSink(self, slot))
+            ex.attach_sink(ViewSink(seq.view))
             seq.executor = ex
             # reserve [0, n) now: concurrent decode steps park their
             # scratch KV write at position n (later overwritten by
             # this session's own prefill), never inside the restored
             # range
-            self.cache["lengths"] = self.cache["lengths"].at[slot].set(
-                ex.n_tokens)
+            self.kv.set_length(slot, ex.n_tokens)
         else:
             seq.phase = Phase.PREFILL
             self._prefill_step(seq)
+        return True
 
     # ----------------------------------------------------------- preemption
     def _maybe_preempt(self) -> None:
@@ -244,9 +265,15 @@ class InferenceEngine:
         # hist_kv, which only attention-history models support — an
         # ssm/hybrid resume would restart its recurrent states from zero
         if (self.preempt_quantum is None or not self.save_hidden
-                or self.model.kind != "lm"
-                or not self.queue or self._free_slot() is not None):
+                or self.model.kind != "lm" or not self.queue):
             return
+        if self._free_slot() is not None:
+            # a slot is open, so preemption is only justified when the
+            # second admission gate — the page pool — is what's blocking
+            # the queue; pausing a victim recycles its pages
+            seq = self.admission.select(tuple(self.queue), self)
+            if seq is None or self.kv.can_reserve(self._tokens_needed(seq)):
+                return
         candidates = [s for s in self.slots
                       if s is not None and s.phase == Phase.DECODE
                       and s.generated and not s.finished()
@@ -265,16 +292,17 @@ class InferenceEngine:
 
     def _pause_slot(self, i: int) -> None:
         """Evict the resident of slot ``i`` mid-decode: dump restorable
-        state (``save_session_pause``), requeue the sequence as PAUSED.
-        The last sampled token (whose KV does not exist yet) becomes the
-        1-token resume prefill after restoration."""
+        state (``view.snapshot()``), free the slot's pages, requeue the
+        sequence as PAUSED. The last sampled token (whose KV does not
+        exist yet) becomes the 1-token resume prefill after restoration."""
         s = self.slots[i]
         sid = s.request.session_id
         n = s.total_len
         self.mgr.saver.drain()
         self.mgr.save_session_pause(
-            sid, self._slot_cache_slice(i), n - 1,
+            sid, s.view.snapshot(), n - 1,
             tokens_tail=np.asarray(s.generated[s.tok_saved:-1], np.int32))
+        self._after_save(sid)
         s.tok_saved = len(s.generated) - 1
         s.gen_absorbed = len(s.generated)
         s.pending_prompt = np.asarray([s.generated[-1]], np.int32)
@@ -284,7 +312,10 @@ class InferenceEngine:
         s.phase = Phase.PAUSED
         s.slot = -1
         s.executor = None
+        s.view.free()
+        s.view = None
         s.pauses += 1
+        s.enqueue_step = self.step_count
         self.slots[i] = None
         self.queue.append(s)
         self.metrics.preemptions += 1
@@ -328,30 +359,6 @@ class InferenceEngine:
         if ran:
             self.metrics.restore_steps += 1
 
-    def _place_cache(self, slot: int, piece: dict, n: int) -> None:
-        """Place whole-object cache pieces (SSM states, cross KV) into the
-        batch slot. Attention KV lands per layer via ``_SlotSink.put_kv``;
-        there is no stacked B=1 cache copy anywhere in the engine."""
-        for key, val in piece.items():
-            if key == "lengths":
-                self.cache["lengths"] = self.cache["lengths"].at[slot].set(n)
-                continue
-            buf = self.cache.get(key)
-            if buf is None:
-                continue
-            val = jnp.asarray(val, buf.dtype)
-            if key in ("conv", "ssm"):
-                idx = (0,) * (buf.ndim - val.ndim + 1)
-                bdim = buf.ndim - val.ndim + 1  # batch dim position
-                self.cache[key] = jax.lax.dynamic_update_slice(
-                    buf, val, (0,) * (bdim - 1) + (slot,)
-                    + (0,) * (buf.ndim - bdim))
-            elif key in ("cross_k", "cross_v"):
-                self.cache[key] = jax.lax.dynamic_update_slice(
-                    buf, val, (0, slot, 0, 0, 0))
-            elif key == "enc_len":
-                self.cache[key] = val
-
     # -------------------------------------------------------------- prefill
     def _prefill_step(self, seq: SequenceState) -> None:
         """Process up to ``prefill_chunk`` prompt tokens (SplitFuse).
@@ -376,7 +383,7 @@ class InferenceEngine:
                 "enc-dec (whisper) serving uses Model.prefill/decode_step "
                 "directly (see tests/test_models.py::"
                 "test_decode_matches_forward[whisper-medium])")
-        hist_kv = (self._slot_hist_kv(seq.slot, hist)
+        hist_kv = (seq.view.gather_hist(hist)
                    if (chunkable and hist) else None)
         out = self.model.prefill(
             self.params, batch, capture_hidden=self.save_hidden,
@@ -391,37 +398,25 @@ class InferenceEngine:
             tok = int(sample(lg, temperature=self.temperature)[0])
             self._emit_token(seq, tok)
 
-    def _slot_hist_kv(self, slot: int, hist: int):
-        """History KV sliced to its true length (hist is concrete, so the
-        concatenated positions in the attention mask line up)."""
-        k = self.cache["k"][:, slot:slot + 1, :hist]
-        v = self.cache["v"][:, slot:slot + 1, :hist]
-        return (k, v)
-
     def _absorb_prefill(self, seq, out, chunk, hist) -> None:
-        """Write prefill KV/states into the slot + persist via HCache."""
-        slot, n = seq.slot, len(chunk)
+        """Write prefill KV/states into the slot's view + persist."""
+        n = len(chunk)
         if self.model.kind == "lm":
             k, v = out["kv"]
-            self.cache["k"] = jax.lax.dynamic_update_slice(
-                self.cache["k"], k, (0, slot, hist, 0, 0))
-            self.cache["v"] = jax.lax.dynamic_update_slice(
-                self.cache["v"], v, (0, slot, hist, 0, 0))
+            seq.view.write_kv(k, v, hist)
         elif self.model.kind == "hybrid":
             k, v = out["kv"]
-            self.cache["attn_k"] = jax.lax.dynamic_update_slice(
-                self.cache["attn_k"], k, (0, slot, hist, 0, 0))
-            self.cache["attn_v"] = jax.lax.dynamic_update_slice(
-                self.cache["attn_v"], v, (0, slot, hist, 0, 0))
+            seq.view.write_kv(k, v, hist)
             conv, ssmst = out["mamba_states"]
-            self._place_cache(slot, {"conv": conv, "ssm": ssmst}, 0)
+            seq.view.write_states({"conv": conv, "ssm": ssmst})
         elif self.model.kind == "ssm":
             conv, ssmst = out["states"]
-            self._place_cache(slot, {"conv": conv, "ssm": ssmst}, 0)
-        self.cache["lengths"] = self.cache["lengths"].at[slot].set(hist + n)
+            seq.view.write_states({"conv": conv, "ssm": ssmst})
+        seq.view.set_length(hist + n)
         if self.save_hidden:
-            self.mgr.save_prefill(seq.request.session_id, np.asarray(chunk),
-                                  out, start=hist)
+            sid = seq.request.session_id
+            self.mgr.save_prefill(sid, np.asarray(chunk), out, start=hist)
+            self._after_save(sid)
 
     # --------------------------------------------------------------- decode
     def _emit_token(self, seq: SequenceState, tok: int) -> None:
@@ -447,15 +442,14 @@ class InferenceEngine:
         for s in self.slots:
             if s is not None and s.phase == Phase.DECODE and s.generated:
                 tokens[s.slot, 0] = s.generated[-1]
-        lg, self.cache, hidden = self._decode(
-            self.params, self.cache, jnp.asarray(tokens))
+        lg, hidden = self.kv.decode(self.params, jnp.asarray(tokens))
         # inactive slots advanced their length too — undo
         mask = np.zeros((self.max_batch,), bool)
         for s in active:
             mask[s.slot] = True
-        lengths = np.array(self.cache["lengths"], copy=True)
+        lengths = self.kv.get_lengths()
         lengths[~mask] -= 1
-        self.cache["lengths"] = jnp.asarray(lengths)
+        self.kv.set_lengths(lengths)
         toks = np.asarray(sample(lg, temperature=self.temperature))
         if self.save_hidden and hidden is not None:
             # only truly-active sessions: a session that finished at
@@ -475,18 +469,6 @@ class InferenceEngine:
             self.metrics.tbt_wall.append(dt)
         self.metrics.decode_steps += 1
 
-    def _slot_cache_slice(self, i: int) -> dict:
-        """The B=1 restorable view of slot ``i``'s live cache buffers —
-        what ``save_session_pause`` dumps at retire/pause time."""
-        cache_slice = {k: (v[:, i:i + 1] if k in
-                           ("k", "v", "attn_k", "attn_v") else v)
-                       for k, v in self.cache.items()
-                       if k not in ("lengths", "enc_len")}
-        if self.model.kind in ("ssm", "hybrid"):
-            cache_slice["conv"] = self._slot_state(self.cache["conv"], i)
-            cache_slice["ssm"] = self._slot_state(self.cache["ssm"], i)
-        return cache_slice
-
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
             if s is None or not s.finished():
@@ -496,19 +478,37 @@ class InferenceEngine:
             tail = np.asarray(s.generated[s.tok_saved:-1], np.int32)
             if self.save_hidden:
                 self.mgr.saver.drain()
-                self.mgr.save_session_pause(sid, self._slot_cache_slice(i),
+                self.mgr.save_session_pause(sid, s.view.snapshot(),
                                             n - 1, tokens_tail=tail)
+                self._after_save(sid)
                 s.tok_saved = len(s.generated) - 1
             s.phase = Phase.DONE
+            s.view.free()
+            s.view = None
             self.slots[i] = None
 
-    def _slot_state(self, buf, slot):
-        """Extract the batch=1 slice of a (…, B, …) state tensor."""
-        if self.model.kind == "ssm":
-            return buf[:, slot:slot + 1]
-        return buf[:, :, slot:slot + 1]
+    def _after_save(self, sid: str) -> None:
+        """On-save capacity hook: a demoted session whose stream was just
+        extended is the anti-entropy ladder's re-promotion candidate."""
+        if self.capacity is not None:
+            self.capacity.consider_promotion(sid)
 
     # ------------------------------------------------------------ main loop
+    def _sample_occupancy(self) -> None:
+        occ = self.kv.occupancy()
+        m = self.metrics
+        m.live_tokens = occ.live_tokens
+        m.reserved_tokens = occ.reserved_tokens
+        m.free_blocks = occ.free_blocks
+        m.live_tokens_peak = max(m.live_tokens_peak, occ.live_tokens)
+        m.reserved_tokens_peak = max(m.reserved_tokens_peak,
+                                     occ.reserved_tokens)
+        resident = sum(1 for s in self.slots if s is not None)
+        m.concurrent_peak = max(m.concurrent_peak, resident)
+        if occ.reserved_tokens:
+            m.occupancy_sum += occ.utilization
+            m.occupancy_count += 1
+
     def step(self) -> None:
         self.step_count += 1
         self._admit()
@@ -518,6 +518,7 @@ class InferenceEngine:
             if s is not None and s.phase == Phase.PREFILL:
                 self._prefill_step(s)
         self._decode_batch()
+        self._sample_occupancy()
         self._retire()
         if self.capacity is not None:
             self.capacity.maintain(self)

@@ -1,0 +1,515 @@
+"""KV-cache backends behind a single ``CacheView`` seam (DESIGN.md §9).
+
+The serving engine never touches cache buffers directly. All state lives
+in a ``KVCacheBackend``:
+
+  * ``ContiguousBackend`` — the classic layout: every batch slot owns
+    ``max_seq`` contiguous positions of a stacked ``(L, B, Smax, Kv, hd)``
+    buffer (all model families: lm / ssm / hybrid / encdec).
+  * ``PagedBackend``     — vLLM-style block tables over a physical page
+    pool ``(L, num_blocks, block_size, Kv, hd)`` plus a ``BlockAllocator``
+    free list. A slot reserves only the pages its session can actually
+    use, so occupancy — not ``max_batch × max_seq`` — caps concurrency.
+    LM family only (block tables have no SSM-state analog).
+
+Consumers all go through a slot-bound ``CacheView`` handle:
+
+    view.write_layer(row, k, v)   one restored layer (whole pages)
+    view.write_kv(k, v, start)    stacked prefill KV at a token offset
+    view.write_states(piece)      SSM / cross-attention whole objects
+    view.gather_hist(hist)        restored-history KV for chunked prefill
+    view.snapshot()               B=1 restorable dict for save_session_pause
+    view.set_length(n)            live-length bookkeeping
+    view.free()                   release the slot's pages (retire/evict)
+
+``ViewSink`` adapts a ``CacheView`` to the restoration executor's
+``RestoreSink`` protocol — the sink is layout-agnostic; the paged backend
+lands restored layers as whole pages, the contiguous one as a donated
+``dynamic_update_slice``. Decode runs through ``backend.decode`` (the
+paged path gathers pages by block table inside the jitted step — see
+``transformer.lm_decode_step_paged`` and the Pallas kernel in
+``kernels/decode_attention.py``).
+
+Greedy equivalence: masked attention probabilities are exactly zero past
+the live length, so a paged gather at the same logical width is
+byte-identical to the contiguous layout (tested in tests/test_paged.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.restoration import RestoreSink
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class OccupancyStats:
+    """Gauges for EngineMetrics / bench_paged: how much of the reserved
+    cache capacity holds live tokens."""
+
+    live_tokens: int            # tokens of occupied slots (sum of lengths)
+    reserved_tokens: int        # capacity handed out to occupied slots
+    capacity_tokens: int        # total backend capacity
+    free_blocks: int            # paged: free pages; contiguous: free slots
+
+    @property
+    def utilization(self) -> float:
+        """live / reserved — 1.0 means no internal fragmentation."""
+        return (self.live_tokens / self.reserved_tokens
+                if self.reserved_tokens else 0.0)
+
+    @property
+    def fragmentation(self) -> float:
+        return 1.0 - self.utilization if self.reserved_tokens else 0.0
+
+
+class BlockAllocator:
+    """LIFO free list over ``num_blocks`` physical pages (LIFO so pages
+    freed by an eviction are immediately reused — cache-warm on real
+    hardware, and deterministic for the reuse tests)."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` pages, or None when the pool cannot satisfy the request
+        (callers treat None as admission backpressure — never a partial
+        grant)."""
+        if n < 0 or n > len(self._free):
+            return None
+        taken = [self._free.pop() for _ in range(n)]
+        return taken
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in reversed(list(blocks)):
+            self._free.append(b)
+
+
+# -------------------------------------------------------------------- views
+class CacheView:
+    """Slot-bound handle; the only way engine/restoration/save code
+    touches cache state."""
+
+    def write_layer(self, row: int, k, v) -> None:
+        """One attention layer's restored KV at tokens [0, n);
+        k, v: (1, n, Kv, hd); row indexes the stacked-KV buffer."""
+        raise NotImplementedError
+
+    def write_kv(self, k, v, start: int) -> None:
+        """Stacked prefill KV (L, 1, n, Kv, hd) at token offset start."""
+        raise NotImplementedError
+
+    def write_states(self, piece: dict) -> None:
+        """Whole-object pieces: conv/ssm states, cross KV, enc_len."""
+        raise NotImplementedError
+
+    def gather_hist(self, hist: int):
+        """Restored-history KV, stacked (L, 1, hist, Kv, hd) pair."""
+        raise NotImplementedError
+
+    def snapshot(self) -> dict:
+        """B=1 restorable dict (what ``save_session_pause`` dumps); KV
+        buffers cover at least the slot's live length."""
+        raise NotImplementedError
+
+    def set_length(self, n: int) -> None:
+        raise NotImplementedError
+
+    def free(self) -> None:
+        """Release the slot's reserved capacity (retire / mid-stream
+        eviction). The view must not be used afterwards."""
+        raise NotImplementedError
+
+
+class ViewSink(RestoreSink):
+    """Layout-agnostic RestoreSink: every restored piece goes through the
+    CacheView, so the executor neither knows nor cares whether the slot
+    is contiguous or paged (pages land whole)."""
+
+    def __init__(self, view: CacheView):
+        self.view = view
+
+    def put_kv(self, row, k, v):
+        self.view.write_layer(row, k, v)
+
+    def put_states(self, conv, ssm):
+        self.view.write_states({"conv": conv, "ssm": ssm})
+
+    def put_cross(self, ck, cv, enc_len):
+        self.view.write_states({"cross_k": ck, "cross_v": cv,
+                                "enc_len": jnp.asarray(enc_len, jnp.int32)})
+
+    def finish(self, n_tokens):
+        self.view.set_length(n_tokens)
+
+
+# ----------------------------------------------------------------- backends
+class KVCacheBackend:
+    """Owns all decode-cache state for the engine's ``max_batch`` slots."""
+
+    name = "backend"
+
+    def view(self, slot: int) -> CacheView:
+        raise NotImplementedError
+
+    def can_reserve(self, n_tokens: int) -> bool:
+        """Admission backpressure check: could a slot hold ``n_tokens``?"""
+        raise NotImplementedError
+
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        """Bind capacity for up to ``n_tokens`` to ``slot``. False means
+        the pool is exhausted (the caller must requeue, not proceed)."""
+        raise NotImplementedError
+
+    def free_slot(self, slot: int) -> None:
+        raise NotImplementedError
+
+    def decode(self, params, tokens):
+        """One batched decode step; advances every slot's length by one.
+        Returns (logits, per-layer hidden states)."""
+        raise NotImplementedError
+
+    def get_lengths(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def set_lengths(self, lengths: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def set_length(self, slot: int, n: int) -> None:
+        raise NotImplementedError
+
+    def occupancy(self) -> OccupancyStats:
+        raise NotImplementedError
+
+
+def _kv_names(kind: str):
+    return {"lm": ("k", "v"), "hybrid": ("attn_k", "attn_v"),
+            "encdec": ("self_k", "self_v")}.get(kind)
+
+
+# ------------------------------------------------------------- contiguous
+class _ContiguousView(CacheView):
+    def __init__(self, backend: "ContiguousBackend", slot: int):
+        self.b = backend
+        self.slot = slot
+
+    def write_layer(self, row, k, v):
+        b = self.b
+        k_name, v_name = _kv_names(b.model.kind)
+        row = jnp.asarray(row)              # traced: no recompile per row
+        slot = jnp.asarray(self.slot)
+        for name, val in ((k_name, k), (v_name, v)):
+            buf = b.cache[name]
+            val = jnp.asarray(val, buf.dtype)[None]       # (1, 1, n, H, hd)
+            b.cache[name] = b._slot_update(buf, val, row, slot)
+
+    def write_kv(self, k, v, start):
+        b = self.b
+        k_name, v_name = _kv_names(b.model.kind)
+        for name, val in ((k_name, k), (v_name, v)):
+            b.cache[name] = jax.lax.dynamic_update_slice(
+                b.cache[name], val.astype(b.cache[name].dtype),
+                (0, self.slot, start, 0, 0))
+
+    def write_states(self, piece):
+        b, slot = self.b, self.slot
+        for key, val in piece.items():
+            buf = b.cache.get(key)
+            if buf is None:
+                continue
+            val = jnp.asarray(val, buf.dtype)
+            if key in ("conv", "ssm"):
+                bdim = buf.ndim - val.ndim + 1  # batch dim position
+                b.cache[key] = jax.lax.dynamic_update_slice(
+                    buf, val, (0,) * (bdim - 1) + (slot,)
+                    + (0,) * (buf.ndim - bdim))
+            elif key in ("cross_k", "cross_v"):
+                b.cache[key] = jax.lax.dynamic_update_slice(
+                    buf, val, (0, slot, 0, 0, 0))
+            elif key == "enc_len":
+                b.cache[key] = val
+
+    def gather_hist(self, hist):
+        k_name, v_name = _kv_names(self.b.model.kind)
+        i = self.slot
+        return (self.b.cache[k_name][:, i:i + 1, :hist],
+                self.b.cache[v_name][:, i:i + 1, :hist])
+
+    def snapshot(self):
+        b, i = self.b, self.slot
+        cache_slice = {k: (v[:, i:i + 1] if k in
+                           ("k", "v", "attn_k", "attn_v") else v)
+                       for k, v in b.cache.items()
+                       if k not in ("lengths", "enc_len")}
+        if b.model.kind in ("ssm", "hybrid"):
+            cache_slice["conv"] = b._slot_state(b.cache["conv"], i)
+            cache_slice["ssm"] = b._slot_state(b.cache["ssm"], i)
+        return cache_slice
+
+    def set_length(self, n):
+        self.b.set_length(self.slot, n)
+
+    def free(self):
+        self.b.free_slot(self.slot)
+
+
+class ContiguousBackend(KVCacheBackend):
+    """The seed layout: ``max_seq`` contiguous positions per slot. Every
+    model family; a slot reservation always costs ``max_seq`` capacity
+    regardless of the session's true length."""
+
+    name = "contiguous"
+
+    def __init__(self, model: Model, max_batch: int, max_seq: int):
+        self.model = model
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.cache = model.init_cache(max_batch, max_seq)
+        self._reserved = [0] * max_batch
+        self._decode_fn = jax.jit(model.decode_step_full)
+        # donated so XLA updates the stacked KV buffer in place — a
+        # per-layer restore write must not copy the whole (L,B,S,H,hd)
+        # cache (retraces only per distinct restored length n)
+        self._slot_update = jax.jit(
+            lambda buf, val, row, slot: jax.lax.dynamic_update_slice(
+                buf, val, (row, slot, 0, 0, 0)),
+            donate_argnums=(0,))
+
+    def _slot_state(self, buf, slot):
+        """Extract the batch=1 slice of a (…, B, …) state tensor."""
+        if self.model.kind == "ssm":
+            return buf[:, slot:slot + 1]
+        return buf[:, :, slot:slot + 1]
+
+    def view(self, slot):
+        return _ContiguousView(self, slot)
+
+    def can_reserve(self, n_tokens):
+        # a free slot always implies a full max_seq reservation; sessions
+        # longer than max_seq were never servable under this layout
+        return True
+
+    def reserve(self, slot, n_tokens):
+        self._reserved[slot] = self.max_seq
+        return True
+
+    def free_slot(self, slot):
+        self._reserved[slot] = 0
+
+    def decode(self, params, tokens):
+        lg, self.cache, hidden = self._decode_fn(params, self.cache, tokens)
+        return lg, hidden
+
+    def get_lengths(self):
+        return np.array(self.cache["lengths"], copy=True)
+
+    def set_lengths(self, lengths):
+        self.cache["lengths"] = jnp.asarray(lengths, jnp.int32)
+
+    def set_length(self, slot, n):
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(n)
+
+    def occupancy(self):
+        lengths = np.asarray(self.cache["lengths"])
+        live = int(sum(int(lengths[i]) for i, r in enumerate(self._reserved)
+                       if r))
+        reserved = int(sum(self._reserved))
+        free_slots = sum(1 for r in self._reserved if not r)
+        return OccupancyStats(live, reserved, self.max_batch * self.max_seq,
+                              free_slots)
+
+
+# ------------------------------------------------------------------ paged
+class _PagedView(CacheView):
+    def __init__(self, backend: "PagedBackend", slot: int):
+        self.b = backend
+        self.slot = slot
+
+    def _addr(self, positions: np.ndarray):
+        """(physical block ids, in-block offsets) for logical positions."""
+        b = self.b
+        row = b.table_np[self.slot]
+        return (jnp.asarray(row[positions // b.block_size]),
+                jnp.asarray(positions % b.block_size))
+
+    def write_layer(self, row, k, v):
+        b = self.b
+        n = k.shape[1]
+        blk, off = self._addr(np.arange(n))
+        row = jnp.asarray(row)
+        for name, val in (("k_pool", k), ("v_pool", v)):
+            pool = b.cache[name]
+            val = jnp.asarray(val, pool.dtype)[0]         # (n, Kv, hd)
+            b.cache[name] = b._write_layer(pool, val, row, blk, off)
+
+    def write_kv(self, k, v, start):
+        b = self.b
+        n = k.shape[2]
+        blk, off = self._addr(start + np.arange(n))
+        for name, val in (("k_pool", k), ("v_pool", v)):
+            pool = b.cache[name]
+            # (L, n, Kv, hd) lands at [:, blk[i], off[i]] per token
+            b.cache[name] = pool.at[:, blk, off].set(
+                val[:, 0].astype(pool.dtype))
+
+    def write_states(self, piece):
+        raise NotImplementedError(
+            "the paged backend serves attention-history (lm) models; "
+            "SSM/cross state has no block-table analog — use "
+            "backend='contiguous' for ssm/hybrid/encdec")
+
+    def gather_hist(self, hist):
+        b = self.b
+        nb = -(-hist // b.block_size)
+        blocks = jnp.asarray(b.table_np[self.slot][:nb])
+        k = b.cache["k_pool"][:, blocks]          # (L, nb, bs, Kv, hd)
+        v = b.cache["v_pool"][:, blocks]
+        L = k.shape[0]
+        shp = (L, 1, nb * b.block_size) + k.shape[3:]
+        return (k.reshape(shp)[:, :, :hist], v.reshape(shp)[:, :, :hist])
+
+    def snapshot(self):
+        b = self.b
+        blocks = jnp.asarray(b.slot_blocks[self.slot], jnp.int32)
+        k = b.cache["k_pool"][:, blocks]
+        v = b.cache["v_pool"][:, blocks]
+        L = k.shape[0]
+        shp = (L, 1, len(b.slot_blocks[self.slot]) * b.block_size) \
+            + k.shape[3:]
+        return {"k": k.reshape(shp), "v": v.reshape(shp)}
+
+    def set_length(self, n):
+        self.b.set_length(self.slot, n)
+
+    def free(self):
+        self.b.free_slot(self.slot)
+
+
+class PagedBackend(KVCacheBackend):
+    """Block-table paged KV cache (ROADMAP "paged KV cache").
+
+    Physical pages ``(L, num_blocks, block_size, Kv, hd)`` are shared by
+    all slots; ``block_table[slot, j]`` maps a slot's logical page *j* to
+    a physical page (entries == ``num_blocks`` are unallocated
+    sentinels: decode-step scatter drops them, gathers clamp them and the
+    attention mask zeroes whatever they alias). Reservations are made in
+    whole pages for the session's worst-case final length, so admission
+    is bounded by actual need, not ``max_batch × max_seq``.
+    """
+
+    name = "paged"
+
+    def __init__(self, model: Model, max_batch: int, max_seq: int, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
+        if model.kind != "lm":
+            raise NotImplementedError(
+                f"paged KV cache requires an attention-history (lm) "
+                f"model; {model.cfg.name} is {model.kind!r}")
+        self.model = model
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.blocks_per_seq = -(-max_seq // block_size)
+        self.num_blocks = (max_batch * self.blocks_per_seq
+                           if num_blocks is None else num_blocks)
+        self.cache = model.init_paged_cache(max_batch, self.num_blocks,
+                                            block_size, self.blocks_per_seq)
+        self.table_np = np.asarray(self.cache["block_table"]).copy()
+        self.allocator = BlockAllocator(self.num_blocks)
+        self.slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+        self._decode_fn = jax.jit(model.decode_step_paged)
+        # donated in-place page scatter, retraced per restored length n
+        self._write_layer = jax.jit(
+            lambda pool, val, row, blk, off:
+            pool.at[row, blk, off].set(val),
+            donate_argnums=(0,))
+
+    def _push_table(self) -> None:
+        self.cache["block_table"] = jnp.asarray(self.table_np)
+
+    def view(self, slot):
+        return _PagedView(self, slot)
+
+    def _blocks_needed(self, n_tokens: int) -> int:
+        need = max(-(-max(n_tokens, 1) // self.block_size), 1)
+        # a session whose worst case exceeds max_seq (or the whole pool)
+        # gets at most one full table row — matching the contiguous
+        # layout, where overflow decode writes past the reservation are
+        # silently dropped rather than crashing or wedging admission
+        return min(need, self.blocks_per_seq, self.num_blocks)
+
+    def can_reserve(self, n_tokens):
+        return self._blocks_needed(n_tokens) <= self.allocator.free_count
+
+    def reserve(self, slot, n_tokens):
+        need = self._blocks_needed(n_tokens)
+        have = self.slot_blocks[slot]
+        if len(have) >= need:
+            return True
+        blocks = self.allocator.alloc(need - len(have))
+        if blocks is None:
+            return False
+        have.extend(blocks)
+        row = self.table_np[slot]
+        row[:] = self.num_blocks
+        row[:len(have)] = have
+        self._push_table()
+        return True
+
+    def free_slot(self, slot):
+        self.allocator.free(self.slot_blocks[slot])
+        self.slot_blocks[slot] = []
+        self.table_np[slot, :] = self.num_blocks
+        self._push_table()
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+
+    def decode(self, params, tokens):
+        lg, self.cache, hidden = self._decode_fn(params, self.cache, tokens)
+        return lg, hidden
+
+    def get_lengths(self):
+        return np.array(self.cache["lengths"], copy=True)
+
+    def set_lengths(self, lengths):
+        self.cache["lengths"] = jnp.asarray(lengths, jnp.int32)
+
+    def set_length(self, slot, n):
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(n)
+
+    def occupancy(self):
+        lengths = np.asarray(self.cache["lengths"])
+        live = int(sum(int(lengths[i])
+                       for i, blks in enumerate(self.slot_blocks) if blks))
+        reserved = sum(len(b) for b in self.slot_blocks) * self.block_size
+        return OccupancyStats(live, reserved,
+                              self.num_blocks * self.block_size,
+                              self.allocator.free_count)
+
+
+BACKENDS = {"contiguous": ContiguousBackend, "paged": PagedBackend}
+
+
+def make_backend(spec: Union[str, KVCacheBackend], model: Model,
+                 max_batch: int, max_seq: int, *, block_size: int = 16,
+                 num_blocks: Optional[int] = None) -> KVCacheBackend:
+    """Engine-facing factory: a name ('contiguous' | 'paged') or an
+    already-built backend instance (tests / custom layouts)."""
+    if isinstance(spec, KVCacheBackend):
+        return spec
+    if spec not in BACKENDS:
+        raise ValueError(f"unknown KV-cache backend {spec!r}; "
+                         f"one of {sorted(BACKENDS)}")
+    if spec == "paged":
+        return PagedBackend(model, max_batch, max_seq,
+                            block_size=block_size, num_blocks=num_blocks)
+    return ContiguousBackend(model, max_batch, max_seq)

@@ -50,7 +50,12 @@ class SequenceState:
     tok_saved: int = 0                       # generated tokens persisted
     #                                          to the store's token blob
     admit_step: int = -1                     # engine step of last admission
+    enqueue_step: int = 0                    # engine step of last (re)queue
+    #                                          (admission aging baseline)
     pauses: int = 0                          # times evicted mid-stream
+    # slot-bound CacheView handle (serving/kv_cache.py); set while the
+    # sequence holds a batch slot, None when queued/paused/done
+    view: Optional[object] = None
     # incremental restoration (core/restoration.py); set while RESTORING
     executor: Optional[object] = None
     restored: bool = False                   # completed a restoration

@@ -191,6 +191,46 @@ def test_restore_cost_aware_selects_cheapest(setup):
     eng.close()
 
 
+def test_admission_aging_prevents_starvation(setup):
+    """Pure SJF starves a long-history session behind a stream of cheap
+    ones; the aging credit makes its effective cost fall with queue time
+    until it must win (the ROADMAP fairness item)."""
+    cfg, model, params = setup
+    eng, mgr = fresh_engine(setup)
+    mgr.store.put_manifest("cheap", {"n_tokens": 64,
+                                     "methods": ["hidden"] * cfg.n_layers})
+    mgr.store.put_manifest("costly", {"n_tokens": 4096,
+                                      "methods": ["hidden"] * cfg.n_layers})
+
+    class Seq:                                       # engine duck type
+        def __init__(self, sid, rid, enqueue_step):
+            self.enqueue_step = enqueue_step
+
+            class R:
+                session_id = sid
+                request_id = rid
+            self.request = R()
+
+    gap = (session_restore_cost(mgr, "costly")
+           - session_restore_cost(mgr, "cheap"))
+    assert gap > 0
+    old = Seq("costly", 0, enqueue_step=0)
+    eng.step_count = 100
+    # a fresh cheap competitor arrives every selection round: SJF picks
+    # it forever, no matter how long "costly" has waited
+    sjf = RestoreCostAwareAdmission()
+    assert sjf.select((old, Seq("cheap", 1, 100)), eng).request.session_id \
+        == "cheap"
+    # aging: after enough queued steps the credit covers the cost gap
+    aging = RestoreCostAwareAdmission(aging=gap / 50)
+    assert aging.select((old, Seq("cheap", 2, 100)),
+                        eng).request.session_id == "costly"
+    # but a newly queued costly session still loses to the cheap one
+    assert aging.select((Seq("costly", 3, 100), Seq("cheap", 4, 100)),
+                        eng).request.session_id == "cheap"
+    eng.close()
+
+
 def test_fifo_admission_default(setup):
     eng, _ = fresh_engine(setup)
     assert isinstance(eng.admission, FIFOAdmission)
@@ -281,6 +321,58 @@ def test_int8_demotion_roundtrip_and_appends(setup):
                  - np.asarray(outs["s0"]["kv"][0])).max()
     assert err < 0.05                              # quantization-level
     mgr.saver.close()
+
+
+def test_promote_hidden_fp16_roundtrip(setup):
+    """int8 -> fp16 re-promotion: scales dropped, manifest codec back to
+    'none', the 'h' stream ~doubles, and the session stays restorable
+    (at the int8-level error already paid — promotion stops further
+    loss, it cannot undo past loss)."""
+    cfg, model, params = setup
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden")
+    outs = _save_sessions(setup, mgr, n=1)
+    assert not mgr.promote_hidden_fp16("s0")       # not demoted yet
+    assert mgr.demote_hidden_int8("s0")
+    int8_bytes = store.bytes_for("s0", "h")
+    assert mgr.promote_hidden_fp16("s0")
+    assert not mgr.promote_hidden_fp16("s0")       # idempotent
+    man = store.get_manifest("s0")
+    assert man["compress"] == "none"
+    assert store.bytes_for("s0", "hs") == 0        # scales dropped
+    assert store.bytes_for("s0", "h") >= int8_bytes * 2 - 64
+    res = mgr.restore(params, "s0")
+    err = np.abs(np.asarray(res.cache["k"])
+                 - np.asarray(outs["s0"]["kv"][0])).max()
+    assert err < 0.05                              # quantization-level
+    mgr.saver.close()
+
+
+def test_capacity_promotes_demoted_session_on_save(setup):
+    """The anti-entropy satellite end to end: a session demoted to int8
+    is re-promoted to fp16 on its next save once the budget has
+    headroom (the engine's _after_save hook)."""
+    cfg, model, params = setup
+    eng, mgr = fresh_engine(setup, budget=10_000_000)   # ample headroom
+    cap = eng.capacity
+    rng = np.random.default_rng(9)
+    p1 = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    eng.submit(Request("promo", p1, max_new_tokens=3))
+    eng.run()
+    assert mgr.demote_hidden_int8("promo")
+    assert mgr.store.get_manifest("promo")["compress"] == "int8"
+    p2 = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    eng.submit(Request("promo", p2, max_new_tokens=2))  # next save cycle
+    eng.run()
+    assert ("promote", "promo") in cap.actions
+    assert mgr.store.get_manifest("promo")["compress"] == "none"
+    # no headroom -> no promotion
+    assert mgr.demote_hidden_int8("promo")
+    cap.host_budget_bytes = mgr.store.bytes_used + 10
+    assert not cap.consider_promotion("promo")
+    assert mgr.store.get_manifest("promo")["compress"] == "int8"
+    eng.close()
 
 
 def test_storage_array_pressure_callback_fires(setup):

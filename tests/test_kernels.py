@@ -68,6 +68,43 @@ def test_decode_attention_sweep(G, Smax, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("G,bs,MB", [(1, 16, 4), (4, 8, 8), (7, 32, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_paged_sweep(G, bs, MB, dtype):
+    """Paged kernel + its oracle vs the dense reference: pages land in a
+    permuted physical pool full of junk, with sentinel table entries past
+    each sequence's live pages."""
+    BKv, hd = 3, 32
+    S = MB * bs
+    q = jnp.asarray(RNG.normal(size=(BKv, G, hd)), dtype)
+    k = RNG.normal(size=(BKv, S, hd))
+    v = RNG.normal(size=(BKv, S, hd))
+    kl = RNG.integers(1, S, BKv).astype(np.int32)
+    NB = BKv * MB + 3
+    perm = RNG.permutation(NB)[:BKv * MB]
+    k_pool = RNG.normal(size=(NB, bs, hd))         # junk everywhere else
+    v_pool = RNG.normal(size=(NB, bs, hd))
+    table = np.full((BKv, MB), NB + 5, np.int32)   # sentinel = OOB
+    for b in range(BKv):
+        for j in range(MB):
+            if j * bs < kl[b]:                     # only live pages mapped
+                p = perm[b * MB + j]
+                table[b, j] = p
+                k_pool[p] = k[b, j * bs:(j + 1) * bs]
+                v_pool[p] = v[b, j * bs:(j + 1) * bs]
+    k_pool = jnp.asarray(k_pool, dtype)
+    v_pool = jnp.asarray(v_pool, dtype)
+    table, kl = jnp.asarray(table), jnp.asarray(kl)
+    want = ref.decode_attention_ref(q, jnp.asarray(k, dtype),
+                                    jnp.asarray(v, dtype), kl)
+    for use_pallas in (False, True):
+        got = ops.decode_attention_paged(q, k_pool, v_pool, table, kl,
+                                         use_pallas=use_pallas)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+
 @pytest.mark.parametrize("Bt,I,N", [(1, 64, 16), (2, 128, 8), (3, 96, 4)])
 def test_ssm_update_sweep(Bt, I, N):
     h = jnp.asarray(RNG.normal(size=(Bt, I, N)), jnp.float32)
