@@ -40,14 +40,17 @@ def main() -> None:
                    help="fast analytic suites only (CI)")
     p.add_argument("--mode", default=None,
                    choices=["bench_restoration", "bench_capacity",
-                            "bench_paged"],
+                            "bench_paged", "bench_restore_batch"],
                    help="special modes: bench_restoration compares "
                         "blocking vs pipelined TTFT -> "
                         "BENCH_restoration.json; bench_capacity runs the "
                         "eviction-policy + host-budget bake-off -> "
                         "BENCH_capacity.json; bench_paged compares paged "
                         "vs contiguous KV layouts at equal cache memory "
-                        "-> BENCH_paged.json")
+                        "-> BENCH_paged.json; bench_restore_batch sweeps "
+                        "the grouped-restoration group size (dispatches, "
+                        "projection wall time, makespan) -> "
+                        "BENCH_restore_batch.json")
     args = p.parse_args()
     print("name,us_per_call,derived")
     if args.mode == "bench_restoration":
@@ -66,6 +69,12 @@ def main() -> None:
         from benchmarks.bench_paged import run_paged_comparison
         rows = run_paged_comparison()
         print(f"# {len(rows)} rows -> BENCH_paged.json", file=sys.stderr)
+        return
+    if args.mode == "bench_restore_batch":
+        from benchmarks.bench_restore_batch import run_restore_batch
+        rows = run_restore_batch()
+        print(f"# {len(rows)} rows -> BENCH_restore_batch.json",
+              file=sys.stderr)
         return
     filters = args.only.split(",") if args.only else None
     t0 = time.time()

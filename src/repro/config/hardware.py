@@ -22,6 +22,13 @@ class HardwareProfile:
     storage_bw: float            # bytes/s aggregate storage backend read BW
     hbm_capacity: float          # bytes per chip
     chips: int = 1
+    # fixed per-device-dispatch cost charged to every compute-stream task
+    # in the restoration replay (kernel launch + host-side framework
+    # overhead). 0.0 keeps the paper's pure-bandwidth/FLOPs model; the
+    # grouped restoration path amortizes this over group_size layers —
+    # see benchmarks/bench_restore_batch.py for the knob's measurable
+    # effect on makespan.
+    dispatch_overhead: float = 0.0
 
 
 TB = 1e12

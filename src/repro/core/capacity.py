@@ -44,7 +44,10 @@ def restore_makespan(mgr, n_tokens: int,
         methods = mgr.plan(n_tokens).methods
     times = [method_times(c, mgr.hw)
              for c in layer_costs(mgr.cfg, n_tokens, mgr.dtype_bytes)]
-    return replay(compile_tasks(tuple(methods)), times).makespan
+    group = max(int(getattr(mgr, "restore_group_size", 1)), 1)
+    return replay(compile_tasks(tuple(methods), group_size=group), times,
+                  dispatch_overhead=getattr(mgr.hw, "dispatch_overhead",
+                                            0.0)).makespan
 
 
 def session_restore_cost(mgr, session_id: str) -> float:

@@ -32,7 +32,7 @@ from repro.config.arch import BlockKind
 from repro.config.hardware import HardwareProfile, TPU_V5E
 from repro.core.pipeline import Timeline
 from repro.core.restoration import (CacheAssembler, RestorationExecutor,
-                                    quantize_hidden_int8)
+                                    build_param_pack, quantize_hidden_int8)
 from repro.core.scheduler import Schedule, solve
 from repro.models.model import Model
 from repro.storage.chunk_store import ChunkStore
@@ -53,11 +53,19 @@ class HCacheManager:
                  hw: HardwareProfile = TPU_V5E, saver: Optional[TwoStageSaver]
                  = None, compress: str = "none", dtype_bytes: int = 2,
                  schedule_override: Optional[str] = None,
-                 store_dtype=np.float16):
+                 store_dtype=np.float16, restore_group_size: int = 8):
         self.model = model
         self.cfg = model.cfg
         self.store = store
         self.hw = hw
+        # projection group width for the batched restoration data path
+        # (DESIGN.md §10): one stacked device call per group instead of
+        # one per layer; 1 recovers the per-layer graph exactly
+        self.restore_group_size = max(int(restore_group_size), 1)
+        # once-per-(model, params) restoration weight pack, built lazily
+        # on the first restore and shared by every executor
+        self._pack = None
+        self._pack_params = None
         # dtype of stored hidden states. fp16 is the paper's setting (its
         # models run fp16, so storage is lossless); when the functional
         # model runs fp32, passing float32 makes pause/restore cycles
@@ -75,6 +83,17 @@ class HCacheManager:
 
     def _compress_for(self, session: str) -> str:
         return self._session_compress.get(session, self.compress)
+
+    def param_pack(self, params):
+        """Device-stacked restoration weights (wk/wv/bk/bv/ln1 + RoPE
+        tables) for ``params`` — built once, then reference-cached so no
+        restoration task ever re-gathers params. Holding the params
+        reference keeps the identity check sound (the cached object
+        cannot be collected and aliased)."""
+        if self._pack is None or self._pack_params is not params:
+            self._pack = build_param_pack(self.model, params)
+            self._pack_params = params
+        return self._pack
 
     # ------------------------------------------------------------- planning
     def plan(self, n_tokens: int) -> Schedule:
@@ -220,9 +239,17 @@ class HCacheManager:
         """Two-stage save of one decode step's hidden states.
 
         hidden: (L, B, 1, D); lengths: (B,) position of the new token.
-        Returns the stage-1 (snapshot) virtual cost in seconds."""
+        Returns the stage-1 (snapshot) virtual cost in seconds.
+
+        The whole step is ONE layer-stacked (L, B', 1, D) snapshot for
+        the plain-codec rows (the device buffer is already layer-major —
+        stage 1 is a single contiguous copy, not L ring submissions);
+        the stage-2 daemon splits per (layer, sequence). The snapshot
+        byte count — and so ``snapshot_cost`` accounting — is unchanged
+        from the per-layer form."""
         h = np.asarray(hidden)
         L = h.shape[0]
+        all_layers = list(range(L))
         cost = 0.0
         starts = [int(x) for x in lengths]
         ids = list(session_ids)
@@ -234,22 +261,24 @@ class HCacheManager:
                      if s is not None and self._compress_for(s) == "int8"]
         plain_rows = [b for b in range(len(ids)) if b not in int8_rows]
         plain_ids = [ids[b] for b in plain_rows]
-        for li in range(L):
-            data = h[li].astype(self.store_dtype)
-            if int8_rows:
-                # slice the demoted rows out of the bulk snapshot so the
-                # stage-1 copy cost covers only bytes actually written
-                data = data[plain_rows]
+        if plain_rows:
+            # slice the demoted rows out of the bulk snapshot so the
+            # stage-1 copy cost covers only bytes actually written
+            data = h[:, plain_rows].astype(self.store_dtype)
             cost += self.saver.snapshot(SnapshotTask(
-                session_ids=plain_ids, stream="h", layer=li,
-                start_tokens=[starts[b] for b in plain_rows], data=data))
-            for b in int8_rows:
-                q, scale = quantize_hidden_int8(
-                    h[li][b:b + 1].astype(np.float32))
-                cost += self.saver.snapshot(SnapshotTask(
-                    [ids[b]], "h", li, [starts[b]], q))
-                cost += self.saver.snapshot(SnapshotTask(
-                    [ids[b]], "hs", li, [starts[b]], scale))
+                session_ids=plain_ids, stream="h", layer=-1,
+                start_tokens=[starts[b] for b in plain_rows], data=data,
+                layers=all_layers))
+        for b in int8_rows:
+            # per-token scales make the row-major stacked quantization
+            # identical to the per-layer form (each (li, b) row is
+            # normalized independently along D)
+            q, scale = quantize_hidden_int8(
+                h[:, b:b + 1].astype(np.float32))
+            cost += self.saver.snapshot(SnapshotTask(
+                [ids[b]], "h", -1, [starts[b]], q, layers=all_layers))
+            cost += self.saver.snapshot(SnapshotTask(
+                [ids[b]], "hs", -1, [starts[b]], scale, layers=all_layers))
         return cost
 
     # -------------------------------------------------------------- restore
@@ -294,6 +323,10 @@ class HCacheManager:
                   and self.store.layer_available(session, "h", li, n)]
         if n == 0 or not layers:
             return False
+        # remember which tier the stream came from: re-appending always
+        # lands hot, so a cold-demoted session's re-encode must be moved
+        # back afterwards or the int8 stage *increases* budgeted bytes
+        was_cold = self.store.stream_in_cold(session, "h")
         data = {li: np.asarray(self.store.read_layer(session, "h", li, n))
                 for li in layers}
         self.store.drop_stream(session, "h")
@@ -303,8 +336,16 @@ class HCacheManager:
             self.store.append_tokens(session, "h", li, 0, q)
             self.store.append_tokens(session, "hs", li, 0, scale)
         self.store.flush(session)
+        if was_cold:
+            self.store.demote_stream_to_cold(session, "h")
+            self.store.demote_stream_to_cold(session, "hs")
         man["compress"] = "int8"
         self.store.put_manifest(session, man)
+        if was_cold:
+            # put_manifest re-hots the manifest (hot copy authoritative);
+            # a fully cold-demoted session's metadata follows its chunks
+            # so the int8 stage leaves the budgeted tier untouched
+            self.store.demote_stream_to_cold(session, "meta")
         self._session_compress[session] = "int8"
         return True
 

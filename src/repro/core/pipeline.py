@@ -45,23 +45,31 @@ class Timeline:
                 if self.makespan else 0.0)
 
 
-def simulate(methods: Sequence[str], times: Sequence[MethodTimes]) -> Timeline:
+def simulate(methods: Sequence[str], times: Sequence[MethodTimes], *,
+             group_size: int = 1,
+             dispatch_overhead: float = 0.0) -> Timeline:
     """Simulate a restoration schedule. methods[i] in {hidden, kv, recompute}.
 
     Thin wrapper over the restoration executor's task graph: the same
     ``compile_tasks`` + ``replay`` that drive the serving engine's
     incremental execution produce this timeline, so the simulated and the
-    executed orders cannot drift apart (see core/restoration.py)."""
+    executed orders cannot drift apart (see core/restoration.py).
+    ``group_size`` coalesces projections into grouped compute tasks and
+    ``dispatch_overhead`` charges the per-dispatch launch cost once per
+    compute task — the batched data path's makespan knob (DESIGN.md §10)."""
     from repro.core.restoration import compile_tasks, replay
-    return replay(compile_tasks(methods), times)
+    return replay(compile_tasks(methods, group_size=group_size), times,
+                  dispatch_overhead=dispatch_overhead)
 
 
 def restore_timeline(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile,
                      methods: Sequence[str],
-                     dtype_bytes: int = 2) -> Timeline:
+                     dtype_bytes: int = 2, *,
+                     group_size: int = 1) -> Timeline:
     times = [method_times(c, hw)
              for c in layer_costs(cfg, n_tokens, dtype_bytes)]
-    return simulate(methods, times)
+    return simulate(methods, times, group_size=group_size,
+                    dispatch_overhead=getattr(hw, "dispatch_overhead", 0.0))
 
 
 # --------------------------------------------------------- serving estimates

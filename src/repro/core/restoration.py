@@ -1,4 +1,4 @@
-"""Pipelined restoration executor (paper §4.1, DESIGN.md §5).
+"""Pipelined restoration executor (paper §4.1, DESIGN.md §5, §10).
 
 One source of truth for restoration: a ``Schedule`` compiles into an
 ordered task graph (``compile_tasks``) of per-layer steps — striped
@@ -22,12 +22,26 @@ SSM/enc-dec blob loads. The same graph serves three consumers:
 The executor records the order tasks actually executed in; its reported
 ``Timeline`` is ``replay`` over that executed order, so the engine's
 numbers and the analytic simulation can never drift apart.
+
+Batched data path (DESIGN.md §10): projection tasks are compiled into
+*groups* of ``group_size`` layers. A group executes as ONE stacked
+device call — hidden states for all members land in a single
+host→device upload, weights come from a once-per-``(model, params)``
+``RestoreParamPack`` (device-stacked wk/wv/bk/bv/ln1 + precomputed RoPE
+tables; no per-task param re-gather), and the result flows to the sink
+through ``put_kv_group`` (one scatter for the whole group). Projection
+shapes are bucketed to powers of two over the token dimension with
+zero-padded tails, so every session in a bucket reuses one compiled
+projection — zero recompiles across a serving run. ``replay`` models
+groups as single compute tasks charged ``dispatch_overhead`` once, so
+group size is a measurable bubbles-vs-dispatch trade-off.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +50,16 @@ import numpy as np
 from repro.config.arch import BlockKind
 from repro.core.cost_model import MethodTimes, layer_costs, method_times
 from repro.core.scheduler import Schedule
+from repro.kernels import ops
 from repro.models.layers.norm import apply_norm
+from repro.models.layers.rope import rope_angles
 from repro.models.layers import attention as attn_lib
 
 # Task kinds. IO-stream: io_h (hidden fetch), io_kv (raw KV fetch),
 # blob (state/encoder/token whole-object reads — O(1) in tokens, charged
 # zero virtual time as in the paper's model). Compute-stream: recompute
-# (one prefix layer from tokens), project (hidden → K,V GEMM).
+# (one prefix layer from tokens), project (hidden → K,V GEMM for a
+# GROUP of layers — one device dispatch per group).
 IO_KINDS = ("io_h", "io_kv", "blob")
 COMPUTE_KINDS = ("recompute", "project")
 
@@ -50,29 +67,43 @@ COMPUTE_KINDS = ("recompute", "project")
 @dataclasses.dataclass(frozen=True)
 class Task:
     kind: str                 # io_h | io_kv | blob | recompute | project
-    layer: int                # global layer index (-1 for blob tasks)
+    layer: int                # global layer index (-1 for blob tasks;
+    #                           first member for project groups)
     dep: Optional[int] = None  # task-list index that must execute first
+    layers: Optional[Tuple[int, ...]] = None   # project group members
+    deps: Optional[Tuple[int, ...]] = None     # all fetches a group needs
 
     @property
     def stream(self) -> str:
         return "io" if self.kind in IO_KINDS else "compute"
 
+    @property
+    def members(self) -> Tuple[int, ...]:
+        return self.layers if self.layers is not None else (self.layer,)
 
-def compile_tasks(methods: Sequence[str], *,
-                  n_blobs: int = 0) -> List[Task]:
+    @property
+    def all_deps(self) -> Tuple[int, ...]:
+        if self.deps is not None:
+            return self.deps
+        return () if self.dep is None else (self.dep,)
+
+
+def compile_tasks(methods: Sequence[str], *, n_blobs: int = 0,
+                  group_size: int = 1) -> List[Task]:
     """Compile a per-layer method assignment into the ordered task graph.
 
     List order encodes per-stream priority (paper §4.1): the IO stream
     runs hidden fetches first (layer order) so projections can start,
     then KV fetches fill the IO tail; the compute stream runs the
     recompute prefix from t=0, then projections in fetch order. A
-    projection depends on its own fetch."""
+    projection group depends on *all* of its members' fetches; with
+    ``group_size=1`` this degenerates exactly to the per-layer graph."""
     tasks: List[Task] = []
     io_of: Dict[int, int] = {}
-    for i, m in enumerate(methods):
-        if m == "hidden":
-            io_of[i] = len(tasks)
-            tasks.append(Task("io_h", i))
+    hidden_layers = [i for i, m in enumerate(methods) if m == "hidden"]
+    for i in hidden_layers:
+        io_of[i] = len(tasks)
+        tasks.append(Task("io_h", i))
     for i, m in enumerate(methods):
         if m == "kv":
             tasks.append(Task("io_kv", i))
@@ -81,32 +112,41 @@ def compile_tasks(methods: Sequence[str], *,
     for i, m in enumerate(methods):
         if m == "recompute":
             tasks.append(Task("recompute", i))
-    for i, m in enumerate(methods):
-        if m == "hidden":
-            tasks.append(Task("project", i, dep=io_of[i]))
+    g = max(int(group_size), 1)
+    for s in range(0, len(hidden_layers), g):
+        grp = tuple(hidden_layers[s:s + g])
+        deps = tuple(io_of[i] for i in grp)
+        tasks.append(Task("project", grp[0], dep=deps[-1], layers=grp,
+                          deps=deps))
     return tasks
 
 
-def task_duration(task: Task, times: Sequence[MethodTimes]) -> float:
+def task_duration(task: Task, times: Sequence[MethodTimes],
+                  dispatch_overhead: float = 0.0) -> float:
+    """Virtual duration of one task. Compute-stream tasks carry the
+    per-dispatch overhead once — a projection group amortizes it over
+    all members (the whole point of grouping)."""
     if task.kind == "io_h":
         return times[task.layer].io_h
     if task.kind == "io_kv":
         return times[task.layer].io_kv
     if task.kind == "recompute":
-        return times[task.layer].c_token
+        return times[task.layer].c_token + dispatch_overhead
     if task.kind == "project":
-        return times[task.layer].c_h
+        return (sum(times[li].c_h for li in task.members)
+                + dispatch_overhead)
     return 0.0                                 # blob reads: O(1) in tokens
 
 
 def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
-           order: Optional[Sequence[int]] = None):
+           order: Optional[Sequence[int]] = None,
+           dispatch_overhead: float = 0.0):
     """Two-stream virtual replay of ``tasks`` in ``order`` → Timeline.
 
-    Each stream is serial; a compute task with a dep starts no earlier
-    than the dep's completion on the IO stream. ``order`` defaults to
-    list order (the compiled priority); the executor passes the order it
-    actually ran."""
+    Each stream is serial; a compute task with deps starts no earlier
+    than the completion of ALL its deps on the IO stream. ``order``
+    defaults to list order (the compiled priority); the executor passes
+    the order it actually ran."""
     from repro.core.pipeline import Timeline
     if order is None:
         order = range(len(tasks))
@@ -114,13 +154,15 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
     io_t = comp_t = io_busy = comp_busy = 0.0
     for idx in order:
         t = tasks[idx]
-        dur = task_duration(t, times)
+        dur = task_duration(t, times, dispatch_overhead)
         if t.stream == "io":
             io_t += dur
             io_busy += dur
             done[idx] = io_t
         else:
-            start = comp_t if t.dep is None else max(comp_t, done[t.dep])
+            deps = t.all_deps
+            start = comp_t if not deps else max(
+                comp_t, max(done[d] for d in deps))
             comp_t = start + dur
             comp_busy += dur
             done[idx] = comp_t
@@ -149,6 +191,14 @@ class RestoreSink:
         """One attention layer's KV; row indexes the stacked-KV buffer
         (k, v: (1, n, kv_heads, head_dim))."""
         raise NotImplementedError
+
+    def put_kv_group(self, rows: Sequence[int], k, v) -> None:
+        """A whole projection group's KV in one call; rows are the
+        stacked-KV buffer rows, k/v: (G, 1, n, kv_heads, head_dim).
+        Default: per-row fallback — batching sinks (ViewSink) override
+        with a single scatter."""
+        for g, row in enumerate(rows):
+            self.put_kv(row, k[g], v[g])
 
     def put_states(self, conv, ssm) -> None:
         raise NotImplementedError
@@ -207,9 +257,136 @@ class CacheAssembler(RestoreSink):
                           "lengths": lengths}
 
 
+# ---------------------------------------------------------- param packing
+def s_bucket(n: int, minimum: int = 16) -> int:
+    """Power-of-two token bucket for projection shapes: all sessions in
+    a bucket share one compiled projection (zero recompiles across a
+    serving run); the padded tail is zeros and its outputs are sliced
+    away before the sink."""
+    b = max(int(minimum), 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
+class RestoreParamPack:
+    """Device-resident restoration weights for every attention layer,
+    built once per ``(model, params)`` and shared by all executors.
+
+    The stacks are (A, …) with A = number of attention layers, row
+    order == the stacked-KV row order the sinks use — so a projection
+    group gathers ``wk[rows]`` inside its jitted call instead of
+    re-running ``jax.tree.map`` over the whole parameter stack per
+    task. For lm/hybrid/encdec the per-layer params are already
+    layer-stacked device arrays (scan-over-layers init), so building
+    the pack is reference-taking, not copying. RoPE cos/sin tables are
+    precomputed up to the largest bucket seen and sliced per bucket."""
+
+    def __init__(self, *, ln_scale, ln_bias, wk, wv, bk, bv, norm_kind,
+                 norm_eps, head_dim, use_rope, rope_theta, dtype):
+        self.ln_scale = ln_scale        # (A, D)
+        self.ln_bias = ln_bias          # (A, D) | None (rmsnorm)
+        self.wk = wk                    # (A, D, KV)
+        self.wv = wv                    # (A, D, KV)
+        self.bk = bk                    # (A, KV) | None
+        self.bv = bv                    # (A, KV) | None
+        self.norm_kind = norm_kind
+        self.norm_eps = float(norm_eps)
+        self.head_dim = int(head_dim)
+        self.use_rope = bool(use_rope)
+        self.rope_theta = float(rope_theta)
+        self.dtype = dtype
+        self.n_rows = int(wk.shape[0])
+        self._cos = None
+        self._sin = None
+        self._slices: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+    def rope_tables(self, n_pos: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """cos/sin (n_pos, head_dim//2) for positions [0, n_pos); the
+        backing table grows by powers of two and per-bucket slices are
+        cached so repeated restores reuse the same device arrays."""
+        got = self._slices.get(n_pos)
+        if got is not None:
+            return got
+        if self._cos is None or self._cos.shape[0] < n_pos:
+            cap = s_bucket(n_pos, minimum=128)
+            cos, sin = rope_angles(jnp.arange(cap), self.head_dim,
+                                   self.rope_theta)
+            self._cos, self._sin = cos, sin
+            self._slices.clear()
+        sl = (self._cos[:n_pos], self._sin[:n_pos])
+        self._slices[n_pos] = sl
+        return sl
+
+
+def build_param_pack(model, params) -> Optional[RestoreParamPack]:
+    """Pack the attention-restoration weights of ``params``. None for
+    attention-free (ssm) stacks."""
+    kind = model.kind
+    if kind == "ssm":
+        return None
+    if kind == "lm":
+        blocks, attn_key, attn_h = params["blocks"], "attn", model.h.attn
+    elif kind == "hybrid":
+        blocks, attn_key, attn_h = params["attn"], "attn", model.h.lm.attn
+    else:                                       # encdec (decoder self-attn)
+        blocks, attn_key, attn_h = (params["dec_blocks"], "self_attn",
+                                    model.h.attn)
+    ap = blocks[attn_key]
+    ln = blocks["ln1"]
+    return RestoreParamPack(
+        ln_scale=ln["scale"], ln_bias=ln.get("bias"),
+        wk=ap["wk"], wv=ap["wv"], bk=ap.get("bk"), bv=ap.get("bv"),
+        norm_kind=model.cfg.norm, norm_eps=model.cfg.norm_eps,
+        head_dim=attn_h.head_dim, use_rope=attn_h.use_rope,
+        rope_theta=attn_h.rope_theta, dtype=model.dtype)
+
+
+# number of times the grouped projection has been TRACED (== compiled):
+# the body below runs once per compilation, so this is the recompile
+# counter the bucketing regression test and bench_restore_batch read.
+_PROJECTION_TRACES = [0]
+
+
+def projection_trace_count() -> int:
+    return _PROJECTION_TRACES[0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "norm_kind", "eps", "head_dim", "use_rope", "dtype", "use_pallas",
+    "interpret"))
+def _project_group_jit(hidden, rows, ln_scale, ln_bias, wk, wv, bk, bv,
+                       cos, sin, *, norm_kind, eps, head_dim, use_rope,
+                       dtype, use_pallas, interpret):
+    """ONE device dispatch for a whole projection group.
+
+    hidden (G, S_bucket, D) stored-dtype upload; rows (G,) pack-row ids
+    (traced, so group membership never retraces); weight stacks are the
+    full pack — the gather fuses into the compiled program. Returns
+    (k, v): (G, S_bucket, Kv, hd) in the model dtype."""
+    _PROJECTION_TRACES[0] += 1
+    h = hidden.astype(dtype)
+    # the model's own norm, with per-group-row params broadcast over S —
+    # restore must stay byte-equal to what project_qkv consumed
+    ln = {"scale": ln_scale[rows][:, None, :]}
+    if ln_bias is not None:
+        ln["bias"] = ln_bias[rows][:, None, :]
+    normed = apply_norm(ln, h, norm_kind, eps)
+    k, v = ops.restore_kv_grouped(
+        normed, wk[rows], wv[rows],
+        bk[rows] if bk is not None else None,
+        bv[rows] if bv is not None else None,
+        cos, sin, head_dim=head_dim, use_rope=use_rope,
+        use_pallas=use_pallas, interpret=interpret)
+    G, S, KV = k.shape
+    return (k.reshape(G, S, KV // head_dim, head_dim),
+            v.reshape(G, S, KV // head_dim, head_dim))
+
+
 # -------------------------------------------------------- param projections
 def subset_blocks(model, params, idx: List[int]):
-    """Stacked block params for the given global layer indices."""
+    """Stacked block params for the given global layer indices (legacy
+    per-layer reference path — the executor now uses RestoreParamPack)."""
     arr = np.asarray(idx)
     blocks = (params["blocks"] if model.kind == "lm" else
               params["attn"] if model.kind == "hybrid" else
@@ -224,7 +401,9 @@ def subset_blocks(model, params, idx: List[int]):
 def project_hidden(model, blocks, hidden, pos):
     """K,V projection of saved hidden states (the paper's core GEMM).
 
-    hidden: (L_sub, 1, n, D); returns (k, v): (L_sub, 1, n, Kv, hd)."""
+    hidden: (L_sub, 1, n, D); returns (k, v): (L_sub, 1, n, Kv, hd).
+    Reference implementation for the grouped device path above (the
+    byte-equivalence tests compare the two)."""
     cfg, mh = model.cfg, model.h
     attn_h = mh.attn if hasattr(mh, "attn") else mh.lm.attn
     attn_key = "attn" if model.kind in ("lm", "hybrid") else "self_attn"
@@ -249,7 +428,13 @@ class RestorationExecutor:
     pipelined order); ``prefetch_step`` runs IO tasks only (no sink
     needed). All finished pieces flow to the sink immediately; pieces
     produced before a sink is attached are buffered (numpy/array handles,
-    never a stacked B=1 cache) and flushed on ``attach_sink``."""
+    never a stacked B=1 cache) and flushed on ``attach_sink``.
+
+    Projection tasks are GROUPS (``mgr.restore_group_size`` layers): one
+    batched upload + one stacked projection + one grouped sink write per
+    group. ``dispatch_count`` tallies the device dispatches the restore
+    issued; ``project_wall`` the wall seconds inside projection calls —
+    both surfaced by bench_restore_batch."""
 
     def __init__(self, mgr, params, session: str,
                  sink: Optional[RestoreSink] = None):
@@ -271,8 +456,18 @@ class RestorationExecutor:
         self._attn_layers = [i for i, k in enumerate(kinds)
                              if k == BlockKind.ATTENTION]
         self._row_of = {li: r for r, li in enumerate(self._attn_layers)}
+        self.group_size = max(int(getattr(mgr, "restore_group_size", 1)), 1)
+        self.pack: Optional[RestoreParamPack] = mgr.param_pack(params)
+        # stable padded group width: every group in this restore uploads
+        # and projects the same (G_pad, S_bucket, D) shape, so a run
+        # compiles at most one projection per (bucket, codec)
+        n_attn_hidden = sum(1 for i, m in enumerate(self.methods)
+                            if m == "hidden" and i in self._row_of)
+        self._g_pad = min(self.group_size, max(n_attn_hidden, 1))
+        self.dispatch_overhead = getattr(mgr.hw, "dispatch_overhead", 0.0)
         n_blobs = self._count_blobs()
-        self.tasks = compile_tasks(self.methods, n_blobs=n_blobs)
+        self.tasks = compile_tasks(self.methods, n_blobs=n_blobs,
+                                   group_size=self.group_size)
         self.times = [method_times(c, mgr.hw)
                       for c in layer_costs(mgr.cfg, self.n_tokens,
                                            mgr.dtype_bytes)]
@@ -302,6 +497,8 @@ class RestorationExecutor:
         self._io_base = mgr.store.read_completion()
         self.io_measured = 0.0
         self.wall_time = 0.0
+        self.project_wall = 0.0
+        self.dispatch_count = 0
 
     # ------------------------------------------------------------- plumbing
     def _count_blobs(self) -> int:
@@ -332,12 +529,13 @@ class RestorationExecutor:
         """Timeline derived from the order tasks actually executed in."""
         order = self.executed + [i for i in range(len(self.tasks))
                                  if not self._done[i]]
-        return replay(self.tasks, self.times, order)
+        return replay(self.tasks, self.times, order,
+                      dispatch_overhead=self.dispatch_overhead)
 
     # ------------------------------------------------------------ stepping
     def _ready(self, idx: int) -> bool:
         t = self.tasks[idx]
-        if t.dep is not None and not self._done[t.dep]:
+        if any(not self._done[d] for d in t.all_deps):
             return False
         if t.kind == "recompute":
             # prefix layers carry the residual stream in order
@@ -357,7 +555,8 @@ class RestorationExecutor:
         return comp_idx if self._comp_clock <= self._io_clock else io_idx
 
     def step(self, max_tasks: int = 4) -> bool:
-        """Execute up to ``max_tasks`` tasks; True when restoration done."""
+        """Execute up to ``max_tasks`` tasks; True when restoration done.
+        A projection group counts as one task."""
         t0 = time.perf_counter()
         for _ in range(max_tasks):
             idx = self._pick()
@@ -386,13 +585,13 @@ class RestorationExecutor:
     # ---------------------------------------------------------- task bodies
     def _run_task(self, idx: int) -> None:
         t = self.tasks[idx]
-        dur = task_duration(t, self.times)
+        dur = task_duration(t, self.times, self.dispatch_overhead)
         if t.stream == "io":
             self._io_queue.remove(idx)
             self._io_clock += dur
         else:
             self._comp_queue.remove(idx)
-            start = (self._comp_clock if t.dep is None else
+            start = (self._comp_clock if not t.all_deps else
                      max(self._comp_clock, self._io_clock))
             self._comp_clock = max(self._comp_clock, start) + dur
         getattr(self, "_exec_" + t.kind)(t)
@@ -432,20 +631,41 @@ class RestorationExecutor:
         hd = cfg.head_dim_
         k = jnp.asarray(rk.data).reshape(1, n, cfg.n_kv_heads, hd)
         v = jnp.asarray(rv.data).reshape(1, n, cfg.n_kv_heads, hd)
+        self.dispatch_count += 3               # 2 uploads + 1 sink write
         self._emit("put_kv", self._row_of[t.layer],
                    k.astype(self.model.dtype), v.astype(self.model.dtype))
 
     def _exec_project(self, t: Task) -> None:
-        if not self._is_attn(t.layer):
-            return
-        h_np = self._hbuf.pop(t.layer)
-        hidden = jnp.asarray(h_np, self.model.dtype)[None, None]  # (1,1,n,D)
-        pos = jnp.arange(self.n_tokens)[None, :]
-        sub = subset_blocks(self.model, self.params, [t.layer])
-        k, v = project_hidden(self.model, sub, hidden, pos)
-        self._emit("put_kv", self._row_of[t.layer],
-                   k[0].astype(self.model.dtype),
-                   v[0].astype(self.model.dtype))
+        members = [li for li in t.members if self._is_attn(li)]
+        if not members:
+            return          # hidden-method mamba layers restore via blob
+        pack = self.pack
+        n = self.n_tokens
+        S = s_bucket(n)
+        G = max(self._g_pad, len(members))
+        h0 = self._hbuf[members[0]]
+        stack = np.zeros((G, S, h0.shape[-1]), h0.dtype)
+        rows = [self._row_of[li] for li in members]
+        for g, li in enumerate(members):
+            stack[g, :n] = self._hbuf.pop(li)
+        # pad to the stable group width with a repeated row id over zero
+        # hidden states; padded outputs are sliced away below
+        rows_pad = np.asarray(rows + [rows[-1]] * (G - len(rows)), np.int32)
+        cos, sin = pack.rope_tables(S)
+        t0 = time.perf_counter()
+        hidden = jnp.asarray(stack)            # ONE host->device upload
+        k, v = _project_group_jit(
+            hidden, jnp.asarray(rows_pad), pack.ln_scale, pack.ln_bias,
+            pack.wk, pack.wv, pack.bk, pack.bv, cos, sin,
+            norm_kind=pack.norm_kind, eps=pack.norm_eps,
+            head_dim=pack.head_dim, use_rope=pack.use_rope,
+            dtype=pack.dtype, use_pallas=ops.on_tpu(), interpret=None)
+        jax.block_until_ready((k, v))
+        self.project_wall += time.perf_counter() - t0
+        g_real = len(members)
+        self.dispatch_count += 3     # upload + projection + grouped write
+        self._emit("put_kv_group", tuple(rows),
+                   k[:g_real, None, :n], v[:g_real, None, :n])
 
     def _exec_recompute(self, t: Task) -> None:
         from repro.models import transformer as tfm
@@ -468,6 +688,7 @@ class RestorationExecutor:
         self._re_x = x
         self._re_next += 1
         k, v = kv
+        self.dispatch_count += 2               # block forward + sink write
         self._emit("put_kv", self._row_of[t.layer],
                    k.astype(model.dtype), v.astype(model.dtype))
 

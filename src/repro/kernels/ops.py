@@ -13,7 +13,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import (decode_attention_paged_pallas,
                                             decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.restore_kv import restore_kv_pallas
+from repro.kernels.restore_kv import (restore_kv_grouped_pallas,
+                                      restore_kv_pallas)
 from repro.kernels.ssm_update import ssm_update_pallas
 
 
@@ -30,6 +31,21 @@ def restore_kv(hidden, wk, wv, bk, bv, cos, sin, *, head_dim,
     return restore_kv_pallas(hidden, wk, wv, bk, bv, cos, sin,
                              head_dim=head_dim, use_rope=use_rope,
                              interpret=interpret)
+
+
+def restore_kv_grouped(hidden, wk, wv, bk, bv, cos, sin, *, head_dim,
+                       use_rope=True, use_pallas=True, interpret=None):
+    """Stacked restoration projection for a group of layers — one
+    dispatch instead of G (see kernels/restore_kv.py and the batched
+    executor in core/restoration.py)."""
+    if not use_pallas:
+        return ref.restore_kv_grouped_ref(hidden, wk, wv, bk, bv, cos, sin,
+                                          head_dim=head_dim,
+                                          use_rope=use_rope)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return restore_kv_grouped_pallas(hidden, wk, wv, bk, bv, cos, sin,
+                                     head_dim=head_dim, use_rope=use_rope,
+                                     interpret=interpret)
 
 
 def flash_attention(q, k, v, *, group=1, causal=True, window=None,

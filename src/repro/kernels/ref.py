@@ -28,6 +28,30 @@ def restore_kv_ref(hidden, wk, wv, bk, bv, cos, sin, *, head_dim: int,
     return k.astype(hidden.dtype), v.astype(hidden.dtype)
 
 
+def restore_kv_grouped_ref(hidden, wk, wv, bk, bv, cos, sin, *,
+                           head_dim: int, use_rope: bool = True):
+    """Grouped oracle: hidden (G,S,D), wk/wv (G,D,KV), bk/bv (G,KV) ->
+    K,V (G,S,KV). Each group row g must equal restore_kv_ref on the g-th
+    slices (the byte-equivalence contract the grouped executor relies
+    on), so the math is the per-layer oracle under a batched einsum."""
+    h = hidden.astype(jnp.float32)
+    k = jnp.einsum("gsd,gdk->gsk", h, wk.astype(jnp.float32))
+    v = jnp.einsum("gsd,gdk->gsk", h, wv.astype(jnp.float32))
+    if bk is not None:
+        k = k + bk.astype(jnp.float32)[:, None, :]
+        v = v + bv.astype(jnp.float32)[:, None, :]
+    if use_rope:
+        G, S, KV = k.shape
+        nh = KV // head_dim
+        kh = k.reshape(G, S, nh, head_dim)
+        x1, x2 = kh[..., :head_dim // 2], kh[..., head_dim // 2:]
+        c = cos[None, :, None, :].astype(jnp.float32)
+        s = sin[None, :, None, :].astype(jnp.float32)
+        k = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                            axis=-1).reshape(G, S, KV)
+    return k.astype(hidden.dtype), v.astype(hidden.dtype)
+
+
 def flash_attention_ref(q, k, v, *, group: int = 1, causal: bool = True,
                         window=None, softcap=None):
     """q (BH,Sq,hd), k/v (BKv,Skv,hd); q row b uses kv row b//group."""

@@ -11,6 +11,12 @@ is kept resident per cell: worst assigned arch D=6144 → H tile
 256×6144×2B = 3 MiB + two 6144×BLOCK_KV weight tiles ≈ 3 MiB < VMEM.
 BLOCK_KV must cover whole heads (multiple of head_dim) so the rotate-half
 pairing stays in-tile; MXU alignment wants multiples of 128.
+
+``restore_kv_grouped_pallas`` is the batched-restoration variant: a
+leading grid dimension G indexes a stack of per-layer weights, so one
+kernel launch projects ``group_size`` layers' hidden states — the
+serving-path executor coalesces ready projection tasks into one such
+call instead of L per-layer dispatches (see core/restoration.py).
 """
 from __future__ import annotations
 
@@ -19,6 +25,28 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _pick_block_kv(KV: int, head_dim: int, block_kv: int) -> int:
+    """Largest tile ≤ ``block_kv`` that divides KV *and* covers whole
+    heads. Halving blindly (the old fallback) can drop below head_dim
+    for non-power-of-two widths (KV=960, head_dim=96 → 64), splitting a
+    head across tiles and silently corrupting the rotate-half pairing —
+    so the search walks multiples of head_dim instead. head_dim always
+    divides KV (KV = n_kv_heads · head_dim), so ≥ head_dim is reachable."""
+    block_kv = block_kv or max(head_dim, min(KV, 512))
+    n_heads = KV // head_dim
+    bh = max(block_kv // head_dim, 1)
+    while n_heads % bh:
+        bh -= 1
+    return bh * head_dim
+
+
+def _pick_block_s(S: int, block_s: int) -> int:
+    block_s = min(block_s, S)
+    while S % block_s:
+        block_s //= 2
+    return block_s
 
 
 def _rope_rotate(x, cos, sin, head_dim: int):
@@ -62,12 +90,8 @@ def restore_kv_pallas(hidden, wk, wv, bk, bv, cos, sin, *, head_dim: int,
     cos/sin (S, head_dim//2). Returns K, V: (S, KV) (K rotated)."""
     S, D = hidden.shape
     KV = wk.shape[1]
-    block_kv = block_kv or max(head_dim, min(KV, 512))
-    while KV % block_kv:
-        block_kv //= 2
-    block_s = min(block_s, S)
-    while S % block_s:
-        block_s //= 2
+    block_kv = _pick_block_kv(KV, head_dim, block_kv)
+    block_s = _pick_block_s(S, block_s)
     grid = (S // block_s, KV // block_kv)
 
     has_bias = bk is not None
@@ -105,3 +129,62 @@ def _no_bias_kernel(h_ref, wk_ref, wv_ref, cos_ref, sin_ref, k_ref, v_ref,
                     *, head_dim: int, use_rope: bool):
     _restore_kv_kernel(h_ref, wk_ref, wv_ref, None, None, cos_ref, sin_ref,
                        k_ref, v_ref, head_dim=head_dim, use_rope=use_rope)
+
+
+# ------------------------------------------------------- grouped variant
+@functools.partial(jax.jit, static_argnames=("head_dim", "use_rope",
+                                             "block_s", "block_kv",
+                                             "interpret"))
+def restore_kv_grouped_pallas(hidden, wk, wv, bk, bv, cos, sin, *,
+                              head_dim: int, use_rope: bool = True,
+                              block_s: int = 256, block_kv: int = 0,
+                              interpret: bool = True):
+    """Stacked restoration projection for a *group* of layers.
+
+    hidden (G, S, D); wk/wv (G, D, KV); bk/bv (G, KV) or None; cos/sin
+    (S, head_dim//2) shared by all group members (same positions).
+    Returns K, V: (G, S, KV). One launch instead of G — grid gains a
+    leading group dimension that indexes the weight stack, and each
+    (g, i, j) cell is exactly the per-layer kernel's (i, j) cell for
+    layer g; the per-cell bodies are shared with the per-layer kernel."""
+    G, S, D = hidden.shape
+    KV = wk.shape[2]
+    block_kv = _pick_block_kv(KV, head_dim, block_kv)
+    block_s = _pick_block_s(S, block_s)
+    grid = (G, S // block_s, KV // block_kv)
+
+    has_bias = bk is not None
+    # leading None squeezes the group dim out of the per-cell refs, so
+    # the kernel bodies stay rank-2 (shared with the per-layer variant)
+    in_specs = [
+        pl.BlockSpec((None, block_s, D), lambda g, i, j: (g, i, 0)),
+        pl.BlockSpec((None, D, block_kv), lambda g, i, j: (g, 0, j)),
+        pl.BlockSpec((None, D, block_kv), lambda g, i, j: (g, 0, j)),
+    ]
+    args = [hidden, wk, wv]
+    if has_bias:
+        in_specs += [pl.BlockSpec((None, block_kv), lambda g, i, j: (g, j)),
+                     pl.BlockSpec((None, block_kv), lambda g, i, j: (g, j))]
+        args += [bk, bv]
+    in_specs += [pl.BlockSpec((block_s, head_dim // 2),
+                              lambda g, i, j: (i, 0)),
+                 pl.BlockSpec((block_s, head_dim // 2),
+                              lambda g, i, j: (i, 0))]
+    args += [cos, sin]
+
+    kernel = functools.partial(
+        _restore_kv_kernel if has_bias else _no_bias_kernel,
+        head_dim=head_dim, use_rope=use_rope)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((None, block_s, block_kv),
+                                lambda g, i, j: (g, i, j)),
+                   pl.BlockSpec((None, block_s, block_kv),
+                                lambda g, i, j: (g, i, j))],
+        out_shape=[jax.ShapeDtypeStruct((G, S, KV), hidden.dtype),
+                   jax.ShapeDtypeStruct((G, S, KV), hidden.dtype)],
+        interpret=interpret,
+    )(*args)
+    return out

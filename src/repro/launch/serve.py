@@ -61,6 +61,9 @@ def main() -> None:
     p.add_argument("--admission-aging", type=float, default=0.0,
                    help="restore_cost admission: seconds of makespan "
                         "credit per queued engine step (anti-starvation)")
+    p.add_argument("--restore-group-size", type=int, default=8,
+                   help="projection layers per stacked restoration "
+                        "dispatch (1 = per-layer; see DESIGN.md §10)")
     args = p.parse_args()
 
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -74,7 +77,8 @@ def main() -> None:
     cold = make_array("dram", args.ssds) if args.budget_kb else None
     store = ChunkStore(make_array("ssd", args.ssds), chunk_tokens=64,
                        cold_devices=cold)
-    mgr = HCacheManager(model, store, hw=PROFILES[args.profile])
+    mgr = HCacheManager(model, store, hw=PROFILES[args.profile],
+                        restore_group_size=args.restore_group_size)
     capacity = (CapacityManager(mgr, host_budget_bytes=args.budget_kb * 1024)
                 if args.budget_kb else None)
     admission = (RestoreCostAwareAdmission(aging=args.admission_aging)

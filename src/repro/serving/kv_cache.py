@@ -105,6 +105,14 @@ class CacheView:
         k, v: (1, n, Kv, hd); row indexes the stacked-KV buffer."""
         raise NotImplementedError
 
+    def write_layer_group(self, rows: Sequence[int], k, v) -> None:
+        """A whole restoration group's KV in one scatter; rows are
+        stacked-KV buffer rows, k/v: (G, 1, n, Kv, hd). Default falls
+        back to per-layer writes; both backends override with a single
+        donated device call (DESIGN.md §10)."""
+        for g, row in enumerate(rows):
+            self.write_layer(row, k[g], v[g])
+
     def write_kv(self, k, v, start: int) -> None:
         """Stacked prefill KV (L, 1, n, Kv, hd) at token offset start."""
         raise NotImplementedError
@@ -141,6 +149,9 @@ class ViewSink(RestoreSink):
 
     def put_kv(self, row, k, v):
         self.view.write_layer(row, k, v)
+
+    def put_kv_group(self, rows, k, v):
+        self.view.write_layer_group(rows, k, v)
 
     def put_states(self, conv, ssm):
         self.view.write_states({"conv": conv, "ssm": ssm})
@@ -213,6 +224,17 @@ class _ContiguousView(CacheView):
             val = jnp.asarray(val, buf.dtype)[None]       # (1, 1, n, H, hd)
             b.cache[name] = b._slot_update(buf, val, row, slot)
 
+    def write_layer_group(self, rows, k, v):
+        b = self.b
+        k_name, v_name = _kv_names(b.model.kind)
+        kbuf, vbuf = b.cache[k_name], b.cache[v_name]
+        b.cache[k_name], b.cache[v_name] = b._group_update(
+            kbuf, vbuf,
+            jnp.asarray(k, kbuf.dtype)[:, 0],         # (G, n, Kv, hd)
+            jnp.asarray(v, vbuf.dtype)[:, 0],
+            jnp.asarray(np.asarray(rows, np.int32)),
+            jnp.asarray(self.slot))
+
     def write_kv(self, k, v, start):
         b = self.b
         k_name, v_name = _kv_names(b.model.kind)
@@ -284,6 +306,14 @@ class ContiguousBackend(KVCacheBackend):
             lambda buf, val, row, slot: jax.lax.dynamic_update_slice(
                 buf, val, (row, slot, 0, 0, 0)),
             donate_argnums=(0,))
+        # grouped restore write: a whole projection group's K and V land
+        # in one donated scatter (rows traced, so group membership never
+        # retraces; retraces only per distinct restored length n)
+        self._group_update = jax.jit(
+            lambda kbuf, vbuf, kval, vval, rows, slot:
+            (kbuf.at[rows, slot, :kval.shape[1]].set(kval),
+             vbuf.at[rows, slot, :vval.shape[1]].set(vval)),
+            donate_argnums=(0, 1))
 
     def _slot_state(self, buf, slot):
         """Extract the batch=1 slice of a (…, B, …) state tensor."""
@@ -351,6 +381,17 @@ class _PagedView(CacheView):
             pool = b.cache[name]
             val = jnp.asarray(val, pool.dtype)[0]         # (n, Kv, hd)
             b.cache[name] = b._write_layer(pool, val, row, blk, off)
+
+    def write_layer_group(self, rows, k, v):
+        b = self.b
+        n = k.shape[2]
+        blk, off = self._addr(np.arange(n))
+        kp, vp = b.cache["k_pool"], b.cache["v_pool"]
+        b.cache["k_pool"], b.cache["v_pool"] = b._write_group(
+            kp, vp,
+            jnp.asarray(k, kp.dtype)[:, 0],           # (G, n, Kv, hd)
+            jnp.asarray(v, vp.dtype)[:, 0],
+            jnp.asarray(np.asarray(rows, np.int32)), blk, off)
 
     def write_kv(self, k, v, start):
         b = self.b
@@ -433,6 +474,14 @@ class PagedBackend(KVCacheBackend):
             lambda pool, val, row, blk, off:
             pool.at[row, blk, off].set(val),
             donate_argnums=(0,))
+        # grouped restore write: every member layer's whole pages land
+        # in one donated scatter (rows (G,) × token addresses (n,)
+        # broadcast to a (G, n) scatter grid)
+        self._write_group = jax.jit(
+            lambda kp, vp, kval, vval, rows, blk, off:
+            (kp.at[rows[:, None], blk[None, :], off[None, :]].set(kval),
+             vp.at[rows[:, None], blk[None, :], off[None, :]].set(vval)),
+            donate_argnums=(0, 1))
 
     def _push_table(self) -> None:
         self.cache["block_table"] = jnp.asarray(self.table_np)

@@ -331,6 +331,37 @@ class ChunkStore:
                 d.delete(k)
         return moved
 
+    def stream_in_cold(self, session: str, stream: str) -> bool:
+        """True when any chunk of (session, stream) lives in the cold
+        tier — the capacity ladder uses this to re-encode a stream back
+        into the tier it came from (a cold-demoted session's int8
+        re-encode must not re-enter the budgeted hot tier)."""
+        if self.cold is None:
+            return False
+        prefix = f"{_enc(session)}/{stream}/"
+        return any(k.startswith(prefix) for d in self.cold for k in d.keys())
+
+    def demote_stream_to_cold(self, session: str, stream: str) -> int:
+        """Move one (session, stream)'s chunks hot -> cold; returns bytes
+        moved. Stream-scoped sibling of ``demote_session_to_cold``."""
+        if self.cold is None:
+            return 0
+        self.flush(session)
+        prefix = f"{_enc(session)}/{stream}/"
+        moved = 0
+        for d in self.devices:
+            for k in d.keys():
+                if not k.startswith(prefix):
+                    continue
+                parts = k.split("/")
+                layer = int(parts[2][1:])
+                chunk = int(parts[3][1:])
+                data = d.peek(k)
+                self._cold_for(layer, chunk).write(k, np.asarray(data))
+                moved += data.nbytes
+                d.delete(k)
+        return moved
+
     # -------------------------------------------------------------- accounting
     @property
     def bytes_used(self) -> int:

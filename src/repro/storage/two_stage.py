@@ -34,7 +34,32 @@ class SnapshotTask:
     stream: str
     layer: int
     start_tokens: Sequence[int]       # per-sequence token offset
-    data: np.ndarray                  # (batch, n_tokens, width)
+    data: np.ndarray                  # (batch, n_tokens, width); with
+    #                                   ``layers`` set: (L, batch, n, width)
+    # layer-stacked form: one snapshot covers these layers for the whole
+    # decode batch (ONE ring submission per step instead of L) — the
+    # stage-2 daemon splits per (layer, sequence) row. ``layer`` is
+    # ignored when set.
+    layers: Optional[Sequence[int]] = None
+
+
+def _append_task_rows(store: ChunkStore, task: SnapshotTask) -> None:
+    """Split a snapshot into per-sequence (and per-layer, for the
+    stacked form) rows and append them to the chunk store."""
+    data = task.data
+    if task.layers is not None:
+        for j, layer in enumerate(task.layers):
+            for b, sid in enumerate(task.session_ids):
+                if sid is None:
+                    continue
+                store.append_tokens(sid, task.stream, layer,
+                                    task.start_tokens[b], data[j, b])
+        return
+    for b, sid in enumerate(task.session_ids):
+        if sid is None:
+            continue
+        store.append_tokens(sid, task.stream, task.layer,
+                            task.start_tokens[b], data[b])
 
 
 class TwoStageSaver:
@@ -76,12 +101,7 @@ class TwoStageSaver:
                 self.ring.task_done()
                 return
             try:
-                data = task.data
-                for b, sid in enumerate(task.session_ids):
-                    if sid is None:
-                        continue
-                    self.store.append_tokens(sid, task.stream, task.layer,
-                                             task.start_tokens[b], data[b])
+                _append_task_rows(self.store, task)
             except BaseException as e:   # noqa: BLE001 — losing a write
                 # silently would corrupt the store; surface via drain()
                 with self._exc_lock:
@@ -118,11 +138,7 @@ class DirectSaver:
 
     def snapshot(self, task: SnapshotTask) -> float:
         before = _write_busy(self.store)
-        for b, sid in enumerate(task.session_ids):
-            if sid is None:
-                continue
-            self.store.append_tokens(sid, task.stream, task.layer,
-                                     task.start_tokens[b], task.data[b])
+        _append_task_rows(self.store, task)
         stall = _write_busy(self.store) - before
         self.stall_time += stall
         return stall

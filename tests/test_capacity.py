@@ -279,6 +279,36 @@ def test_host_budget_keeps_bytes_under_budget(setup):
     mgr.saver.close()
 
 
+def test_int8_after_cold_never_raises_budgeted_bytes(setup):
+    """ROADMAP regression: ``demote_hidden_int8`` on a cold-demoted
+    session used to re-append the re-encoded 'h'/'hs' streams through
+    the HOT tier (``append_tokens`` always writes hot), so the ladder's
+    int8 stage could *increase* the budgeted bytes. The re-encode must
+    land back in the tier the chunks came from."""
+    cfg, model, params = setup
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16,
+                       cold_devices=make_array("dram", 4))
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden", store_dtype=np.float32)
+    outs = _save_sessions(setup, mgr, n=1)
+    assert store.demote_session_to_cold("s0") > 0
+    hot_before = store.bytes_used                  # 0: everything cold
+    total_before = store.bytes_for("s0")
+    assert mgr.demote_hidden_int8("s0")
+    assert store.bytes_used <= hot_before          # hot tier never grows
+    assert store.bytes_for("s0") < total_before    # int8 shrinks the total
+    assert store.bytes_for("s0", "h", include_cold=False) == 0
+    assert store.stream_in_cold("s0", "h") and store.stream_in_cold(
+        "s0", "hs")
+    # still restorable (int8-level error) through the cold fallback
+    res = mgr.restore(params, "s0")
+    assert res.n_tokens == 32
+    err = np.abs(np.asarray(res.cache["k"])
+                 - np.asarray(outs["s0"]["kv"][0])).max()
+    assert err < 0.05
+    mgr.saver.close()
+
+
 def test_budget_ladder_without_cold_tier_degrades_representation(setup):
     """No cold tier: the ladder re-encodes to int8, then drops streams
     for restore-by-recompute, then drops sessions outright."""

@@ -37,6 +37,61 @@ def test_restore_kv_sweep(S, D, Kv, hd, dtype, bias):
                                    np.asarray(w, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("S,D,Kv,hd", [(32, 64, 10, 96), (32, 64, 3, 80)])
+def test_restore_kv_non_pow2_head_dim(S, D, Kv, hd):
+    """Regression: the default-block fallback used to halve block_kv
+    blindly (KV=960 → 64 < head_dim=96), splitting a head across tiles
+    and corrupting the rotate-half pairing. The fallback must stay a
+    multiple of head_dim."""
+    from repro.kernels.restore_kv import _pick_block_kv
+    bkv = _pick_block_kv(Kv * hd, hd, 0)
+    assert bkv % hd == 0 and (Kv * hd) % bkv == 0
+    h = jnp.asarray(RNG.normal(size=(S, D)), jnp.float32)
+    wk = jnp.asarray(RNG.normal(size=(D, Kv * hd)) * D ** -0.5, jnp.float32)
+    wv = jnp.asarray(RNG.normal(size=(D, Kv * hd)) * D ** -0.5, jnp.float32)
+    ang = (jnp.arange(S, dtype=jnp.float32)[:, None]
+           * 10000.0 ** (-jnp.arange(hd // 2) / (hd // 2)))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    got = ops.restore_kv(h, wk, wv, None, None, cos, sin, head_dim=hd,
+                         use_pallas=True)
+    want = ref.restore_kv_ref(h, wk, wv, None, None, cos, sin, head_dim=hd)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("G,S,D,Kv,hd", [(1, 32, 64, 2, 16),
+                                         (4, 32, 64, 2, 16),
+                                         (3, 64, 128, 4, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bias", [False, True])
+def test_restore_kv_grouped_sweep(G, S, D, Kv, hd, dtype, bias):
+    """Grouped kernel (leading weight-stack grid dim) == per-layer oracle
+    applied row by row — the batched executor's byte contract."""
+    h = jnp.asarray(RNG.normal(size=(G, S, D)), dtype)
+    wk = jnp.asarray(RNG.normal(size=(G, D, Kv * hd)) * D ** -0.5, dtype)
+    wv = jnp.asarray(RNG.normal(size=(G, D, Kv * hd)) * D ** -0.5, dtype)
+    bk = jnp.asarray(RNG.normal(size=(G, Kv * hd)) * 0.1, dtype) if bias \
+        else None
+    bv = jnp.asarray(RNG.normal(size=(G, Kv * hd)) * 0.1, dtype) if bias \
+        else None
+    ang = (jnp.arange(S, dtype=jnp.float32)[:, None]
+           * 10000.0 ** (-jnp.arange(hd // 2) / (hd // 2)))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    for use_pallas in (False, True):
+        got = ops.restore_kv_grouped(h, wk, wv, bk, bv, cos, sin,
+                                     head_dim=hd, use_pallas=use_pallas)
+        for g in range(G):
+            want = ref.restore_kv_ref(
+                h[g], wk[g], wv[g],
+                bk[g] if bias else None, bv[g] if bias else None,
+                cos, sin, head_dim=hd)
+            for got_part, want_part in zip(got, want):
+                np.testing.assert_allclose(
+                    np.asarray(got_part[g], np.float32),
+                    np.asarray(want_part, np.float32), **_tol(dtype))
+
+
 @pytest.mark.parametrize("Sq,Skv,hd,group", [(64, 64, 16, 1), (64, 64, 32, 2),
                                              (32, 96, 16, 4)])
 @pytest.mark.parametrize("kwargs", [dict(causal=True), dict(causal=False),

@@ -1,0 +1,305 @@
+"""Batched restoration data path (DESIGN.md §10): grouped projection
+byte-equivalence across group sizes / families / codecs / sink backends,
+S-bucketed zero-recompile sharing, grouped task-graph compilation and
+replay, dispatch-count reduction, and the layer-stacked decode snapshot."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.arch import reduced_for_smoke
+from repro.config.hardware import PAPER_A100
+from repro.configs import get_arch
+from repro.core.cost_model import layer_costs, method_times
+from repro.core.hcache import HCacheManager
+from repro.core.restoration import (CacheAssembler, compile_tasks,
+                                    project_hidden, projection_trace_count,
+                                    replay, s_bucket, subset_blocks)
+from repro.models import Model
+from repro.models.module import split
+from repro.serving.kv_cache import ContiguousBackend, PagedBackend, ViewSink
+from repro.storage import ChunkStore, make_array
+
+B, S = 1, 40
+
+KV_KEYS = {"lm": ("k", "v"), "hybrid": ("attn_k", "attn_v"),
+           "encdec": ("self_k", "self_v")}
+
+
+def build(arch, rules, *, compress="none", n_layers=None):
+    cfg = reduced_for_smoke(get_arch(arch))
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    model = Model(cfg, rules=rules, model_axis=1, dtype=jnp.float32,
+                  remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def manager(model, *, group_size, compress="none", store_dtype=np.float32):
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    return HCacheManager(model, store, hw=PAPER_A100,
+                         schedule_override="hidden", compress=compress,
+                         store_dtype=store_dtype,
+                         restore_group_size=group_size)
+
+
+def save_session(cfg, model, params, mgr, sid="sess", n_tokens=S, key=1):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, n_tokens), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(jax.random.PRNGKey(2),
+                                            (B, 24, cfg.d_model)) * 0.1
+    pre = model.prefill(params, batch, capture_hidden=True)
+    mgr.save_prefill(sid, np.asarray(toks[0]), pre)
+    return toks, pre
+
+
+# ------------------------------------------------------------ task graph
+def test_compile_tasks_groups_projections():
+    """group_size coalesces hidden-layer projections into group tasks
+    whose deps cover every member's fetch; group_size=1 degenerates to
+    the per-layer graph."""
+    methods = ["hidden", "kv", "hidden", "hidden", "recompute", "hidden"]
+    tasks = compile_tasks(methods, group_size=3)
+    projects = [t for t in tasks if t.kind == "project"]
+    assert [t.members for t in projects] == [(0, 2, 3), (5,)]
+    for t in projects:
+        for li, d in zip(t.members, t.all_deps):
+            assert tasks[d].kind == "io_h" and tasks[d].layer == li
+    per_layer = compile_tasks(methods, group_size=1)
+    assert [t.members for t in per_layer if t.kind == "project"] == \
+        [(0,), (2,), (3,), (5,)]
+
+
+def test_replay_group_amortizes_dispatch_overhead():
+    """With per-dispatch overhead, grouped graphs finish strictly sooner
+    (fewer compute dispatches); with zero overhead the busy time is
+    identical — grouping is pure re-batching, not a cost-model change."""
+    cfg = get_arch("llama2-13b")
+    methods = ["hidden"] * cfg.n_layers
+    times = [method_times(c, PAPER_A100) for c in layer_costs(cfg, 2048)]
+    base1 = replay(compile_tasks(methods, group_size=1), times)
+    base8 = replay(compile_tasks(methods, group_size=8), times)
+    assert base1.compute_busy == pytest.approx(base8.compute_busy)
+    ovh = 50e-6
+    t1 = replay(compile_tasks(methods, group_size=1), times,
+                dispatch_overhead=ovh)
+    t8 = replay(compile_tasks(methods, group_size=8), times,
+                dispatch_overhead=ovh)
+    assert t1.compute_busy - t8.compute_busy == pytest.approx(
+        ovh * (cfg.n_layers - -(-cfg.n_layers // 8)))
+    # the trade-off the knob exposes: grouping always saves busy time
+    # (amortized dispatches) but waits for all member fetches (bubble);
+    # at a large enough dispatch cost the grouped graph wins makespan
+    big = 2e-3
+    t1b = replay(compile_tasks(methods, group_size=1), times,
+                 dispatch_overhead=big)
+    t8b = replay(compile_tasks(methods, group_size=8), times,
+                 dispatch_overhead=big)
+    assert t8b.makespan < t1b.makespan
+    assert t8.compute_bubble > t1.compute_bubble
+
+
+def test_s_bucket_power_of_two():
+    assert s_bucket(1) == 16
+    assert s_bucket(16) == 16
+    assert s_bucket(17) == 32
+    assert s_bucket(40) == 64
+    assert s_bucket(129) == 256
+
+
+# ------------------------------------------------- grouped byte-equivalence
+@pytest.mark.parametrize("arch", ["llama2-7b", "qwen2-7b", "zamba2-2.7b",
+                                  "whisper-medium"])
+def test_grouped_matches_per_layer_bytes(arch, rules):
+    """Restored caches are byte-identical across group_size ∈ {1, 4, L}
+    for lm (with and without qkv bias), hybrid, and encdec families."""
+    cfg, model, params = build(arch, rules)
+    kk, vk = KV_KEYS[model.kind]
+    caches = {}
+    for gs in (1, 4, cfg.n_layers):
+        mgr = manager(model, group_size=gs)
+        save_session(cfg, model, params, mgr)
+        caches[gs] = mgr.restore(params, "sess").cache
+        mgr.saver.close()
+    for gs in (4, cfg.n_layers):
+        np.testing.assert_array_equal(np.asarray(caches[1][kk]),
+                                      np.asarray(caches[gs][kk]))
+        np.testing.assert_array_equal(np.asarray(caches[1][vk]),
+                                      np.asarray(caches[gs][vk]))
+
+
+def test_grouped_matches_per_layer_bytes_int8(rules):
+    """Same contract through the int8 hidden codec (dequantize → group)."""
+    cfg, model, params = build("llama2-7b", rules)
+    caches = {}
+    for gs in (1, 4):
+        mgr = manager(model, group_size=gs, compress="int8")
+        save_session(cfg, model, params, mgr)
+        caches[gs] = mgr.restore(params, "sess").cache
+        mgr.saver.close()
+    np.testing.assert_array_equal(np.asarray(caches[1]["k"]),
+                                  np.asarray(caches[4]["k"]))
+    np.testing.assert_array_equal(np.asarray(caches[1]["v"]),
+                                  np.asarray(caches[4]["v"]))
+
+
+def test_grouped_matches_legacy_projection(rules):
+    """The grouped device path reproduces the legacy per-layer reference
+    (subset_blocks + project_hidden) to float tolerance, and the restored
+    cache is exact vs the prefill KV at fp32 storage."""
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size=4)
+    toks, pre = save_session(cfg, model, params, mgr)
+    res = mgr.restore(params, "sess")
+    np.testing.assert_array_equal(np.asarray(res.cache["k"]),
+                                  np.asarray(pre["kv"][0]))
+    hidden = jnp.stack([jnp.asarray(pre["hidden"][li])
+                        for li in range(cfg.n_layers)])
+    pos = jnp.arange(S)[None, :]
+    sub = subset_blocks(model, params, list(range(cfg.n_layers)))
+    k_ref, v_ref = project_hidden(model, sub, hidden, pos)
+    np.testing.assert_allclose(np.asarray(res.cache["k"]),
+                               np.asarray(k_ref), atol=1e-5)
+    mgr.saver.close()
+
+
+@pytest.mark.parametrize("group_size", [1, 4])
+def test_grouped_view_sinks_match_assembler(group_size, rules):
+    """ViewSink grouped writes land identically on both backends: the
+    contiguous slot and the paged pool hold the same restored KV as the
+    standalone CacheAssembler."""
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size=group_size)
+    save_session(cfg, model, params, mgr)
+    want = mgr.restore(params, "sess").cache
+
+    for backend in (ContiguousBackend(model, 2, 64),
+                    PagedBackend(model, 2, 64, block_size=8)):
+        slot = 1
+        assert backend.reserve(slot, S)
+        view = backend.view(slot)
+        ex = mgr.begin_restore(params, "sess", sink=ViewSink(view))
+        ex.run()
+        k, v = view.gather_hist(S)           # (L, 1, S, Kv, hd)
+        np.testing.assert_array_equal(
+            np.asarray(k), np.asarray(want["k"]), err_msg=backend.name)
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(want["v"]), err_msg=backend.name)
+        assert int(backend.get_lengths()[slot]) == S
+    mgr.saver.close()
+
+
+# --------------------------------------------------- recompiles / dispatches
+def test_same_bucket_sessions_share_one_projection_compile(rules):
+    """Two sessions with different lengths in the same power-of-two
+    bucket reuse one compiled projection — zero recompiles."""
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size=4)
+    save_session(cfg, model, params, mgr, sid="a", n_tokens=20, key=1)
+    save_session(cfg, model, params, mgr, sid="b", n_tokens=28, key=2)
+    assert s_bucket(20) == s_bucket(28)
+    mgr.restore(params, "a")                 # may trace (fresh bucket)
+    before = projection_trace_count()
+    res_b = mgr.restore(params, "b")
+    assert projection_trace_count() == before, \
+        "same-bucket session recompiled the projection"
+    assert res_b.n_tokens == 28
+    mgr.saver.close()
+
+
+def test_group_dispatch_count_reduction(rules):
+    """8 hidden layers at group_size=8 issue ≥8x fewer device dispatches
+    than per-layer execution (the acceptance criterion's metric)."""
+    cfg, model, params = build("llama2-7b", rules, n_layers=8)
+    counts = {}
+    for gs in (1, 8):
+        mgr = manager(model, group_size=gs)
+        save_session(cfg, model, params, mgr)
+        ex = mgr.begin_restore(params, "sess",
+                               sink=CacheAssembler(model))
+        ex.run()
+        counts[gs] = ex.dispatch_count
+        mgr.saver.close()
+    assert counts[1] >= 8 * counts[8]
+
+
+def test_executor_timeline_uses_group_granularity(rules):
+    """The executor's reported timeline equals the group-aware replay of
+    its compiled graph — simulate and execution cannot drift."""
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size=4)
+    save_session(cfg, model, params, mgr)
+    ex = mgr.begin_restore(params, "sess", sink=CacheAssembler(model))
+    ex.run()
+    want = replay(ex.tasks, ex.times)
+    assert ex.timeline() == want
+    assert sum(1 for t in ex.tasks if t.kind == "project") == \
+        -(-cfg.n_layers // 4)
+    mgr.saver.close()
+
+
+# ------------------------------------------------- stacked decode snapshot
+def test_save_decode_hidden_stacked_snapshot(rules):
+    """One decode step issues ONE layer-stacked snapshot for the plain
+    rows (not L), lands byte-identical rows in the store, and charges
+    exactly the same stage-1 cost as the per-layer form."""
+    from repro.storage.two_stage import SnapshotTask
+
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size=4)
+    submitted = []
+    orig = mgr.saver.snapshot
+
+    def spy(task: SnapshotTask):
+        submitted.append(task)
+        return orig(task)
+
+    mgr.saver.snapshot = spy
+    L, Bt, D = cfg.n_layers, 2, cfg.d_model
+    rng = np.random.default_rng(3)
+    h = rng.normal(size=(L, Bt, 1, D)).astype(np.float32)
+    lengths = np.asarray([5, 9])
+    cost = mgr.save_decode_hidden(["sa", "sb"], h, lengths)
+    mgr.saver.drain()
+    assert len(submitted) == 1                 # one task, not L
+    assert list(submitted[0].layers) == list(range(L))
+    expected_cost = h.astype(mgr.store_dtype).nbytes / mgr.saver.host_bw
+    assert cost == pytest.approx(expected_cost)
+    # rows landed per (layer, session) at the right offsets
+    mgr.store.flush("sa")
+    mgr.store.flush("sb")
+    for li in range(L):
+        for b, sid in enumerate(("sa", "sb")):
+            assert mgr.store.layer_available(sid, "h", li,
+                                             int(lengths[b]) + 1)
+    mgr.saver.close()
+
+
+def test_save_decode_hidden_stacked_int8_rows(rules):
+    """Demoted (int8) rows also collapse to one stacked q + one stacked
+    scale snapshot per row, and the stored bytes match the bulk codec."""
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size=4)
+    mgr._session_compress["sq"] = "int8"
+    L, D = cfg.n_layers, cfg.d_model
+    rng = np.random.default_rng(4)
+    h = rng.normal(size=(L, 1, 1, D)).astype(np.float32)
+    n_before = 7
+    cost = mgr.save_decode_hidden(["sq"], h, np.asarray([n_before]))
+    mgr.saver.drain()
+    mgr.store.flush("sq")
+    assert cost > 0
+    from repro.core.restoration import quantize_hidden_int8
+    for li in range(L):
+        q_want, s_want = quantize_hidden_int8(h[li][0].astype(np.float32))
+        got_q = np.asarray(mgr.store.read_layer("sq", "h", li, n_before + 1))
+        got_s = np.asarray(mgr.store.read_layer("sq", "hs", li,
+                                                n_before + 1))
+        np.testing.assert_array_equal(got_q[n_before:], q_want)
+        np.testing.assert_array_equal(got_s[n_before:], s_want)
+    mgr.saver.close()
