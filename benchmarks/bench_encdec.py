@@ -1,0 +1,226 @@
+"""Enc-dec (whisper) serving through the family-agnostic engine
+(DESIGN.md §11): the batching and restoration case for the paired
+self/cross EncDecBackend.
+
+Two comparisons on one synthetic whisper workload:
+
+  * batched vs sequential — the same N sessions served by one engine
+    with N slots (continuous batching: one decode dispatch per step for
+    the whole batch) vs an engine with a single slot (sessions run
+    back-to-back). Decode throughput and engine steps to drain are the
+    headline; greedy outputs must be identical — batching is a
+    scheduling change, not a model change.
+  * restore vs recompute TTFT — round-2 requests on stored sessions,
+    restored through the grouped hidden→KV projection + encoder-blob
+    cross path, against the analytic full-recompute prefill of the same
+    history (``pipeline.prefill_time``); simulated makespans under the
+    paper's A100 profile, now including the io_enc/project_cross tasks.
+
+Emits BENCH_encdec.json for CI trending.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import emit
+
+N_SESSIONS = 4
+ENC_FRAMES = 24
+PROMPT_LEN = 10
+GEN_TOKENS = 6
+MAX_SEQ = 96
+
+
+def _build_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.config.arch import reduced_for_smoke
+    from repro.configs import get_arch
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    from repro.models import Model
+    from repro.models.module import split
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced_for_smoke(get_arch("whisper-medium"))
+    model = Model(cfg, rules=default_rules(mesh), model_axis=1,
+                  dtype=jnp.float32, remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def _workload(cfg, rng):
+    prompts = [rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+               for _ in range(N_SESSIONS)]
+    frames = [(rng.standard_normal((ENC_FRAMES + 2 * i, cfg.d_model))
+               * 0.1).astype(np.float32) for i in range(N_SESSIONS)]
+    return prompts, frames
+
+
+def _fresh_engine(cfg, model, params, *, max_batch):
+    from repro.config.hardware import PAPER_A100
+    from repro.core.hcache import HCacheManager
+    from repro.serving import InferenceEngine
+    from repro.storage import ChunkStore, make_array
+
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden", store_dtype=np.float32)
+    return InferenceEngine(model, params, mgr, max_batch=max_batch,
+                           max_seq=MAX_SEQ, prefill_chunk=8), mgr
+
+
+def _serve_round1(cfg, model, params, *, max_batch):
+    import time
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(0)
+    prompts, frames = _workload(cfg, rng)
+    engine, mgr = _fresh_engine(cfg, model, params, max_batch=max_batch)
+    t0 = time.perf_counter()
+    for i, p in enumerate(prompts):
+        engine.submit(Request(f"w{i}", p, max_new_tokens=GEN_TOKENS,
+                              frames=frames[i]))
+    engine.run()
+    wall = time.perf_counter() - t0
+    outputs = {f"w{i}": engine.result(f"w{i}") for i in range(N_SESSIONS)}
+    m = engine.metrics
+    stats = {
+        "max_batch": max_batch,
+        "wall_s": wall,
+        "decode_steps": m.decode_steps,
+        "engine_steps": engine.step_count,
+        "concurrent_peak": m.concurrent_peak,
+        "decode_tokens_per_dispatch": (
+            N_SESSIONS * GEN_TOKENS / max(m.decode_steps, 1)),
+        "mean_tbt_wall_s": float(np.mean(m.tbt_wall)) if m.tbt_wall else 0.0,
+    }
+    return engine, mgr, stats, outputs
+
+
+def _analytic_full_model():
+    """Restore vs recompute TTFT at FULL whisper-medium scale (cost
+    model only — the functional runs above use the smoke config, whose
+    tiny tensors make recompute artificially cheap). History: a full
+    448-token transcript over 1500 encoder frames, 64 new decoder
+    tokens. Recompute must re-run the encoder AND re-prefill the
+    decoder; restore reads hidden states + the encoder blob and projects
+    (io_enc/project_cross modeled in the task graph)."""
+    from types import SimpleNamespace
+
+    from repro.config.hardware import PAPER_A100
+    from repro.configs import get_arch
+    from repro.core.cost_model import layer_costs, method_times
+    from repro.core.pipeline import prefill_time
+    from repro.core.restoration import (compile_tasks, cross_restore_times,
+                                        replay)
+    from repro.core.scheduler import solve
+
+    cfg = get_arch("whisper-medium")
+    hw = PAPER_A100
+    hist, enc_len, new = 448, 1500, 64
+    sched = solve(cfg, hist, hw, dtype_bytes=2, allow_recompute=False)
+    times = [method_times(c, hw) for c in layer_costs(cfg, hist, 2)]
+    ct = cross_restore_times(
+        SimpleNamespace(cfg=cfg, hw=hw, dtype_bytes=2), enc_len)
+    restore = replay(
+        compile_tasks(sched.methods, group_size=8, cross=True), times,
+        dispatch_overhead=getattr(hw, "dispatch_overhead", 0.0),
+        cross_times=ct).makespan
+    # whisper's encoder depth == decoder depth, so a same-depth pass
+    # over the frames approximates the encoder recompute
+    recompute = (prefill_time(cfg, hist, 0, hw)
+                 + prefill_time(cfg, enc_len, 0, hw))
+    tail = prefill_time(cfg, new, hist, hw)
+    return {"hist_tokens": hist, "enc_frames": enc_len, "new_tokens": new,
+            "restore_s": float(restore), "recompute_s": float(recompute),
+            "restore_ttft_s": float(restore + tail),
+            "recompute_ttft_s": float(recompute + tail),
+            "ttft_speedup": float((recompute + tail) / (restore + tail))}
+
+
+def run_encdec_bench(out_path: str = "BENCH_encdec.json"):
+    from repro.core.capacity import session_restore_cost
+    from repro.core.pipeline import prefill_time
+    from repro.config.hardware import PAPER_A100
+    from repro.serving import Request
+
+    cfg, model, params = _build_model()
+    results = {"workload": {"sessions": N_SESSIONS, "prompt_len": PROMPT_LEN,
+                            "enc_frames": ENC_FRAMES, "gen": GEN_TOKENS,
+                            "max_seq": MAX_SEQ}, "modes": {}}
+
+    # batched vs sequential throughput
+    outs = {}
+    for label, mb in (("batched", N_SESSIONS), ("sequential", 1)):
+        engine, mgr, stats, outputs = _serve_round1(cfg, model, params,
+                                                    max_batch=mb)
+        results["modes"][label] = stats
+        outs[label] = outputs
+        if label == "batched":
+            keep = (engine, mgr)            # reused for the restore round
+        else:
+            engine.close()
+    results["outputs_identical"] = outs["batched"] == outs["sequential"]
+    ba, se = results["modes"]["batched"], results["modes"]["sequential"]
+    results["decode_dispatch_reduction"] = (
+        se["decode_steps"] / max(ba["decode_steps"], 1))
+
+    # restore-vs-recompute TTFT on round 2 (stored sessions)
+    engine, mgr = keep
+    restore_sims = [session_restore_cost(mgr, f"w{i}")
+                    for i in range(N_SESSIONS)]
+    hist = PROMPT_LEN + GEN_TOKENS - 1
+    recompute_s = prefill_time(cfg, hist + PROMPT_LEN, 0, PAPER_A100)
+    rng = np.random.default_rng(1)
+    for i in range(N_SESSIONS):
+        p2 = rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+        engine.submit(Request(f"w{i}", p2, max_new_tokens=GEN_TOKENS))
+    engine.run()
+    m = engine.metrics
+    results["restore"] = {
+        "restored_tokens": m.restored_tokens,
+        "mean_restore_sim_s": float(np.mean(m.restore_sim_all)),
+        "mean_restore_cost_model_s": float(np.mean(restore_sims)),
+        "recompute_prefill_sim_s": float(recompute_s),
+        "ttft_speedup_vs_recompute": float(
+            recompute_s / max(np.mean(m.restore_sim_all), 1e-12)),
+        "mean_ttft_wall_restored_s": (
+            float(np.mean(m.ttft_wall_restored))
+            if m.ttft_wall_restored else 0.0),
+        "mean_ttft_wall_cold_s": float(np.mean(m.ttft_wall_cold)),
+    }
+    engine.close()
+    results["full_model"] = _analytic_full_model()
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    fm = results["full_model"]
+    rows = [
+        ("bench_encdec_batched", ba["wall_s"] * 1e6,
+         f"decode_steps={ba['decode_steps']};"
+         f"tok_per_dispatch={ba['decode_tokens_per_dispatch']:.1f}"),
+        ("bench_encdec_sequential", se["wall_s"] * 1e6,
+         f"decode_steps={se['decode_steps']};"
+         f"tok_per_dispatch={se['decode_tokens_per_dispatch']:.1f}"),
+        ("bench_encdec_restore_sim",
+         results["restore"]["mean_restore_sim_s"] * 1e6,
+         f"recompute_sim_us="
+         f"{results['restore']['recompute_prefill_sim_s'] * 1e6:.1f};"
+         f"identical={results['outputs_identical']}"),
+        ("bench_encdec_full_ttft", fm["restore_ttft_s"] * 1e6,
+         f"recompute_ttft_us={fm['recompute_ttft_s'] * 1e6:.1f};"
+         f"speedup={fm['ttft_speedup']:.2f}x"),
+    ]
+    return emit(rows)
+
+
+def run():
+    return run_encdec_bench()
+
+
+if __name__ == "__main__":
+    run()

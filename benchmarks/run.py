@@ -40,7 +40,8 @@ def main() -> None:
                    help="fast analytic suites only (CI)")
     p.add_argument("--mode", default=None,
                    choices=["bench_restoration", "bench_capacity",
-                            "bench_paged", "bench_restore_batch"],
+                            "bench_paged", "bench_restore_batch",
+                            "bench_encdec"],
                    help="special modes: bench_restoration compares "
                         "blocking vs pipelined TTFT -> "
                         "BENCH_restoration.json; bench_capacity runs the "
@@ -50,7 +51,9 @@ def main() -> None:
                         "-> BENCH_paged.json; bench_restore_batch sweeps "
                         "the grouped-restoration group size (dispatches, "
                         "projection wall time, makespan) -> "
-                        "BENCH_restore_batch.json")
+                        "BENCH_restore_batch.json; bench_encdec compares "
+                        "batched vs sequential whisper serving and "
+                        "restore-vs-recompute TTFT -> BENCH_encdec.json")
     args = p.parse_args()
     print("name,us_per_call,derived")
     if args.mode == "bench_restoration":
@@ -75,6 +78,11 @@ def main() -> None:
         rows = run_restore_batch()
         print(f"# {len(rows)} rows -> BENCH_restore_batch.json",
               file=sys.stderr)
+        return
+    if args.mode == "bench_encdec":
+        from benchmarks.bench_encdec import run_encdec_bench
+        rows = run_encdec_bench()
+        print(f"# {len(rows)} rows -> BENCH_encdec.json", file=sys.stderr)
         return
     filters = args.only.split(",") if args.only else None
     t0 = time.time()

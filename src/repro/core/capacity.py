@@ -29,25 +29,40 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cost_model import layer_costs, method_times
-from repro.core.restoration import compile_tasks, replay
+from repro.core.restoration import (compile_tasks, cross_restore_times,
+                                    replay)
 
 
 # ----------------------------------------------------- restore-cost estimate
 def restore_makespan(mgr, n_tokens: int,
-                     methods: Optional[Sequence[str]] = None) -> float:
+                     methods: Optional[Sequence[str]] = None, *,
+                     enc_len: int = 0) -> float:
     """Estimated restoration makespan (seconds under ``mgr.hw``) for a
     session of ``n_tokens`` — the two-stream replay of the same task
-    graph the executor would run."""
+    graph the executor would run (including the enc-dec ``io_enc`` /
+    ``project_cross`` pair when ``enc_len`` encoder positions are
+    stored, and the auto group-size choice when the manager's
+    ``restore_group_size`` is "auto")."""
     if n_tokens <= 0:
         return 0.0
     if methods is None:
         methods = mgr.plan(n_tokens).methods
+    adapter = mgr.model.adapter
+    cross = adapter.has_cross
+    cross_times = cross_restore_times(mgr, enc_len) if cross else None
     times = [method_times(c, mgr.hw)
              for c in layer_costs(mgr.cfg, n_tokens, mgr.dtype_bytes)]
-    group = max(int(getattr(mgr, "restore_group_size", 1)), 1)
-    return replay(compile_tasks(tuple(methods), group_size=group), times,
+    resolve = getattr(mgr, "resolve_group_size", None)
+    if resolve is not None:
+        group = resolve(n_tokens, methods, enc_len=enc_len)
+    else:                        # duck-typed manager without the knob
+        group = max(int(getattr(mgr, "restore_group_size", 1)), 1)
+    tasks = compile_tasks(tuple(methods), n_blobs=adapter.n_state_blobs,
+                          group_size=max(int(group), 1), cross=cross)
+    return replay(tasks, times,
                   dispatch_overhead=getattr(mgr.hw, "dispatch_overhead",
-                                            0.0)).makespan
+                                            0.0),
+                  cross_times=cross_times).makespan
 
 
 def session_restore_cost(mgr, session_id: str) -> float:
@@ -57,7 +72,8 @@ def session_restore_cost(mgr, session_id: str) -> float:
     if not man:
         return 0.0
     return restore_makespan(mgr, int(man.get("n_tokens", 0)),
-                            man.get("methods"))
+                            man.get("methods"),
+                            enc_len=int(man.get("enc_len", 0)))
 
 
 # ------------------------------------------------------------- admission
@@ -151,9 +167,17 @@ class RestoreCostAwareEviction(EvictionPolicy):
     def select_victim(self, candidates, engine):
         if not candidates:
             return None
-        return min(candidates, key=lambda s: (
-            restore_makespan(engine.mgr, max(s.total_len - 1, 0)),
-            s.request.request_id))
+
+        def key(s):
+            # price the cross side of enc-dec sessions exactly like the
+            # admission path does (session_restore_cost): the stored
+            # encoder length comes from the session's manifest
+            man = engine.mgr.store.get_manifest(s.request.session_id) or {}
+            return (restore_makespan(engine.mgr, max(s.total_len - 1, 0),
+                                     enc_len=int(man.get("enc_len", 0))),
+                    s.request.request_id)
+
+        return min(candidates, key=key)
 
 
 EVICTION_POLICIES = {"lru": LRUEviction,
@@ -283,6 +307,30 @@ class CapacityManager:
             self.actions.append(("promote", session_id))
             return True
         return False
+
+    def sweep_promotions(self, limit: int = 1) -> int:
+        """Anti-entropy promotion sweep (the background half the on-save
+        hook cannot cover): walk idle int8-demoted sessions and re-encode
+        up to ``limit`` of them back to the full-fidelity codec while the
+        byte budget has headroom — a session that went idle right after
+        its demotion no longer has to wait for its next save to stop
+        accumulating quantization loss. Called from the engine's idle
+        steps; warmest (most recently active) sessions first, since they
+        are the likeliest to return. A no-op without a budget or without
+        headroom (``consider_promotion`` re-checks the fp16 re-encode
+        fits before touching any stream). Returns promotions taken."""
+        if self.host_budget_bytes is None or self._reclaiming:
+            return 0
+        taken = 0
+        prot = self._protected()
+        sids = [s for s in self.store.sessions() if s not in prot]
+        sids.sort(key=lambda s: (-self._last_active.get(s, -1), s))
+        for sid in sids:
+            if taken >= limit:
+                break
+            if self.consider_promotion(sid):
+                taken += 1
+        return taken
 
     def _apply(self, stage: str, sid: str) -> bool:
         if stage == "cold":

@@ -53,15 +53,24 @@ class HCacheManager:
                  hw: HardwareProfile = TPU_V5E, saver: Optional[TwoStageSaver]
                  = None, compress: str = "none", dtype_bytes: int = 2,
                  schedule_override: Optional[str] = None,
-                 store_dtype=np.float16, restore_group_size: int = 8):
+                 store_dtype=np.float16, restore_group_size=8):
         self.model = model
         self.cfg = model.cfg
         self.store = store
         self.hw = hw
         # projection group width for the batched restoration data path
         # (DESIGN.md §10): one stacked device call per group instead of
-        # one per layer; 1 recovers the per-layer graph exactly
-        self.restore_group_size = max(int(restore_group_size), 1)
+        # one per layer; 1 recovers the per-layer graph exactly, and
+        # "auto" lets each restore pick the makespan-argmin width over
+        # {1, 2, 4, 8, L} from the group-aware cost model
+        # (restoration.choose_group_size)
+        self.restore_group_size = (
+            "auto" if restore_group_size == "auto"
+            else max(int(restore_group_size), 1))
+        # memoized "auto" resolutions, keyed (S-bucket, methods,
+        # enc-bucket) — the choice is bucket-stable by construction, and
+        # admission calls restore_makespan per queued session per step
+        self._group_plans: Dict[tuple, int] = {}
         # once-per-(model, params) restoration weight pack, built lazily
         # on the first restore and shared by every executor
         self._pack = None
@@ -96,6 +105,31 @@ class HCacheManager:
         return self._pack
 
     # ------------------------------------------------------------- planning
+    def resolve_group_size(self, n_tokens: int, methods, *,
+                           enc_len: int = 0) -> int:
+        """Concrete projection group width for one restore: the fixed
+        knob, or — under ``restore_group_size="auto"`` — the
+        bucket-stable makespan argmin (``restoration.choose_group_size``),
+        memoized per (S-bucket, methods, enc-bucket) like ``plan``'s
+        ``_plans`` cache. The single resolution point for the executor
+        and ``capacity.restore_makespan``."""
+        if self.restore_group_size != "auto":
+            return self.restore_group_size
+        from repro.core.restoration import choose_group_size, s_bucket
+        adapter = self.model.adapter
+        cross = adapter.has_cross and enc_len > 0
+        key = (s_bucket(max(int(n_tokens), 1)), tuple(methods),
+               s_bucket(enc_len) if cross else 0)
+        got = self._group_plans.get(key)
+        if got is None:
+            got = choose_group_size(self.cfg, self.hw, n_tokens, methods,
+                                    dtype_bytes=self.dtype_bytes,
+                                    n_blobs=adapter.n_state_blobs,
+                                    cross=adapter.has_cross,
+                                    enc_len=enc_len)
+            self._group_plans[key] = got
+        return got
+
     def plan(self, n_tokens: int) -> Schedule:
         """Bucketed bubble-free schedule (power-of-two token buckets)."""
         if self.schedule_override:
@@ -106,35 +140,22 @@ class HCacheManager:
             return Schedule(methods, 0.0, 0.0, 0.0, 0.0)
         bucket = 1 << max(int(np.ceil(np.log2(max(n_tokens, 128)))), 7)
         if bucket not in self._plans:
-            # recompute-prefix is undefined for hybrid stacks (an attention
-            # block's recompute would depend on interleaved mamba layers)
-            allow_re = self.model.kind == "lm"
+            # recompute-prefix is only defined where the adapter says so
+            # (hybrid: an attention block's recompute would depend on
+            # interleaved mamba layers; encdec: on the cross context)
+            allow_re = self.model.adapter.supports_recompute
             self._plans[bucket] = solve(self.cfg, bucket, self.hw,
                                         dtype_bytes=self.dtype_bytes,
                                         allow_recompute=allow_re)
         return self._plans[bucket]
 
     # ----------------------------------------------------------------- save
-    def _hidden_for_layer(self, out: dict, li: int):
-        """Layer li's saved hidden states (S, D) from a prefill output."""
-        kind = self.model.kind
-        if kind == "hybrid":
-            k = self.model.h.k
-            return np.asarray(out["attn_hidden"][li // k][0])
-        return np.asarray(out["hidden"][li][0])
-
-    def _kv_for_layer(self, out: dict, li: int):
-        kind = self.model.kind
-        idx = li // self.model.h.k if kind == "hybrid" else li
-        if kind == "lm":
-            idx = [i for i, bk in enumerate(self.cfg.block_kinds())
-                   if bk == BlockKind.ATTENTION].index(li)
-        return (np.asarray(out["kv"][0][idx][0]),
-                np.asarray(out["kv"][1][idx][0]))
-
     def save_prefill(self, session: str, tokens: np.ndarray, prefill_out:
                      dict, *, start: int = 0) -> None:
-        """Persist one sequence's prefill state (B must be 1 in `out`)."""
+        """Persist one sequence's prefill state (B must be 1 in `out`).
+        The mapping between prefill outputs and persisted pieces
+        (hidden/KV row naming) is the FamilyAdapter's."""
+        adapter = self.model.adapter
         prev = self.store.get_manifest(session) if start > 0 else None
         if prev and prev.get("methods"):
             # a resumed session must keep appending under its stored
@@ -156,23 +177,30 @@ class HCacheManager:
                 continue  # SSM layers handled via state blobs below
             if method == "hidden":
                 self._append_hidden(session, li, start,
-                                    self._hidden_for_layer(prefill_out, li))
+                                    adapter.prefill_hidden(prefill_out, li))
             elif method == "kv":
-                k, v = self._kv_for_layer(prefill_out, li)
+                k, v = adapter.prefill_kv(prefill_out, li)
                 self.store.append_tokens(session, "kvk", li, start,
                                          k.reshape(k.shape[0], -1))
                 self.store.append_tokens(session, "kvv", li, start,
                                          v.reshape(v.shape[0], -1))
         self._save_ssm_states(session, prefill_out)
-        if self.cfg.is_encoder_decoder and "enc_out" in prefill_out:
-            self.store.put_blob(session, "enc", 0,
-                                np.asarray(prefill_out["enc_out"][0]))
-        self.store.flush(session)
-        self.store.put_manifest(session, {
+        manifest = {
             "n_tokens": int(start + tokens.shape[-1]),
             "methods": methods,
             "arch": self.cfg.name, "compress": self._compress_for(session),
-        })
+        }
+        if adapter.has_cross:
+            if "enc_out" in prefill_out:
+                self.store.put_blob(session, "enc", 0,
+                                    np.asarray(prefill_out["enc_out"][0]))
+                manifest["enc_len"] = int(prefill_out["enc_out"].shape[1])
+            elif prev:
+                # resume prefill (no encoder pass): keep the stored
+                # encoder length so restore cost modeling stays honest
+                manifest["enc_len"] = int(prev.get("enc_len", 0))
+        self.store.flush(session)
+        self.store.put_manifest(session, manifest)
 
     def save_session_pause(self, session: str, cache: dict,
                            n_tokens: int, *, tokens_tail: np.ndarray) -> None:
@@ -191,16 +219,12 @@ class HCacheManager:
             self.store.put_blob(session, "tok", 0, np.concatenate(
                 [old[:prev_n], np.asarray(tokens_tail).reshape(-1)]))
         kinds = self.cfg.block_kinds()
-        k_name = "attn_k" if self.model.kind == "hybrid" else \
-            "self_k" if self.model.kind == "encdec" else "k"
-        v_name = k_name.replace("k", "v") if k_name != "k" else "v"
+        adapter = self.model.adapter
+        k_name, v_name = adapter.kv_names or ("k", "v")
         for li, method in enumerate(methods):
             if kinds[li] != BlockKind.ATTENTION or method != "kv":
                 continue
-            idx = li // self.model.h.k if self.model.kind == "hybrid" else li
-            if self.model.kind == "lm":
-                idx = [i for i, bk in enumerate(kinds)
-                       if bk == BlockKind.ATTENTION].index(li)
+            idx = adapter.kv_row(li)
             k = np.asarray(cache[k_name][idx][0][prev_n:n_tokens])
             v = np.asarray(cache[v_name][idx][0][prev_n:n_tokens])
             self.store.append_tokens(session, "kvk", li, prev_n,
@@ -389,7 +413,7 @@ class HCacheManager:
         token blob + manifest: the session stays restorable by full
         recompute (LM stacks only — hybrid recompute is undefined).
         The cheapest possible storage state before dropping outright."""
-        if self.model.kind != "lm":
+        if not self.model.adapter.supports_recompute:
             return False
         man = self.store.get_manifest(session)
         if not man or all(m == "recompute" for m in man["methods"]):

@@ -47,7 +47,8 @@ class Timeline:
 
 def simulate(methods: Sequence[str], times: Sequence[MethodTimes], *,
              group_size: int = 1,
-             dispatch_overhead: float = 0.0) -> Timeline:
+             dispatch_overhead: float = 0.0,
+             cross: bool = False, cross_times=None) -> Timeline:
     """Simulate a restoration schedule. methods[i] in {hidden, kv, recompute}.
 
     Thin wrapper over the restoration executor's task graph: the same
@@ -56,10 +57,13 @@ def simulate(methods: Sequence[str], times: Sequence[MethodTimes], *,
     executed orders cannot drift apart (see core/restoration.py).
     ``group_size`` coalesces projections into grouped compute tasks and
     ``dispatch_overhead`` charges the per-dispatch launch cost once per
-    compute task — the batched data path's makespan knob (DESIGN.md §10)."""
+    compute task — the batched data path's makespan knob (DESIGN.md §10).
+    ``cross``/``cross_times`` add the enc-dec encoder-blob read and
+    cross-KV projection tasks (DESIGN.md §11)."""
     from repro.core.restoration import compile_tasks, replay
-    return replay(compile_tasks(methods, group_size=group_size), times,
-                  dispatch_overhead=dispatch_overhead)
+    return replay(compile_tasks(methods, group_size=group_size, cross=cross),
+                  times, dispatch_overhead=dispatch_overhead,
+                  cross_times=cross_times)
 
 
 def restore_timeline(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile,

@@ -1,9 +1,12 @@
-"""Pipelined restoration executor (paper §4.1, DESIGN.md §5, §10).
+"""Pipelined restoration executor (paper §4.1, DESIGN.md §5, §10, §11).
 
 One source of truth for restoration: a ``Schedule`` compiles into an
 ordered task graph (``compile_tasks``) of per-layer steps — striped
 chunk-store IO reads, hidden→KV projections, recompute-prefix segments,
-SSM/enc-dec blob loads. The same graph serves three consumers:
+SSM state blob loads, and for enc-dec sessions the ``io_enc``
+encoder-blob read + ``project_cross`` cross-KV projection pair (both
+charged via ``CrossTimes``, so the cross side is costed, not a zero-time
+blob). The same graph serves three consumers:
 
   * ``replay``                — virtual two-stream replay of a task order
                                 under a hardware profile → ``Timeline``.
@@ -56,18 +59,21 @@ from repro.models.layers.rope import rope_angles
 from repro.models.layers import attention as attn_lib
 
 # Task kinds. IO-stream: io_h (hidden fetch), io_kv (raw KV fetch),
-# blob (state/encoder/token whole-object reads — O(1) in tokens, charged
-# zero virtual time as in the paper's model). Compute-stream: recompute
-# (one prefix layer from tokens), project (hidden → K,V GEMM for a
-# GROUP of layers — one device dispatch per group).
-IO_KINDS = ("io_h", "io_kv", "blob")
-COMPUTE_KINDS = ("recompute", "project")
+# io_enc (enc-dec: the saved encoder-output blob, sized in S_enc), blob
+# (SSM-state/token whole-object reads — O(1) in tokens, charged zero
+# virtual time as in the paper's model). Compute-stream: recompute (one
+# prefix layer from tokens), project (hidden → K,V GEMM for a GROUP of
+# layers — one device dispatch per group), project_cross (enc-dec: the
+# single encoder output → cross-KV for ALL decoder layers).
+IO_KINDS = ("io_h", "io_kv", "io_enc", "blob")
+COMPUTE_KINDS = ("recompute", "project", "project_cross")
 
 
 @dataclasses.dataclass(frozen=True)
 class Task:
-    kind: str                 # io_h | io_kv | blob | recompute | project
-    layer: int                # global layer index (-1 for blob tasks;
+    kind: str                 # io_h|io_kv|io_enc|blob|recompute|project|
+    #                           project_cross
+    layer: int                # global layer index (-1 for blob/enc tasks;
     #                           first member for project groups)
     dep: Optional[int] = None  # task-list index that must execute first
     layers: Optional[Tuple[int, ...]] = None   # project group members
@@ -88,22 +94,39 @@ class Task:
         return () if self.dep is None else (self.dep,)
 
 
+@dataclasses.dataclass(frozen=True)
+class CrossTimes:
+    """Virtual durations of the enc-dec cross-restoration pair: the
+    encoder-blob read (one (S_enc, D) tensor) and the cross-KV
+    projection (K,V GEMMs for every decoder layer from that one blob —
+    the 1 → 2·L expansion DESIGN.md §3 describes)."""
+
+    io: float
+    compute: float
+
+
 def compile_tasks(methods: Sequence[str], *, n_blobs: int = 0,
-                  group_size: int = 1) -> List[Task]:
+                  group_size: int = 1, cross: bool = False) -> List[Task]:
     """Compile a per-layer method assignment into the ordered task graph.
 
     List order encodes per-stream priority (paper §4.1): the IO stream
     runs hidden fetches first (layer order) so projections can start,
-    then KV fetches fill the IO tail; the compute stream runs the
-    recompute prefix from t=0, then projections in fetch order. A
-    projection group depends on *all* of its members' fetches; with
-    ``group_size=1`` this degenerates exactly to the per-layer graph."""
+    then the encoder blob (when ``cross`` — its projection gates the
+    first cross-attention), then KV fetches fill the IO tail; the
+    compute stream runs the recompute prefix from t=0, then projections
+    in fetch order, then the cross projection. A projection group
+    depends on *all* of its members' fetches; with ``group_size=1`` this
+    degenerates exactly to the per-layer graph."""
     tasks: List[Task] = []
     io_of: Dict[int, int] = {}
     hidden_layers = [i for i, m in enumerate(methods) if m == "hidden"]
     for i in hidden_layers:
         io_of[i] = len(tasks)
         tasks.append(Task("io_h", i))
+    io_enc = None
+    if cross:
+        io_enc = len(tasks)
+        tasks.append(Task("io_enc", -1))
     for i, m in enumerate(methods):
         if m == "kv":
             tasks.append(Task("io_kv", i))
@@ -118,11 +141,14 @@ def compile_tasks(methods: Sequence[str], *, n_blobs: int = 0,
         deps = tuple(io_of[i] for i in grp)
         tasks.append(Task("project", grp[0], dep=deps[-1], layers=grp,
                           deps=deps))
+    if cross:
+        tasks.append(Task("project_cross", -1, dep=io_enc))
     return tasks
 
 
 def task_duration(task: Task, times: Sequence[MethodTimes],
-                  dispatch_overhead: float = 0.0) -> float:
+                  dispatch_overhead: float = 0.0,
+                  cross_times: Optional[CrossTimes] = None) -> float:
     """Virtual duration of one task. Compute-stream tasks carry the
     per-dispatch overhead once — a projection group amortizes it over
     all members (the whole point of grouping)."""
@@ -130,17 +156,23 @@ def task_duration(task: Task, times: Sequence[MethodTimes],
         return times[task.layer].io_h
     if task.kind == "io_kv":
         return times[task.layer].io_kv
+    if task.kind == "io_enc":
+        return cross_times.io if cross_times else 0.0
     if task.kind == "recompute":
         return times[task.layer].c_token + dispatch_overhead
     if task.kind == "project":
         return (sum(times[li].c_h for li in task.members)
+                + dispatch_overhead)
+    if task.kind == "project_cross":
+        return ((cross_times.compute if cross_times else 0.0)
                 + dispatch_overhead)
     return 0.0                                 # blob reads: O(1) in tokens
 
 
 def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
            order: Optional[Sequence[int]] = None,
-           dispatch_overhead: float = 0.0):
+           dispatch_overhead: float = 0.0,
+           cross_times: Optional[CrossTimes] = None):
     """Two-stream virtual replay of ``tasks`` in ``order`` → Timeline.
 
     Each stream is serial; a compute task with deps starts no earlier
@@ -154,7 +186,7 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
     io_t = comp_t = io_busy = comp_busy = 0.0
     for idx in order:
         t = tasks[idx]
-        dur = task_duration(t, times, dispatch_overhead)
+        dur = task_duration(t, times, dispatch_overhead, cross_times)
         if t.stream == "io":
             io_t += dur
             io_busy += dur
@@ -167,6 +199,64 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
             comp_busy += dur
             done[idx] = comp_t
     return Timeline(max(io_t, comp_t), io_busy, comp_busy, io_t, comp_t)
+
+
+def _cross_times_at(cfg, hw, dtype_bytes: int,
+                    enc_len: int) -> Optional[CrossTimes]:
+    if not enc_len:
+        return None
+    tms = [method_times(c, hw)
+           for c in layer_costs(cfg, int(enc_len), dtype_bytes)]
+    return CrossTimes(io=tms[0].io_h, compute=sum(t.c_h for t in tms))
+
+
+def cross_restore_times(mgr, enc_len: int) -> Optional[CrossTimes]:
+    """CrossTimes for an enc-dec session with ``enc_len`` stored encoder
+    positions (None when unknown/zero — old manifests predate the
+    ``enc_len`` field and fall back to the paper's zero-cost blob
+    model). IO: one (S_enc, D) blob; compute: the K,V projection of
+    that blob for every decoder layer."""
+    return _cross_times_at(mgr.cfg, mgr.hw, mgr.dtype_bytes, enc_len)
+
+
+GROUP_SIZE_CANDIDATES = (1, 2, 4, 8)
+
+
+def choose_group_size(cfg, hw, n_tokens: int, methods: Sequence[str], *,
+                      dtype_bytes: int = 2, n_blobs: int = 0,
+                      cross: bool = False, enc_len: int = 0) -> int:
+    """Auto group-size planning (ROADMAP "restoration group-size
+    tuning", planning half): replay the grouped task graph over the
+    hardware profile for g ∈ {1, 2, 4, 8, L} and take the makespan
+    argmin — the same group-aware cost model the executor's timeline and
+    ``capacity.restore_makespan`` use, so the planner and the bake-off
+    metric cannot disagree. Ties prefer the larger group (equal modeled
+    makespan, strictly fewer real device dispatches).
+
+    The choice is computed at the ``s_bucket`` of ``n_tokens`` (and of
+    ``enc_len``), NOT the exact lengths: the compiled projection shape
+    is ``(G_pad, S_bucket, D)``, so every session in a bucket must pick
+    the same width or the auto knob would reintroduce the per-session
+    recompiles the bucketing exists to prevent (DESIGN.md §10)."""
+    n_hidden = sum(1 for m in methods if m == "hidden")
+    if n_hidden <= 1:
+        return 1
+    n_bucket = s_bucket(max(int(n_tokens), 1))
+    times = [method_times(c, hw)
+             for c in layer_costs(cfg, n_bucket, dtype_bytes)]
+    cross_times = (_cross_times_at(cfg, hw, dtype_bytes, s_bucket(enc_len))
+                   if cross and enc_len else None)
+    overhead = getattr(hw, "dispatch_overhead", 0.0)
+    cands = sorted({g for g in GROUP_SIZE_CANDIDATES if g < n_hidden}
+                   | {n_hidden})
+
+    def makespan(g):
+        tasks = compile_tasks(tuple(methods), n_blobs=n_blobs,
+                              group_size=g, cross=cross)
+        return replay(tasks, times, dispatch_overhead=overhead,
+                      cross_times=cross_times).makespan
+
+    return min(cands, key=lambda g: (makespan(g), -g))
 
 
 # ----------------------------------------------------- hidden-state codec
@@ -453,10 +543,20 @@ class RestorationExecutor:
         mgr.store.sync_clocks(0.0)
 
         kinds = mgr.cfg.block_kinds()
+        adapter = self.model.adapter
         self._attn_layers = [i for i, k in enumerate(kinds)
                              if k == BlockKind.ATTENTION]
         self._row_of = {li: r for r, li in enumerate(self._attn_layers)}
-        self.group_size = max(int(getattr(mgr, "restore_group_size", 1)), 1)
+        # enc-dec: cross restoration rides two dedicated tasks (io_enc +
+        # project_cross) whose durations scale with the stored encoder
+        # length; other families' state blobs stay zero-cost reads
+        self.has_cross = adapter.has_cross
+        self.enc_len = int(manifest.get("enc_len", 0))
+        self.cross_times = (cross_restore_times(mgr, self.enc_len)
+                            if self.has_cross else None)
+        gs = mgr.resolve_group_size(self.n_tokens, self.methods,
+                                    enc_len=self.enc_len)
+        self.group_size = max(int(gs), 1)
         self.pack: Optional[RestoreParamPack] = mgr.param_pack(params)
         # stable padded group width: every group in this restore uploads
         # and projects the same (G_pad, S_bucket, D) shape, so a run
@@ -465,9 +565,10 @@ class RestorationExecutor:
                             if m == "hidden" and i in self._row_of)
         self._g_pad = min(self.group_size, max(n_attn_hidden, 1))
         self.dispatch_overhead = getattr(mgr.hw, "dispatch_overhead", 0.0)
-        n_blobs = self._count_blobs()
-        self.tasks = compile_tasks(self.methods, n_blobs=n_blobs,
-                                   group_size=self.group_size)
+        self.tasks = compile_tasks(self.methods,
+                                   n_blobs=adapter.n_state_blobs,
+                                   group_size=self.group_size,
+                                   cross=self.has_cross)
         self.times = [method_times(c, mgr.hw)
                       for c in layer_costs(mgr.cfg, self.n_tokens,
                                            mgr.dtype_bytes)]
@@ -499,16 +600,9 @@ class RestorationExecutor:
         self.wall_time = 0.0
         self.project_wall = 0.0
         self.dispatch_count = 0
+        self._enc_out: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------- plumbing
-    def _count_blobs(self) -> int:
-        kind = self.model.kind
-        if kind in ("ssm", "hybrid"):
-            return 1                            # conv+ssm state blobs
-        if kind == "encdec":
-            return 1                            # encoder output blob
-        return 0
-
     @property
     def done(self) -> bool:
         return all(self._done)
@@ -530,7 +624,8 @@ class RestorationExecutor:
         order = self.executed + [i for i in range(len(self.tasks))
                                  if not self._done[i]]
         return replay(self.tasks, self.times, order,
-                      dispatch_overhead=self.dispatch_overhead)
+                      dispatch_overhead=self.dispatch_overhead,
+                      cross_times=self.cross_times)
 
     # ------------------------------------------------------------ stepping
     def _ready(self, idx: int) -> bool:
@@ -585,7 +680,8 @@ class RestorationExecutor:
     # ---------------------------------------------------------- task bodies
     def _run_task(self, idx: int) -> None:
         t = self.tasks[idx]
-        dur = task_duration(t, self.times, self.dispatch_overhead)
+        dur = task_duration(t, self.times, self.dispatch_overhead,
+                            self.cross_times)
         if t.stream == "io":
             self._io_queue.remove(idx)
             self._io_clock += dur
@@ -694,13 +790,22 @@ class RestorationExecutor:
 
     def _exec_blob(self, t: Task) -> None:
         store, sess = self.mgr.store, self.session
-        kind = self.model.kind
-        if kind in ("ssm", "hybrid"):
-            conv = jnp.asarray(store.get_blob(sess, "state_conv", 0))
-            ssm = jnp.asarray(store.get_blob(sess, "state_ssm", 0))
-            self._emit("put_states", conv, ssm)
-        elif kind == "encdec":
-            from repro.models import encdec as encdec_mod
-            enc_out = jnp.asarray(store.get_blob(sess, "enc", 0))[None]
-            ck, cv = encdec_mod.cross_kv(self.params, enc_out, self.model.h)
-            self._emit("put_cross", ck, cv, enc_out.shape[1])
+        conv = jnp.asarray(store.get_blob(sess, "state_conv", 0))
+        ssm = jnp.asarray(store.get_blob(sess, "state_ssm", 0))
+        self._emit("put_states", conv, ssm)
+
+    def _exec_io_enc(self, t: Task) -> None:
+        # blob reads have no striped/async API (unlike read_layer_async),
+        # so this is a synchronous host read charged only on the virtual
+        # clock (CrossTimes.io) and excluded from io_measured; a
+        # chunked/async encoder-blob path is future work
+        self._enc_out = np.asarray(
+            self.mgr.store.get_blob(self.session, "enc", 0))
+
+    def _exec_project_cross(self, t: Task) -> None:
+        from repro.models import encdec as encdec_mod
+        enc_out = jnp.asarray(self._enc_out)[None]
+        self._enc_out = None
+        ck, cv = encdec_mod.cross_kv(self.params, enc_out, self.model.h)
+        self.dispatch_count += 2             # upload+projection, sink write
+        self._emit("put_cross", ck, cv, enc_out.shape[1])

@@ -61,10 +61,18 @@ def main() -> None:
     p.add_argument("--admission-aging", type=float, default=0.0,
                    help="restore_cost admission: seconds of makespan "
                         "credit per queued engine step (anti-starvation)")
-    p.add_argument("--restore-group-size", type=int, default=8,
+    p.add_argument("--restore-group-size", default="8",
                    help="projection layers per stacked restoration "
-                        "dispatch (1 = per-layer; see DESIGN.md §10)")
+                        "dispatch (1 = per-layer; see DESIGN.md §10), or "
+                        "'auto' to pick the restore_makespan argmin over "
+                        "{1, 2, 4, 8, L} per restore")
+    p.add_argument("--enc-seq", type=int, default=None,
+                   help="enc-dec models: encoder positions per slot in "
+                        "the paired self/cross cache (default max-seq)")
     args = p.parse_args()
+    group_size = (args.restore_group_size
+                  if args.restore_group_size == "auto"
+                  else int(args.restore_group_size))
 
     mesh = make_mesh((1, 1), ("data", "model"))
     rules = default_rules(mesh)
@@ -78,7 +86,7 @@ def main() -> None:
     store = ChunkStore(make_array("ssd", args.ssds), chunk_tokens=64,
                        cold_devices=cold)
     mgr = HCacheManager(model, store, hw=PROFILES[args.profile],
-                        restore_group_size=args.restore_group_size)
+                        restore_group_size=group_size)
     capacity = (CapacityManager(mgr, host_budget_bytes=args.budget_kb * 1024)
                 if args.budget_kb else None)
     admission = (RestoreCostAwareAdmission(aging=args.admission_aging)
@@ -92,15 +100,22 @@ def main() -> None:
                              capacity=capacity,
                              backend=args.backend,
                              block_size=args.block_size,
-                             cache_blocks=args.cache_blocks)
+                             cache_blocks=args.cache_blocks,
+                             enc_seq=args.enc_seq)
 
     rng = np.random.default_rng(0)
     for rnd in range(args.rounds):
         for s in range(args.sessions):
             prompt = rng.integers(0, cfg.vocab_size,
                                   args.prompt_len).astype(np.int32)
+            # enc-dec sessions carry encoder frames on round 0 only —
+            # later rounds restore the cross context from the store
+            frames = None
+            if model.kind == "encdec" and rnd == 0:
+                frames = rng.standard_normal(
+                    (args.prompt_len, cfg.d_model)).astype(np.float32) * 0.1
             engine.submit(Request(f"user{s}", prompt,
-                                  max_new_tokens=args.gen))
+                                  max_new_tokens=args.gen, frames=frames))
         engine.run()
         for s in range(args.sessions):
             seq = engine.sessions[f"user{s}"]

@@ -140,16 +140,28 @@ def cross_kv(params, enc_out, h: EncDecHyper):
 # ------------------------------------------------------------------ decoder
 def _dec_block(bp, x, h: EncDecHyper, *, positions, ck, cv, enc_len,
                self_kv_mode, k_cache=None, v_cache=None, lengths=None,
-               emit_kv=False):
-    """One decoder block; self_kv_mode in {"full", "step"}."""
+               emit_kv=False, hist_k=None, hist_v=None, hist_len=None):
+    """One decoder block; self_kv_mode in {"full", "step"}.
+
+    ``hist_k``/``hist_v`` (B, hist_len, H, hd): restored self-attention
+    history prepended to the chunk's KV — resume / round-N prefill after
+    an HCache restoration (``positions`` must then be absolute, offset by
+    ``hist_len``)."""
     c = h.cfg
     hidden_in = x
     normed = apply_norm(bp["ln1"], x, c.norm, c.norm_eps)
     q, k, v = attn_lib.project_qkv(bp["self_attn"], normed, h.attn, h.rules,
                                    positions)
     if self_kv_mode == "full":
-        a = attn_lib.flash_attention_jnp(q, k, v, h.attn,
-                                         q_positions=positions, causal=True)
+        if hist_k is not None:
+            k_all = jnp.concatenate([hist_k.astype(k.dtype), k], axis=1)
+            v_all = jnp.concatenate([hist_v.astype(v.dtype), v], axis=1)
+            kv_len = hist_len + x.shape[1]
+        else:
+            k_all, v_all, kv_len = k, v, None
+        a = attn_lib.flash_attention_jnp(q, k_all, v_all, h.attn,
+                                         q_positions=positions, causal=True,
+                                         kv_len=kv_len)
         new_k, new_v = k, v
     else:
         B = x.shape[0]
@@ -179,26 +191,50 @@ def _dec_block(bp, x, h: EncDecHyper, *, positions, ck, cv, enc_len,
 def decode_prefill(params, tokens, enc_out, h: EncDecHyper, *,
                    capture_hidden: bool = False, emit_kv: bool = False,
                    final_logits_only: bool = False,
-                   skip_logits: bool = False):
-    """Teacher-forced / prefill decoder pass over (B, S_dec) tokens."""
+                   skip_logits: bool = False,
+                   hist_kv=None, hist_len=None, cross=None,
+                   pos_offset: int = 0):
+    """Teacher-forced / prefill decoder pass over (B, S_dec) tokens.
+
+    Resume path (HCache, serving engine): ``hist_kv`` — stacked restored
+    self-KV history (L, B, hist_len, H, hd) ×2 the chunk attends over;
+    ``cross`` — precomputed stacked cross KV (L, B, S_enc, H, hd) ×2 from
+    the slot's view, replacing the ``enc_out`` projection (``enc_out``
+    may then be None); ``pos_offset`` — the chunk's absolute start
+    position (= hist_len), so learned positions and the causal mask line
+    up with the restored prefix."""
     c = h.cfg
     B, S = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    positions = jnp.broadcast_to(pos_offset + jnp.arange(S)[None, :], (B, S))
     x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
                      d_model=c.d_model)
     x = x + positional(params["embed"], positions).astype(x.dtype)
     x = x.astype(h.dtype)
-    ckv = cross_kv(params, enc_out, h)
+    ckv = cross if cross is not None else cross_kv(params, enc_out, h)
 
-    def body(x, xs):
-        bp, (ck, cv) = xs
-        x, kv, hidden = _dec_block(bp, x, h, positions=positions, ck=ck,
-                                   cv=cv, enc_len=None, self_kv_mode="full",
-                                   emit_kv=emit_kv)
-        return x, (kv, hidden if capture_hidden else None)
+    if hist_kv is not None:
+        def body(x, xs):
+            bp, (ck, cv), hk, hv = xs
+            x, kv, hidden = _dec_block(bp, x, h, positions=positions, ck=ck,
+                                       cv=cv, enc_len=None,
+                                       self_kv_mode="full", emit_kv=emit_kv,
+                                       hist_k=hk, hist_v=hv,
+                                       hist_len=hist_len)
+            return x, (kv, hidden if capture_hidden else None)
+
+        xs = (params["dec_blocks"], ckv, hist_kv[0], hist_kv[1])
+    else:
+        def body(x, xs):
+            bp, (ck, cv) = xs
+            x, kv, hidden = _dec_block(bp, x, h, positions=positions, ck=ck,
+                                       cv=cv, enc_len=None,
+                                       self_kv_mode="full", emit_kv=emit_kv)
+            return x, (kv, hidden if capture_hidden else None)
+
+        xs = (params["dec_blocks"], ckv)
 
     body = tfm._remat_wrap(body, _lm_view(h))
-    x, (kv, hidden) = jax.lax.scan(body, x, (params["dec_blocks"], ckv))
+    x, (kv, hidden) = jax.lax.scan(body, x, xs)
     x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
     if final_logits_only:
         x = x[:, -1:]

@@ -1,8 +1,9 @@
 """Unified model facade.
 
 One `Model` object per architecture dispatches to the family implementation
-(transformer / ssm / hybrid / encdec) behind a uniform API used by the
-serving engine, the trainer, and the multi-pod dry-run:
+(transformer / ssm / hybrid / encdec) through its ``FamilyAdapter``
+(models/adapter.py) behind a uniform API used by the serving engine, the
+trainer, and the multi-pod dry-run:
 
     init(rng)                          -> boxed params
     forward(params, batch)             -> train-path logits dict
@@ -11,6 +12,11 @@ serving engine, the trainer, and the multi-pod dry-run:
     restore_cache(params, saved, ...)  -> HCache restoration (per family)
     *_inputs(shape)                    -> ShapeDtypeStruct trees + logical
                                           sharding specs for the dry-run
+
+The compute methods are thin delegations to ``self.adapter`` — per-family
+branching lives there (one class per family), not in ``if kind`` chains
+here or in the serving engine (DESIGN.md §11). The dry-run shape/sharding
+declarations below stay inline: they are static specs, not dispatch.
 
 Whisper uses a fixed decoder prompt length (DEC_PROMPT) / training target
 length (DEC_TRAIN); InternVL2 reserves the first ``n_vis`` positions of the
@@ -28,6 +34,7 @@ from repro.config.arch import ArchConfig
 from repro.config.shapes import InputShape
 from repro.distributed.sharding import ShardingRules
 from repro.models import encdec, hybrid, ssm as ssm_mod, transformer as tfm
+from repro.models.adapter import make_adapter
 from repro.models.module import split
 
 DEC_PROMPT = 128      # whisper decoder prompt length in prefill cells
@@ -78,16 +85,11 @@ class Model:
                 tri_prefill=self.tri_prefill,
                 moe_late_combine=self.moe_late_combine)
             self.kind = "lm"
+        self.adapter = make_adapter(self)
 
     # ----------------------------------------------------------------- init
     def init(self, rng):
-        if self.kind == "encdec":
-            return encdec.init_encdec(rng, self.h)
-        if self.kind == "ssm":
-            return ssm_mod.init_ssm_lm(rng, self.h)
-        if self.kind == "hybrid":
-            return hybrid.init_hybrid(rng, self.h)
-        return tfm.init_lm(rng, self.h)
+        return self.adapter.init(rng)
 
     def abstract_params(self, rng=None):
         """(ShapeDtypeStruct values tree, logical axes tree) — no alloc."""
@@ -100,48 +102,14 @@ class Model:
                 skip_logits: bool = False) -> Dict[str, Any]:
         """Training-path forward -> dict with 'logits' (B,S,V) + 'aux'
         (or 'final_x' (B,S,D) when skip_logits — chunked-CE training)."""
-        if self.kind == "encdec":
-            enc_out, _ = encdec.encode(params, batch["frames"], self.h)
-            return encdec.decode_prefill(params, batch["tokens"], enc_out,
-                                         self.h, skip_logits=skip_logits)
-        if self.kind == "ssm":
-            return ssm_mod.ssm_forward(params, batch["tokens"], self.h,
-                                       skip_logits=skip_logits)
-        if self.kind == "hybrid":
-            return hybrid.hybrid_forward(params, batch["tokens"], self.h,
-                                         skip_logits=skip_logits)
-        return tfm.lm_forward(params, batch["tokens"], self.h,
-                              patch_embeds=batch.get("patches"),
-                              skip_logits=skip_logits)
+        return self.adapter.forward(params, batch, skip_logits=skip_logits)
 
     # -------------------------------------------------------------- prefill
     def prefill(self, params, batch, *, capture_hidden=False,
                 hist_kv=None, hist_len=None):
-        if self.kind == "encdec":
-            enc_out, enc_hidden = encdec.encode(params, batch["frames"],
-                                                self.h,
-                                                capture_hidden=capture_hidden)
-            out = encdec.decode_prefill(params, batch["tokens"], enc_out,
-                                        self.h, capture_hidden=capture_hidden,
-                                        emit_kv=True, final_logits_only=True)
-            out["enc_out"] = enc_out
-            out["enc_hidden"] = enc_hidden
-            return out
-        if self.kind == "ssm":
-            return ssm_mod.ssm_forward(params, batch["tokens"], self.h,
-                                       capture_hidden=capture_hidden,
-                                       emit_state=True,
-                                       final_logits_only=True)
-        if self.kind == "hybrid":
-            return hybrid.hybrid_forward(params, batch["tokens"], self.h,
-                                         capture_hidden=capture_hidden,
-                                         emit_state=True,
-                                         final_logits_only=True)
-        return tfm.lm_forward(params, batch["tokens"], self.h,
-                              patch_embeds=batch.get("patches"),
-                              hist_kv=hist_kv, hist_len=hist_len,
-                              capture_hidden=capture_hidden, emit_kv=True,
-                              final_logits_only=True)
+        return self.adapter.prefill(params, batch,
+                                    capture_hidden=capture_hidden,
+                                    hist_kv=hist_kv, hist_len=hist_len)
 
     # --------------------------------------------------------------- decode
     def decode_step(self, params, cache, tokens):
@@ -150,44 +118,21 @@ class Model:
 
     def decode_step_full(self, params, cache, tokens):
         """(logits, cache, per-layer hidden states) — HCache save path."""
-        if self.kind == "encdec":
-            return encdec.decode_step(params, cache, tokens, self.h)
-        if self.kind == "ssm":
-            return ssm_mod.ssm_decode_step(params, cache, tokens, self.h)
-        if self.kind == "hybrid":
-            return hybrid.hybrid_decode_step(params, cache, tokens, self.h)
-        return tfm.lm_decode_step(params, cache, tokens, self.h)
+        return self.adapter.decode_step_full(params, cache, tokens)
 
     def decode_step_paged(self, params, cache, tokens):
         """Decode step over a block-table paged cache (serving engine's
         'paged' KVCacheBackend; see serving/kv_cache.py)."""
-        if self.kind != "lm":
-            raise NotImplementedError(
-                f"paged decode requires an lm-family model; "
-                f"{self.cfg.name} is {self.kind!r}")
-        return tfm.lm_decode_step_paged(params, cache, tokens, self.h)
+        return self.adapter.decode_step_paged(params, cache, tokens)
 
     # ------------------------------------------------------------ HCache op
     def restore_kv_from_hidden(self, params, hidden, *, positions):
         """The paper's restoration GEMM (families with attention)."""
-        if self.kind == "lm":
-            return tfm.lm_restore_kv(params, hidden, self.h,
-                                     positions=positions)
-        if self.kind == "hybrid":
-            return hybrid.hybrid_restore_attn_kv(params, hidden, self.h,
-                                                 positions=positions)
-        if self.kind == "encdec":
-            return encdec.restore_self_kv(params, hidden, self.h,
-                                          positions=positions)
-        raise ValueError(f"{self.cfg.name}: attention-free arch; use "
-                         "restore_ssm_states (ssm-rescan)")
+        return self.adapter.restore_kv_from_hidden(params, hidden,
+                                                   positions=positions)
 
     def restore_ssm_states(self, params, hidden):
-        if self.kind == "ssm":
-            return ssm_mod.ssm_restore_states(params, hidden, self.h)
-        if self.kind == "hybrid":
-            return hybrid.hybrid_restore_mamba_states(params, hidden, self.h)
-        raise ValueError(f"{self.cfg.name}: no SSM states")
+        return self.adapter.restore_ssm_states(params, hidden)
 
     # ====================================================== dry-run input specs
     def _tok(self, b, s):
@@ -314,7 +259,7 @@ class Model:
         k_pool/v_pool: (L, num_blocks, block_size, Kv, hd) physical
         pages; block_table: (batch, max_blocks_per_seq) int32 with
         ``num_blocks`` as the unallocated sentinel; lengths: (batch,)."""
-        if self.kind != "lm":
+        if not self.adapter.supports_paged:
             raise NotImplementedError(
                 f"paged KV cache requires an lm-family model; "
                 f"{self.cfg.name} is {self.kind!r}")

@@ -1,12 +1,12 @@
 from repro.serving.engine import EngineMetrics, InferenceEngine
 from repro.serving.kv_cache import (BACKENDS, BlockAllocator, CacheView,
-                                    ContiguousBackend, KVCacheBackend,
-                                    OccupancyStats, PagedBackend, ViewSink,
-                                    make_backend)
+                                    ContiguousBackend, EncDecBackend,
+                                    KVCacheBackend, OccupancyStats,
+                                    PagedBackend, ViewSink, make_backend)
 from repro.serving.request import Phase, Request, SequenceState
 from repro.serving.sampling import sample
 
 __all__ = ["BACKENDS", "BlockAllocator", "CacheView", "ContiguousBackend",
-           "EngineMetrics", "InferenceEngine", "KVCacheBackend",
-           "OccupancyStats", "PagedBackend", "Phase", "Request",
-           "SequenceState", "ViewSink", "make_backend", "sample"]
+           "EncDecBackend", "EngineMetrics", "InferenceEngine",
+           "KVCacheBackend", "OccupancyStats", "PagedBackend", "Phase",
+           "Request", "SequenceState", "ViewSink", "make_backend", "sample"]

@@ -33,12 +33,15 @@ Request lifecycle (paper §5, DESIGN.md §6/§8):
                              is freed — the session remains restorable.
 
 Cache state lives behind a ``KVCacheBackend`` (serving/kv_cache.py,
-DESIGN.md §9): the classic ``contiguous`` layout (max_seq positions per
-slot) or the block-table ``paged`` layout, where admission reserves only
-the pages a session can actually use — a full page pool, not a full slot
-table, is what back-pressures the queue. The engine touches cache state
-exclusively through per-slot ``CacheView`` handles (restore writes,
-history gathers, pause/retire snapshots, frees).
+DESIGN.md §9/§11): the classic ``contiguous`` layout (max_seq positions
+per slot), the block-table ``paged`` layout — where admission reserves
+only the pages a session can actually use, so a full page pool, not a
+full slot table, is what back-pressures the queue — or the paired
+self/cross ``encdec`` layout for whisper-family models. The engine
+touches cache state exclusively through per-slot ``CacheView`` handles
+(restore writes, history gathers, pause/retire snapshots, frees), and
+every family-specific decision goes through the ``FamilyAdapter`` seam
+(models/adapter.py) — this module contains no per-family branching.
 
 Admission is pluggable (FIFO / restore-cost-aware / priority — see
 core/capacity.py), as is victim selection (LRU / restore-cost-weighted).
@@ -133,8 +136,13 @@ class InferenceEngine:
                  capacity: Optional[CapacityManager] = None,
                  backend: Union[str, KVCacheBackend] = "contiguous",
                  block_size: int = 16,
-                 cache_blocks: Optional[int] = None):
+                 cache_blocks: Optional[int] = None,
+                 enc_seq: Optional[int] = None):
         self.model = model
+        # every family-specific decision (prefill chunk policy, output->
+        # cache mapping, resume support, save naming) goes through the
+        # FamilyAdapter seam — the engine itself is family-agnostic
+        self.adapter = model.adapter
         self.params = params
         self.mgr = manager
         self.max_batch = max_batch
@@ -157,7 +165,7 @@ class InferenceEngine:
         # tables) lives behind the backend; the engine only holds views
         self.kv = make_backend(backend, model, max_batch, max_seq,
                                block_size=block_size,
-                               num_blocks=cache_blocks)
+                               num_blocks=cache_blocks, enc_seq=enc_seq)
         self.queue: deque = deque()
         self.slots: List[Optional[SequenceState]] = [None] * max_batch
         self.sessions: Dict[str, SequenceState] = {}
@@ -261,11 +269,11 @@ class InferenceEngine:
         pause a resident DECODE session past its quantum, hand its slot
         to the admission policy's next pick. The victim re-enters through
         the RESTORING pipeline."""
-        # lm-only: the resume feed replays through Model.prefill with
-        # hist_kv, which only attention-history models support — an
-        # ssm/hybrid resume would restart its recurrent states from zero
+        # resume replays the last sampled token through a prefill over
+        # restored state — families without that path (ssm/hybrid, whose
+        # recurrent states would restart from zero) are not preemptable
         if (self.preempt_quantum is None or not self.save_hidden
-                or self.model.kind != "lm" or not self.queue):
+                or not self.adapter.supports_resume or not self.queue):
             return
         if self._free_slot() is not None:
             # a slot is open, so preemption is only justified when the
@@ -361,34 +369,31 @@ class InferenceEngine:
 
     # -------------------------------------------------------------- prefill
     def _prefill_step(self, seq: SequenceState) -> None:
-        """Process up to ``prefill_chunk`` prompt tokens (SplitFuse).
+        """Process up to ``prefill_chunk`` prompt tokens (SplitFuse;
+        families whose adapter is not ``chunkable`` — recurrent-state and
+        enc-dec stacks — take the whole prompt in one step).
 
         After a mid-stream eviction the "prompt" is the resume feed
         (``effective_prompt``): the last sampled token, whose KV is
         recreated here on top of the restored [0, n) range."""
         if seq.phase != Phase.PREFILL:
             return
+        ad = self.adapter
         prompt = seq.effective_prompt
         remaining = prompt[seq.prefill_done:]
         if len(remaining) == 0:
             seq.phase = Phase.DECODE
             return
-        chunkable = (self.model.kind == "lm")
-        chunk = remaining[:self.prefill_chunk] if chunkable else remaining
+        chunk = remaining[:self.prefill_chunk] if ad.chunkable else remaining
         hist = seq.history_len + seq.prefill_done
-        batch = {"tokens": jnp.asarray(chunk, jnp.int32)[None]}
-        if self.model.kind == "encdec":
-            raise NotImplementedError(
-                "the continuous-batching engine serves LM-family models; "
-                "enc-dec (whisper) serving uses Model.prefill/decode_step "
-                "directly (see tests/test_models.py::"
-                "test_decode_matches_forward[whisper-medium])")
-        hist_kv = (seq.view.gather_hist(hist)
-                   if (chunkable and hist) else None)
-        out = self.model.prefill(
-            self.params, batch, capture_hidden=self.save_hidden,
-            hist_kv=hist_kv, hist_len=hist if hist_kv is not None else None)
-        self._absorb_prefill(seq, out, chunk, hist)
+        out = ad.prefill_chunk(self.params, seq, chunk, hist,
+                               capture_hidden=self.save_hidden)
+        ad.absorb_prefill(seq.view, out, len(chunk), hist)
+        seq.view.set_length(hist + len(chunk))
+        if self.save_hidden:
+            sid = seq.request.session_id
+            self.mgr.save_prefill(sid, np.asarray(chunk), out, start=hist)
+            self._after_save(sid)
         seq.prefill_done += len(chunk)
         if seq.pending_from_gen and self.save_hidden:
             seq.tok_saved += len(chunk)   # resume feed landed in tok blob
@@ -397,26 +402,6 @@ class InferenceEngine:
             lg = out["logits"]
             tok = int(sample(lg, temperature=self.temperature)[0])
             self._emit_token(seq, tok)
-
-    def _absorb_prefill(self, seq, out, chunk, hist) -> None:
-        """Write prefill KV/states into the slot's view + persist."""
-        n = len(chunk)
-        if self.model.kind == "lm":
-            k, v = out["kv"]
-            seq.view.write_kv(k, v, hist)
-        elif self.model.kind == "hybrid":
-            k, v = out["kv"]
-            seq.view.write_kv(k, v, hist)
-            conv, ssmst = out["mamba_states"]
-            seq.view.write_states({"conv": conv, "ssm": ssmst})
-        elif self.model.kind == "ssm":
-            conv, ssmst = out["states"]
-            seq.view.write_states({"conv": conv, "ssm": ssmst})
-        seq.view.set_length(hist + n)
-        if self.save_hidden:
-            sid = seq.request.session_id
-            self.mgr.save_prefill(sid, np.asarray(chunk), out, start=hist)
-            self._after_save(sid)
 
     # --------------------------------------------------------------- decode
     def _emit_token(self, seq: SequenceState, tok: int) -> None:
@@ -460,7 +445,7 @@ class InferenceEngine:
             sess = [s.request.session_id if (s is not None
                     and s.slot in active_slots) else None
                     for s in self.slots]
-            h = hidden if not isinstance(hidden, tuple) else hidden[1]
+            h = self.adapter.decode_hidden(hidden)
             self.metrics.snapshot_cost += self.mgr.save_decode_hidden(
                 sess, np.asarray(h), lengths - 1)
         dt = time.perf_counter() - t0
@@ -514,14 +499,23 @@ class InferenceEngine:
         self._admit()
         self._maybe_preempt()
         self._restore_step()
+        prefilled = False
         for s in list(self.slots):
             if s is not None and s.phase == Phase.PREFILL:
                 self._prefill_step(s)
+                prefilled = True
+        decoded_before = self.metrics.decode_steps
         self._decode_batch()
         self._sample_occupancy()
         self._retire()
         if self.capacity is not None:
             self.capacity.maintain(self)
+            if not prefilled and self.metrics.decode_steps == decoded_before:
+                # idle step (nothing prefilled or decoded — at most
+                # restores ticked): run the anti-entropy promotion sweep
+                # so demoted-but-idle sessions recover fp16 fidelity
+                # without waiting for their next save
+                self.capacity.sweep_promotions()
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

@@ -5,12 +5,21 @@ in a ``KVCacheBackend``:
 
   * ``ContiguousBackend`` — the classic layout: every batch slot owns
     ``max_seq`` contiguous positions of a stacked ``(L, B, Smax, Kv, hd)``
-    buffer (all model families: lm / ssm / hybrid / encdec).
+    buffer (decoder-only families: lm / ssm / hybrid).
   * ``PagedBackend``     — vLLM-style block tables over a physical page
     pool ``(L, num_blocks, block_size, Kv, hd)`` plus a ``BlockAllocator``
     free list. A slot reserves only the pages its session can actually
     use, so occupancy — not ``max_batch × max_seq`` — caps concurrency.
     LM family only (block tables have no SSM-state analog).
+  * ``EncDecBackend``    — paired layout for enc-dec (whisper) models
+    (DESIGN.md §11): a growing decoder self-KV region per slot (the
+    contiguous machinery, keyed ``self_k``/``self_v``) PAIRED with
+    whole-object per-slot cross state — ``cross_k``/``cross_v``
+    ``(L, B, S_enc, H, hd)`` and a per-slot ``enc_len`` (B,) vector (the
+    seed's scalar ``enc_len`` cannot batch sessions with different
+    encoder lengths). Reservation/occupancy accounting is the
+    contiguous slot model over decoder positions, so admission,
+    back-pressure and PAUSED eviction work unchanged.
 
 Consumers all go through a slot-bound ``CacheView`` handle:
 
@@ -43,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.restoration import RestoreSink
+from repro.core.restoration import RestoreSink, s_bucket
 from repro.models.model import Model
 
 
@@ -125,6 +134,11 @@ class CacheView:
         """Restored-history KV, stacked (L, 1, hist, Kv, hd) pair."""
         raise NotImplementedError
 
+    def cross_state(self):
+        """Enc-dec only: the slot's live cross context — (cross_k,
+        cross_v) stacked (L, 1, enc_len, H, hd) plus enc_len."""
+        raise NotImplementedError
+
     def snapshot(self) -> dict:
         """B=1 restorable dict (what ``save_session_pause`` dumps); KV
         buffers cover at least the slot's live length."""
@@ -203,11 +217,6 @@ class KVCacheBackend:
         raise NotImplementedError
 
 
-def _kv_names(kind: str):
-    return {"lm": ("k", "v"), "hybrid": ("attn_k", "attn_v"),
-            "encdec": ("self_k", "self_v")}.get(kind)
-
-
 # ------------------------------------------------------------- contiguous
 class _ContiguousView(CacheView):
     def __init__(self, backend: "ContiguousBackend", slot: int):
@@ -216,7 +225,7 @@ class _ContiguousView(CacheView):
 
     def write_layer(self, row, k, v):
         b = self.b
-        k_name, v_name = _kv_names(b.model.kind)
+        k_name, v_name = b.model.adapter.kv_names
         row = jnp.asarray(row)              # traced: no recompile per row
         slot = jnp.asarray(self.slot)
         for name, val in ((k_name, k), (v_name, v)):
@@ -226,7 +235,7 @@ class _ContiguousView(CacheView):
 
     def write_layer_group(self, rows, k, v):
         b = self.b
-        k_name, v_name = _kv_names(b.model.kind)
+        k_name, v_name = b.model.adapter.kv_names
         kbuf, vbuf = b.cache[k_name], b.cache[v_name]
         b.cache[k_name], b.cache[v_name] = b._group_update(
             kbuf, vbuf,
@@ -237,32 +246,28 @@ class _ContiguousView(CacheView):
 
     def write_kv(self, k, v, start):
         b = self.b
-        k_name, v_name = _kv_names(b.model.kind)
+        k_name, v_name = b.model.adapter.kv_names
         for name, val in ((k_name, k), (v_name, v)):
             b.cache[name] = jax.lax.dynamic_update_slice(
                 b.cache[name], val.astype(b.cache[name].dtype),
                 (0, self.slot, start, 0, 0))
 
     def write_states(self, piece):
+        # conv/ssm recurrent states only — enc-dec cross state lives in
+        # _EncDecView (this backend is decoder-only: lm / ssm / hybrid)
         b, slot = self.b, self.slot
         for key, val in piece.items():
             buf = b.cache.get(key)
-            if buf is None:
+            if buf is None or key not in ("conv", "ssm"):
                 continue
             val = jnp.asarray(val, buf.dtype)
-            if key in ("conv", "ssm"):
-                bdim = buf.ndim - val.ndim + 1  # batch dim position
-                b.cache[key] = jax.lax.dynamic_update_slice(
-                    buf, val, (0,) * (bdim - 1) + (slot,)
-                    + (0,) * (buf.ndim - bdim))
-            elif key in ("cross_k", "cross_v"):
-                b.cache[key] = jax.lax.dynamic_update_slice(
-                    buf, val, (0, slot, 0, 0, 0))
-            elif key == "enc_len":
-                b.cache[key] = val
+            bdim = buf.ndim - val.ndim + 1  # batch dim position
+            b.cache[key] = jax.lax.dynamic_update_slice(
+                buf, val, (0,) * (bdim - 1) + (slot,)
+                + (0,) * (buf.ndim - bdim))
 
     def gather_hist(self, hist):
-        k_name, v_name = _kv_names(self.b.model.kind)
+        k_name, v_name = self.b.model.adapter.kv_names
         i = self.slot
         return (self.b.cache[k_name][:, i:i + 1, :hist],
                 self.b.cache[v_name][:, i:i + 1, :hist])
@@ -296,7 +301,7 @@ class ContiguousBackend(KVCacheBackend):
         self.model = model
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.cache = model.init_cache(max_batch, max_seq)
+        self.cache = self._make_cache()
         self._reserved = [0] * max_batch
         self._decode_fn = jax.jit(model.decode_step_full)
         # donated so XLA updates the stacked KV buffer in place — a
@@ -314,6 +319,9 @@ class ContiguousBackend(KVCacheBackend):
             (kbuf.at[rows, slot, :kval.shape[1]].set(kval),
              vbuf.at[rows, slot, :vval.shape[1]].set(vval)),
             donate_argnums=(0, 1))
+
+    def _make_cache(self):
+        return self.model.init_cache(self.max_batch, self.max_seq)
 
     def _slot_state(self, buf, slot):
         """Extract the batch=1 slice of a (…, B, …) state tensor."""
@@ -357,6 +365,111 @@ class ContiguousBackend(KVCacheBackend):
         free_slots = sum(1 for r in self._reserved if not r)
         return OccupancyStats(live, reserved, self.max_batch * self.max_seq,
                               free_slots)
+
+
+# ----------------------------------------------------------------- encdec
+class _EncDecView(_ContiguousView):
+    """Self-KV writes/gathers ride the contiguous machinery (keys
+    ``self_k``/``self_v`` via the adapter); cross state is per-slot."""
+
+    def write_states(self, piece):
+        b, slot = self.b, self.slot
+        for key, val in piece.items():
+            if key in ("cross_k", "cross_v"):
+                buf = b.cache[key]
+                val = jnp.asarray(val, buf.dtype)
+                n = val.shape[2]
+                if n > b.enc_seq:
+                    # admission gates count decoder positions only — an
+                    # oversized encoder context must fail loudly here,
+                    # not as an opaque shape error inside the update
+                    raise ValueError(
+                        f"encoder context of {n} frames "
+                        f"exceeds the backend's enc_seq={b.enc_seq}; "
+                        f"raise --enc-seq (or InferenceEngine(enc_seq=))")
+                # pad the encoder dim to its power-of-two bucket (same
+                # rule as the restoration projections) so varied audio
+                # lengths share one compiled donated update; the zero
+                # tail sits beyond enc_len and is masked everywhere
+                cap = min(s_bucket(max(n, 1)), b.enc_seq)
+                if cap > n:
+                    val = jnp.pad(val, ((0, 0), (0, 0), (0, cap - n),
+                                        (0, 0), (0, 0)))
+                b.cache[key] = b._cross_update(buf, val,
+                                               jnp.asarray(slot))
+            elif key == "enc_len":
+                n = int(val)
+                b.cache["enc_len"] = b.cache["enc_len"].at[slot].set(n)
+                b.enc_len_np[slot] = n
+
+    def cross_state(self):
+        b, i = self.b, self.slot
+        n = int(b.enc_len_np[i])
+        return (b.cache["cross_k"][:, i:i + 1, :n],
+                b.cache["cross_v"][:, i:i + 1, :n], n)
+
+    def snapshot(self):
+        # self-KV only: the cross context restores from the session's
+        # persisted encoder blob ('enc'), saved at first prefill — a
+        # pause never has to dump the (large) cross buffers
+        b, i = self.b, self.slot
+        return {"self_k": b.cache["self_k"][:, i:i + 1],
+                "self_v": b.cache["self_v"][:, i:i + 1]}
+
+    def free(self):
+        b, i = self.b, self.slot
+        b.enc_len_np[i] = 0
+        b.cache["enc_len"] = b.cache["enc_len"].at[i].set(0)
+        super().free()
+
+
+class EncDecBackend(ContiguousBackend):
+    """Paired self/cross cache for enc-dec models (DESIGN.md §11).
+
+    The decoder self-KV region is the contiguous layout over ``max_seq``
+    decoder positions per slot. The cross context is whole-object
+    per-slot state: ``cross_k``/``cross_v`` hold up to ``enc_seq``
+    encoder positions, with a per-slot ``enc_len`` (B,) so sessions with
+    different encoder lengths batch together (the seed cache's scalar
+    ``enc_len`` could not). Decode runs the family decode step — the
+    (B,) ``enc_len`` broadcasts through the cross-attention mask."""
+
+    name = "encdec"
+
+    def __init__(self, model: Model, max_batch: int, max_seq: int, *,
+                 enc_seq: Optional[int] = None):
+        if model.kind != "encdec":
+            raise NotImplementedError(
+                f"the encdec KV cache requires an encoder-decoder model; "
+                f"{model.cfg.name} is {model.kind!r}")
+        self.enc_seq = int(enc_seq or max_seq)
+        super().__init__(model, max_batch, max_seq)
+        self.enc_len_np = np.zeros((max_batch,), np.int64)
+        # donated in-place cross write (slot traced): the cross buffers
+        # are the backend's largest tensors at real whisper scale, so a
+        # first-residency prefill / restore must not copy them whole —
+        # same rule as the self-KV _slot_update above; retraces only per
+        # distinct encoder length
+        self._cross_update = jax.jit(
+            lambda buf, val, slot: jax.lax.dynamic_update_slice(
+                buf, val, (0, slot, 0, 0, 0)),
+            donate_argnums=(0,))
+
+    def _make_cache(self):
+        c = self.model.cfg
+        L, H, hd = c.n_layers, c.n_heads, c.head_dim_
+
+        def kv(S):
+            return jnp.zeros((L, self.max_batch, S, H, hd),
+                             self.model.dtype)
+
+        return {"self_k": kv(self.max_seq), "self_v": kv(self.max_seq),
+                "cross_k": kv(self.enc_seq), "cross_v": kv(self.enc_seq),
+                "enc_len": jnp.zeros((self.max_batch,), jnp.int32),
+                "lengths": jnp.zeros((self.max_batch,), jnp.int32)}
+
+    def view(self, slot):
+        return _EncDecView(self, slot)
 
 
 # ------------------------------------------------------------------ paged
@@ -452,7 +565,7 @@ class PagedBackend(KVCacheBackend):
 
     def __init__(self, model: Model, max_batch: int, max_seq: int, *,
                  block_size: int = 16, num_blocks: Optional[int] = None):
-        if model.kind != "lm":
+        if not model.adapter.supports_paged:
             raise NotImplementedError(
                 f"paged KV cache requires an attention-history (lm) "
                 f"model; {model.cfg.name} is {model.kind!r}")
@@ -545,14 +658,18 @@ class PagedBackend(KVCacheBackend):
                               self.allocator.free_count)
 
 
-BACKENDS = {"contiguous": ContiguousBackend, "paged": PagedBackend}
+BACKENDS = {"contiguous": ContiguousBackend, "paged": PagedBackend,
+            "encdec": EncDecBackend}
 
 
 def make_backend(spec: Union[str, KVCacheBackend], model: Model,
                  max_batch: int, max_seq: int, *, block_size: int = 16,
-                 num_blocks: Optional[int] = None) -> KVCacheBackend:
-    """Engine-facing factory: a name ('contiguous' | 'paged') or an
-    already-built backend instance (tests / custom layouts)."""
+                 num_blocks: Optional[int] = None,
+                 enc_seq: Optional[int] = None) -> KVCacheBackend:
+    """Engine-facing factory: a name ('contiguous' | 'paged' | 'encdec')
+    or an already-built backend instance (tests / custom layouts).
+    Enc-dec models need the paired self/cross layout, so 'contiguous'
+    transparently resolves to ``EncDecBackend`` for them."""
     if isinstance(spec, KVCacheBackend):
         return spec
     if spec not in BACKENDS:
@@ -561,4 +678,6 @@ def make_backend(spec: Union[str, KVCacheBackend], model: Model,
     if spec == "paged":
         return PagedBackend(model, max_batch, max_seq,
                             block_size=block_size, num_blocks=num_blocks)
+    if spec == "encdec" or model.kind == "encdec":
+        return EncDecBackend(model, max_batch, max_seq, enc_seq=enc_seq)
     return ContiguousBackend(model, max_batch, max_seq)

@@ -27,6 +27,11 @@ class Request:
     max_new_tokens: int = 32
     eos_token: Optional[int] = None
     priority: int = 0                        # PriorityAdmission: higher wins
+    # enc-dec (whisper) sessions: (S_enc, d_model) encoder frame
+    # embeddings. Required on a session's FIRST residency (the encoder
+    # runs once and the result persists as the 'enc' blob); later rounds
+    # and resumes restore the cross context from the store instead.
+    frames: Optional[np.ndarray] = None
     arrival_time: float = 0.0
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 

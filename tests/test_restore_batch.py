@@ -303,3 +303,78 @@ def test_save_decode_hidden_stacked_int8_rows(rules):
         np.testing.assert_array_equal(got_q[n_before:], q_want)
         np.testing.assert_array_equal(got_s[n_before:], s_want)
     mgr.saver.close()
+
+
+# ----------------------------------------------------- auto group size
+def test_choose_group_size_argmin_of_replay():
+    """'auto' picks the restore_makespan argmin over {1, 2, 4, 8, L}
+    from the same group-aware replay the executor reports — under heavy
+    dispatch overhead the widest group wins; at zero overhead grouping
+    only adds fetch-wait bubble, so the per-layer graph wins."""
+    from repro.core.restoration import choose_group_size
+    cfg = get_arch("llama2-13b")
+    methods = ["hidden"] * cfg.n_layers
+    n = 2048
+
+    def span(hw, g):
+        times = [method_times(c, hw) for c in layer_costs(cfg, n)]
+        ovh = getattr(hw, "dispatch_overhead", 0.0)
+        return replay(compile_tasks(methods, group_size=g), times,
+                      dispatch_overhead=ovh).makespan
+
+    cands = (1, 2, 4, 8, cfg.n_layers)
+    heavy = dataclasses.replace(PAPER_A100, dispatch_overhead=2e-3)
+    got = choose_group_size(cfg, heavy, n, methods)
+    assert got == min(cands, key=lambda g: (span(heavy, g), -g))
+    assert got > 1
+    free = dataclasses.replace(PAPER_A100, dispatch_overhead=0.0)
+    got0 = choose_group_size(cfg, free, n, methods)
+    assert got0 == min(cands, key=lambda g: (span(free, g), -g))
+    assert got0 == 1
+
+
+def test_auto_group_size_end_to_end(rules):
+    """HCacheManager(restore_group_size='auto'): the executor resolves a
+    concrete width per restore, the restored cache is byte-identical to
+    a fixed-width restore, and capacity's restore_makespan handles the
+    'auto' manager without error."""
+    from repro.core.capacity import restore_makespan
+    cfg, model, params = build("llama2-7b", rules)
+    mgr_auto = manager(model, group_size="auto")
+    save_session(cfg, model, params, mgr_auto)
+    ex = mgr_auto.begin_restore(params, "sess")
+    assert isinstance(ex.group_size, int) and ex.group_size >= 1
+    assert mgr_auto._group_plans          # resolution memoized per bucket
+    res_auto = mgr_auto.restore(params, "sess")
+
+    mgr_fix = manager(model, group_size=4)
+    save_session(cfg, model, params, mgr_fix)
+    res_fix = mgr_fix.restore(params, "sess")
+    np.testing.assert_array_equal(np.asarray(res_auto.cache["k"]),
+                                  np.asarray(res_fix.cache["k"]))
+    np.testing.assert_array_equal(np.asarray(res_auto.cache["v"]),
+                                  np.asarray(res_fix.cache["v"]))
+    assert restore_makespan(mgr_auto, S) > 0
+    mgr_auto.saver.close()
+    mgr_fix.saver.close()
+
+
+def test_auto_group_size_stable_within_bucket(rules):
+    """'auto' must resolve from the S-bucket, not the exact length:
+    same-bucket sessions pick the same width and share one compiled
+    projection (the zero-recompile guarantee of DESIGN.md §10 holds
+    under the auto knob too)."""
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size="auto")
+    save_session(cfg, model, params, mgr, sid="a", n_tokens=20, key=1)
+    save_session(cfg, model, params, mgr, sid="b", n_tokens=28, key=2)
+    assert s_bucket(20) == s_bucket(28)
+    exa = mgr.begin_restore(params, "a")
+    exb = mgr.begin_restore(params, "b")
+    assert exa.group_size == exb.group_size
+    mgr.restore(params, "a")                 # may trace (fresh bucket)
+    before = projection_trace_count()
+    mgr.restore(params, "b")
+    assert projection_trace_count() == before, \
+        "auto group size recompiled the projection within a bucket"
+    mgr.saver.close()
