@@ -41,7 +41,7 @@ def main() -> None:
     p.add_argument("--mode", default=None,
                    choices=["bench_restoration", "bench_capacity",
                             "bench_paged", "bench_restore_batch",
-                            "bench_encdec"],
+                            "bench_encdec", "bench_prefix"],
                    help="special modes: bench_restoration compares "
                         "blocking vs pipelined TTFT -> "
                         "BENCH_restoration.json; bench_capacity runs the "
@@ -53,7 +53,9 @@ def main() -> None:
                         "projection wall time, makespan) -> "
                         "BENCH_restore_batch.json; bench_encdec compares "
                         "batched vs sequential whisper serving and "
-                        "restore-vs-recompute TTFT -> BENCH_encdec.json")
+                        "restore-vs-recompute TTFT -> BENCH_encdec.json; "
+                        "bench_prefix compares prefix sharing on vs off "
+                        "at an equal page pool -> BENCH_prefix.json")
     args = p.parse_args()
     print("name,us_per_call,derived")
     if args.mode == "bench_restoration":
@@ -83,6 +85,11 @@ def main() -> None:
         from benchmarks.bench_encdec import run_encdec_bench
         rows = run_encdec_bench()
         print(f"# {len(rows)} rows -> BENCH_encdec.json", file=sys.stderr)
+        return
+    if args.mode == "bench_prefix":
+        from benchmarks.bench_prefix import run_prefix_comparison
+        rows = run_prefix_comparison()
+        print(f"# {len(rows)} rows -> BENCH_prefix.json", file=sys.stderr)
         return
     filters = args.only.split(",") if args.only else None
     t0 = time.time()

@@ -360,6 +360,13 @@ class CapacityManager:
                 for sid in self._candidates(prot):
                     if not self.over_budget():
                         return taken
+                    if self.store.bytes_for(sid, include_cold=False) == 0:
+                        # dedup-aware (DESIGN.md §12): a fully-aliased
+                        # session — an undiverged fork, or one whose
+                        # chunks were shadowed out to sharers — pays for
+                        # no hot bytes; degrading it would destroy its
+                        # history while reclaiming nothing
+                        continue
                     if self._apply(stage, sid):
                         self.actions.append((stage, sid))
                         taken += 1

@@ -309,12 +309,37 @@ class HCacheManager:
     def _tokens(self, session: str) -> np.ndarray:
         return np.asarray(self.store.get_blob(session, "tok", 0))
 
-    def begin_restore(self, params, session: str, sink=None
-                      ) -> RestorationExecutor:
+    def begin_restore(self, params, session: str, sink=None,
+                      start_token: int = 0) -> RestorationExecutor:
         """Start an incremental restoration (serving path). The returned
         executor is stepped by the engine a bounded number of tasks per
-        engine iteration; finished layers stream into ``sink``."""
-        return RestorationExecutor(self, params, session, sink=sink)
+        engine iteration; finished layers stream into ``sink``.
+
+        ``start_token > 0`` is restore-skip (DESIGN.md §12): tokens
+        [0, start_token) are already resident in the target slot via a
+        shared prefix, so the task graph starts at the divergence token —
+        makespan shrinks with the shared-prefix ratio."""
+        return RestorationExecutor(self, params, session, sink=sink,
+                                   start_token=start_token)
+
+    def fork_session(self, src: str, dst: str, *, share: bool = True)\
+            -> dict:
+        """Clone ``src``'s persisted state under ``dst`` (conversation
+        trees). ``share=True`` aliases chunks/blobs content-addressed in
+        the store (dedup: the bytes exist once until either side
+        diverges); ``share=False`` materializes real copies — identical
+        semantics, used as the no-sharing reference. Returns the cloned
+        manifest."""
+        man = self.store.get_manifest(src)
+        if man is None:
+            raise KeyError(f"cannot fork {src!r}: no stored state")
+        if self.store.get_manifest(dst) is not None:
+            raise ValueError(f"fork target {dst!r} already has state")
+        self.store.share_session(src, dst, copy=not share)
+        self.store.put_manifest(dst, dict(man))
+        if src in self._session_compress:
+            self._session_compress[dst] = self._session_compress[src]
+        return dict(man)
 
     def restore(self, params, session: str) -> RestoreResult:
         """Rebuild the session's accelerator state from host storage.

@@ -277,18 +277,22 @@ def dequantize_hidden_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
 class RestoreSink:
     """Receives restored state one piece at a time, in any order."""
 
-    def put_kv(self, row: int, k, v) -> None:
-        """One attention layer's KV; row indexes the stacked-KV buffer
-        (k, v: (1, n, kv_heads, head_dim))."""
+    def put_kv(self, row: int, k, v, start: int = 0) -> None:
+        """One attention layer's KV at token offset ``start`` (k, v:
+        (1, n, kv_heads, head_dim)); row indexes the stacked-KV buffer.
+        ``start > 0`` is the restore-skip path: tokens [0, start) are
+        already resident (shared prefix) and the executor only ships the
+        suffix."""
         raise NotImplementedError
 
-    def put_kv_group(self, rows: Sequence[int], k, v) -> None:
+    def put_kv_group(self, rows: Sequence[int], k, v,
+                     start: int = 0) -> None:
         """A whole projection group's KV in one call; rows are the
         stacked-KV buffer rows, k/v: (G, 1, n, kv_heads, head_dim).
         Default: per-row fallback — batching sinks (ViewSink) override
         with a single scatter."""
         for g, row in enumerate(rows):
-            self.put_kv(row, k[g], v[g])
+            self.put_kv(row, k[g], v[g], start)
 
     def put_states(self, conv, ssm) -> None:
         raise NotImplementedError
@@ -313,7 +317,12 @@ class CacheAssembler(RestoreSink):
         self.cross = None
         self.cache: Optional[dict] = None
 
-    def put_kv(self, row, k, v):
+    def put_kv(self, row, k, v, start=0):
+        if start:
+            raise ValueError(
+                "CacheAssembler builds a standalone B=1 cache from token "
+                "0 — restore-skip (start > 0) is a serving-engine path "
+                "(ViewSink over a slot that already holds the prefix)")
         self.k_parts[row] = k
         self.v_parts[row] = v
 
@@ -391,21 +400,25 @@ class RestoreParamPack:
         self._sin = None
         self._slices: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
 
-    def rope_tables(self, n_pos: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """cos/sin (n_pos, head_dim//2) for positions [0, n_pos); the
-        backing table grows by powers of two and per-bucket slices are
-        cached so repeated restores reuse the same device arrays."""
-        got = self._slices.get(n_pos)
+    def rope_tables(self, n_pos: int,
+                    start: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """cos/sin (n_pos, head_dim//2) for absolute positions
+        [start, start + n_pos); the backing table grows by powers of two
+        and per-(start, bucket) slices are cached so repeated restores
+        reuse the same device arrays. ``start > 0`` serves restore-skip:
+        a suffix restore applies RoPE at its true absolute positions."""
+        got = self._slices.get((start, n_pos))
         if got is not None:
             return got
-        if self._cos is None or self._cos.shape[0] < n_pos:
-            cap = s_bucket(n_pos, minimum=128)
+        end = start + n_pos
+        if self._cos is None or self._cos.shape[0] < end:
+            cap = s_bucket(end, minimum=128)
             cos, sin = rope_angles(jnp.arange(cap), self.head_dim,
                                    self.rope_theta)
             self._cos, self._sin = cos, sin
             self._slices.clear()
-        sl = (self._cos[:n_pos], self._sin[:n_pos])
-        self._slices[n_pos] = sl
+        sl = (self._cos[start:end], self._sin[start:end])
+        self._slices[(start, n_pos)] = sl
         return sl
 
 
@@ -527,7 +540,7 @@ class RestorationExecutor:
     both surfaced by bench_restore_batch."""
 
     def __init__(self, mgr, params, session: str,
-                 sink: Optional[RestoreSink] = None):
+                 sink: Optional[RestoreSink] = None, start_token: int = 0):
         manifest = mgr.store.get_manifest(session)
         if manifest is None:
             raise KeyError(f"no stored state for session {session!r}")
@@ -538,6 +551,23 @@ class RestorationExecutor:
         self.sink = sink
         self.n_tokens = int(manifest["n_tokens"])
         self.methods = tuple(manifest["methods"])
+        # restore-skip (DESIGN.md §12): tokens [0, start_token) are
+        # already resident in the slot via a shared prefix, so the task
+        # graph restores only the suffix — IO reads start at the chunk
+        # containing the divergence token, projections run at the
+        # suffix's bucket, and sink writes land at the offset. The
+        # recompute method rebuilds the residual stream from token 0 and
+        # cannot skip (the engine passes start_token=0 for those).
+        start_token = int(start_token)
+        if start_token and any(m == "recompute" for m in self.methods):
+            raise ValueError("restore-skip is incompatible with "
+                             "recompute-method layers (the residual "
+                             "stream rebuild starts at token 0)")
+        if not 0 <= start_token < self.n_tokens:
+            raise ValueError(f"start_token {start_token} outside "
+                             f"[0, {self.n_tokens})")
+        self.start_token = start_token
+        self.n_eff = self.n_tokens - start_token
         self.schedule = Schedule(self.methods, 0.0, 0.0, 0.0, 0.0)
         self.compress = manifest.get("compress", mgr.compress)
         mgr.store.sync_clocks(0.0)
@@ -554,7 +584,7 @@ class RestorationExecutor:
         self.enc_len = int(manifest.get("enc_len", 0))
         self.cross_times = (cross_restore_times(mgr, self.enc_len)
                             if self.has_cross else None)
-        gs = mgr.resolve_group_size(self.n_tokens, self.methods,
+        gs = mgr.resolve_group_size(self.n_eff, self.methods,
                                     enc_len=self.enc_len)
         self.group_size = max(int(gs), 1)
         self.pack: Optional[RestoreParamPack] = mgr.param_pack(params)
@@ -570,7 +600,7 @@ class RestorationExecutor:
                                    group_size=self.group_size,
                                    cross=self.has_cross)
         self.times = [method_times(c, mgr.hw)
-                      for c in layer_costs(mgr.cfg, self.n_tokens,
+                      for c in layer_costs(mgr.cfg, self.n_eff,
                                            mgr.dtype_bytes)]
         self.executed: List[int] = []
         self._done = [False] * len(self.tasks)
@@ -706,13 +736,15 @@ class RestorationExecutor:
         if not self._is_attn(t.layer):
             return          # mamba layers restore via the state blob
         store, sess, n = self.mgr.store, self.session, self.n_tokens
+        d = self.start_token
         if self.compress == "int8":
-            q = store.read_layer_async(sess, "h", t.layer, n)
-            s = store.read_layer_async(sess, "hs", t.layer, n)
+            q = store.read_layer_async(sess, "h", t.layer, n, start_token=d)
+            s = store.read_layer_async(sess, "hs", t.layer, n,
+                                       start_token=d)
             self._measure(q.completion, s.completion)
             self._hbuf[t.layer] = dequantize_hidden_int8(q.data, s.data)
         else:
-            r = store.read_layer_async(sess, "h", t.layer, n)
+            r = store.read_layer_async(sess, "h", t.layer, n, start_token=d)
             self._measure(r.completion)
             self._hbuf[t.layer] = r.data
 
@@ -721,22 +753,25 @@ class RestorationExecutor:
             return
         cfg = self.mgr.cfg
         store, sess, n = self.mgr.store, self.session, self.n_tokens
-        rk = store.read_layer_async(sess, "kvk", t.layer, n)
-        rv = store.read_layer_async(sess, "kvv", t.layer, n)
+        d = self.start_token
+        rk = store.read_layer_async(sess, "kvk", t.layer, n, start_token=d)
+        rv = store.read_layer_async(sess, "kvv", t.layer, n, start_token=d)
         self._measure(rk.completion, rv.completion)
         hd = cfg.head_dim_
-        k = jnp.asarray(rk.data).reshape(1, n, cfg.n_kv_heads, hd)
-        v = jnp.asarray(rv.data).reshape(1, n, cfg.n_kv_heads, hd)
+        ne = self.n_eff
+        k = jnp.asarray(rk.data).reshape(1, ne, cfg.n_kv_heads, hd)
+        v = jnp.asarray(rv.data).reshape(1, ne, cfg.n_kv_heads, hd)
         self.dispatch_count += 3               # 2 uploads + 1 sink write
         self._emit("put_kv", self._row_of[t.layer],
-                   k.astype(self.model.dtype), v.astype(self.model.dtype))
+                   k.astype(self.model.dtype), v.astype(self.model.dtype),
+                   d)
 
     def _exec_project(self, t: Task) -> None:
         members = [li for li in t.members if self._is_attn(li)]
         if not members:
             return          # hidden-method mamba layers restore via blob
         pack = self.pack
-        n = self.n_tokens
+        n = self.n_eff
         S = s_bucket(n)
         G = max(self._g_pad, len(members))
         h0 = self._hbuf[members[0]]
@@ -747,7 +782,9 @@ class RestorationExecutor:
         # pad to the stable group width with a repeated row id over zero
         # hidden states; padded outputs are sliced away below
         rows_pad = np.asarray(rows + [rows[-1]] * (G - len(rows)), np.int32)
-        cos, sin = pack.rope_tables(S)
+        # RoPE at absolute positions: a suffix restore rotates with the
+        # tables sliced at its divergence offset
+        cos, sin = pack.rope_tables(S, self.start_token)
         t0 = time.perf_counter()
         hidden = jnp.asarray(stack)            # ONE host->device upload
         k, v = _project_group_jit(
@@ -761,7 +798,8 @@ class RestorationExecutor:
         g_real = len(members)
         self.dispatch_count += 3     # upload + projection + grouped write
         self._emit("put_kv_group", tuple(rows),
-                   k[:g_real, None, :n], v[:g_real, None, :n])
+                   k[:g_real, None, :n], v[:g_real, None, :n],
+                   self.start_token)
 
     def _exec_recompute(self, t: Task) -> None:
         from repro.models import transformer as tfm

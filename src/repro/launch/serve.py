@@ -69,6 +69,12 @@ def main() -> None:
     p.add_argument("--enc-seq", type=int, default=None,
                    help="enc-dec models: encoder positions per slot in "
                         "the paired self/cross cache (default max-seq)")
+    p.add_argument("--prefix-sharing", action=argparse.BooleanOptionalAction,
+                   default=False,
+                   help="cross-session prefix sharing (DESIGN.md §12): "
+                        "refcounted CoW pages + token-hash prefix index "
+                        "(paged backend) and content-addressed host chunk "
+                        "dedup / session forking")
     args = p.parse_args()
     group_size = (args.restore_group_size
                   if args.restore_group_size == "auto"
@@ -101,7 +107,8 @@ def main() -> None:
                              backend=args.backend,
                              block_size=args.block_size,
                              cache_blocks=args.cache_blocks,
-                             enc_seq=args.enc_seq)
+                             enc_seq=args.enc_seq,
+                             prefix_sharing=args.prefix_sharing)
 
     rng = np.random.default_rng(0)
     for rnd in range(args.rounds):
@@ -135,6 +142,14 @@ def main() -> None:
           f"{m.occupancy_mean:.2f} (fragmentation "
           f"{m.fragmentation_mean:.2f}), free blocks {m.free_blocks}, "
           f"alloc stalls {m.alloc_stalls}")
+    if args.prefix_sharing:
+        print(f"prefix sharing: hit rate {m.prefix_hit_rate:.2f} "
+              f"({m.prefix_hits}/{m.prefix_lookups} lookups, "
+              f"{m.prefix_hit_tokens} tokens), skipped "
+              f"{m.restore_skipped_tokens} restore/prefill tokens, "
+              f"{m.cow_copies} CoW copies, pages shared/private "
+              f"{m.shared_pages}/{m.private_pages}, host dedup "
+              f"{m.dedup_host_bytes / 1e6:.2f} MB, forks {m.forks}")
     if capacity is not None and capacity.actions:
         print("capacity ladder actions:", capacity.actions)
     print("recoverable sessions:", engine.recoverable_sessions())

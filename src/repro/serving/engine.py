@@ -59,6 +59,7 @@ occupancy/fragmentation gauges for the benchmark harness.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Dict, List, Optional, Union
@@ -70,7 +71,9 @@ from repro.core.capacity import (CapacityManager, EvictionPolicy,
                                  AdmissionPolicy, FIFOAdmission, LRUEviction)
 from repro.core.hcache import HCacheManager
 from repro.models.model import Model
-from repro.serving.kv_cache import KVCacheBackend, ViewSink, make_backend
+from repro.serving.kv_cache import (KVCacheBackend, PagedBackend, ViewSink,
+                                    make_backend)
+from repro.serving.prefix_index import HostPin, PrefixIndex
 from repro.serving.request import Phase, Request, SequenceState
 from repro.serving.sampling import sample
 
@@ -113,6 +116,23 @@ class EngineMetrics:
     occupancy_sum: float = 0.0
     occupancy_count: int = 0
     alloc_stalls: int = 0               # admissions deferred: pool exhausted
+    # cross-session prefix sharing gauges (DESIGN.md §12) — all zero
+    # unless the engine runs with prefix_sharing=True
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    restore_skipped_tokens: int = 0     # tokens adopted instead of
+    #                                     restored/prefilled
+    cow_copies: int = 0                 # pages privatized on divergence
+    shared_pages: int = 0               # refcount > 1 (last sample)
+    private_pages: int = 0              # refcount == 1 (last sample)
+    dedup_host_bytes: int = 0           # host bytes sharing avoided
+    forks: int = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return (self.prefix_hits / self.prefix_lookups
+                if self.prefix_lookups else 0.0)
 
     @property
     def occupancy_mean(self) -> float:
@@ -137,7 +157,8 @@ class InferenceEngine:
                  backend: Union[str, KVCacheBackend] = "contiguous",
                  block_size: int = 16,
                  cache_blocks: Optional[int] = None,
-                 enc_seq: Optional[int] = None):
+                 enc_seq: Optional[int] = None,
+                 prefix_sharing: bool = False):
         self.model = model
         # every family-specific decision (prefill chunk policy, output->
         # cache mapping, resume support, save naming) goes through the
@@ -166,6 +187,16 @@ class InferenceEngine:
         self.kv = make_backend(backend, model, max_batch, max_seq,
                                block_size=block_size,
                                num_blocks=cache_blocks, enc_seq=enc_seq)
+        # cross-session prefix sharing (DESIGN.md §12): host chunk
+        # aliasing on fork works on every backend; the device-side
+        # token-hash index needs pages, so it exists only under paged
+        self.prefix_sharing = bool(prefix_sharing)
+        self.prefix_index: Optional[PrefixIndex] = None
+        self._fork_pages: Dict[str, dict] = {}   # parked page holds
+        if self.prefix_sharing and isinstance(self.kv, PagedBackend):
+            self.prefix_index = PrefixIndex(self.kv)
+            self.prefix_index.store = manager.store
+            self.kv.prefix_index = self.prefix_index
         self.queue: deque = deque()
         self.slots: List[Optional[SequenceState]] = [None] * max_batch
         self.sessions: Dict[str, SequenceState] = {}
@@ -197,9 +228,63 @@ class InferenceEngine:
         What a paged reservation must cover (contiguous always reserves
         max_seq)."""
         manifest = self.mgr.store.get_manifest(seq.request.session_id)
-        stored = int(manifest["n_tokens"]) if manifest else 0
-        return (stored + len(seq.effective_prompt)
+        stored = (int(manifest["n_tokens"]) if manifest
+                  else seq.history_len)
+        need = (stored + len(seq.effective_prompt)
                 + seq.request.max_new_tokens - len(seq.generated))
+        fork = self._fork_pages.get(seq.request.session_id)
+        if fork is not None and fork["partial"]:
+            # adopting a fork's partial tail page shares it with the
+            # donor; the resume-feed write privatizes it, costing one
+            # extra pool page while both holds are live
+            need += self.kv.block_size
+        return need
+
+    def _host_align(self, m: int) -> int:
+        """Floor a device prefix match so its host analogue aliases only
+        whole chunks (the adopted length must be page- AND chunk-
+        aligned)."""
+        C = self.mgr.store.chunk_tokens
+        bs = self.kv.block_size
+        align = bs * C // math.gcd(bs, C)
+        return (m // align) * align
+
+    def _shared_prefix_estimate(self, seq: SequenceState) -> int:
+        """Tokens an admission of ``seq`` would cover via shared pages
+        (parked fork pages or a prefix-index hit) — those pages arrive by
+        incref, not from the free pool."""
+        if self.prefix_index is None:
+            return 0
+        sid = seq.request.session_id
+        man = self.mgr.store.get_manifest(sid)
+        fork = self._fork_pages.get(sid)
+        if (fork is not None and man is not None
+                and fork["n_tokens"] == int(man["n_tokens"])):
+            bs = self.kv.block_size
+            return (fork["n_tokens"] // bs) * bs
+        if man is not None:
+            if (man.get("compress", self.mgr.compress) != "none"
+                    or "recompute" in list(man["methods"])):
+                return 0
+            try:
+                toks = self.mgr._tokens(sid)
+            except KeyError:
+                return 0
+            n = int(man["n_tokens"])
+            _, m, _ = self.prefix_index.match(toks[:n], limit=n,
+                                              record=False)
+            return m
+        prompt = np.asarray(seq.effective_prompt).reshape(-1)
+        _, m, _ = self.prefix_index.match(prompt, limit=len(prompt) - 1,
+                                          need_host=self.save_hidden,
+                                          record=False)
+        return self._host_align(m) if self.save_hidden else m
+
+    def _can_reserve_for(self, seq: SequenceState) -> bool:
+        """Admission gate: ``kv.can_reserve``, made sharing-aware."""
+        need = self._tokens_needed(seq)
+        return self.kv.can_reserve(
+            max(need - self._shared_prefix_estimate(seq), 1))
 
     def _admit(self) -> None:
         while self.queue:
@@ -209,7 +294,7 @@ class InferenceEngine:
             seq = self.admission.select(tuple(self.queue), self)
             if seq is None:
                 break
-            if not self.kv.can_reserve(self._tokens_needed(seq)):
+            if not self._can_reserve_for(seq):
                 # allocator backpressure: a free slot exists but the page
                 # pool cannot hold the session — wait for retires/frees
                 self.metrics.alloc_stalls += 1
@@ -219,12 +304,94 @@ class InferenceEngine:
                 break
         self._prefetch_queued()
 
+    def _adopt_shared_prefix(self, seq: SequenceState, slot: int) -> int:
+        """Map the longest shared prefix of this session into the free
+        slot's block table before ``reserve`` tops it up with private
+        pages. Three sources, tried in order: parked fork pages (the
+        fork adopts the donor's saved history wholesale), a prefix-index
+        hit on the session's stored token history (restore-skip), or a
+        prefix-index hit on a fresh prompt (prefill-skip — the host
+        analogue aliases the publisher's pinned chunks so the session
+        is a complete stored session of the matched length). Returns the
+        adopted token count."""
+        if self.prefix_index is None:
+            return 0
+        sid = seq.request.session_id
+        man = self.mgr.store.get_manifest(sid)
+        fork = self._fork_pages.pop(sid, None)
+        if fork is not None:
+            if man is not None and fork["n_tokens"] == int(man["n_tokens"]):
+                self.kv.adopt_shared(slot, fork["blocks"], owned=True)
+                return fork["n_tokens"]
+            # the source saved more state since the fork: the parked
+            # pages are stale — drop the holds, fall back to the index
+            self.kv.release_blocks(fork["blocks"])
+        if man is not None:
+            if (man.get("compress", self.mgr.compress) != "none"
+                    or "recompute" in list(man["methods"])):
+                # shared pages hold exact fp16 KV; a session whose
+                # no-sharing restore would go through another codec must
+                # not mix sources (byte-equivalence to the reference run)
+                return 0
+            try:
+                toks = self.mgr._tokens(sid)
+            except KeyError:
+                return 0
+            n = int(man["n_tokens"])
+            blocks, m, _ = self.prefix_index.match(toks[:n], limit=n)
+            if m:
+                self.kv.adopt_shared(slot, blocks)
+            return m
+        prompt = np.asarray(seq.effective_prompt).reshape(-1)
+        blocks, m, entry = self.prefix_index.match(
+            prompt, limit=len(prompt) - 1, need_host=self.save_hidden)
+        if m and self.save_hidden:
+            m = self._host_align(m)
+            blocks = blocks[:m // self.kv.block_size]
+        if not m:
+            return 0
+        self.kv.adopt_shared(slot, blocks)
+        if self.save_hidden:
+            self._alias_host_prefix(sid, prompt[:m], entry)
+        else:
+            seq.history_len = m
+        seq.pending_prompt = prompt[m:]
+        return m
+
+    def _alias_host_prefix(self, sid: str, prefix_tokens,
+                           entry) -> None:
+        """Host-side analogue of a fresh-prompt prefix hit: the new
+        session's streams alias the publisher's pinned chunks for the
+        matched tokens and a manifest is committed, so every later code
+        path (resume prefill, pause, restore) sees an ordinary stored
+        session of ``m`` tokens. The aliases cost no bytes until the
+        session diverges onto its own chunks."""
+        store = self.mgr.store
+        m = len(prefix_tokens)
+        pin: HostPin = entry.pin
+        n_chunks = -(-m // store.chunk_tokens)
+        store.put_blob(sid, "tok", 0, np.asarray(prefix_tokens, np.int32))
+        for (stream, li), ids in pin.pins.items():
+            for ci in range(min(n_chunks, len(ids))):
+                store.alias_chunk(sid, stream, li, ci, ids[ci])
+        store.put_manifest(sid, {"n_tokens": m,
+                                 "methods": list(pin.methods),
+                                 "arch": self.mgr.cfg.name,
+                                 "compress": "none"})
+
     def _place(self, seq: SequenceState, slot: int) -> bool:
         """Bind a (possibly resuming) sequence to a free batch slot.
         False iff the backend could not reserve capacity (the sequence is
         requeued and the slot stays free)."""
         sid = seq.request.session_id
+        adopted = self._adopt_shared_prefix(seq, slot)
         if not self.kv.reserve(slot, self._tokens_needed(seq)):
+            if self.prefix_index is not None and self.kv.slot_blocks[slot]:
+                self.kv.free_slot(slot)      # drop adopted page holds
+            if adopted and self.mgr.store.get_manifest(sid) is None:
+                # no-save fresh match: nothing persisted — undo the trim
+                seq.pending_prompt = None
+                seq.history_len = 0
             self.metrics.alloc_stalls += 1
             self.queue.appendleft(seq)
             return False
@@ -237,20 +404,39 @@ class InferenceEngine:
             self.capacity.touch(sid, self.step_count)
         manifest = self.mgr.store.get_manifest(sid)
         if manifest:
+            n_man = int(manifest["n_tokens"])
+            d = min(adopted, n_man)
+            if d:
+                self.metrics.restore_skipped_tokens += d
+            if d >= n_man and n_man > 0:
+                # the whole stored history is already resident via
+                # shared pages — no restoration work at all
+                self._prefetch.pop(sid, None)
+                seq.restored = True
+                seq.history_len = n_man
+                seq.restore_sim = 0.0
+                seq.restore_wall = 0.0
+                self.kv.set_length(slot, n_man)
+                seq.phase = Phase.PREFILL
+                self._prefill_step(seq)
+                return True
             seq.phase = Phase.RESTORING
             ex = self._prefetch.pop(sid, None)
             if ex is not None and (
-                    ex.n_tokens != int(manifest["n_tokens"])
+                    ex.n_tokens != n_man
                     or list(ex.methods) != list(manifest["methods"])
                     or ex.compress != manifest.get("compress",
-                                                   self.mgr.compress)):
+                                                   self.mgr.compress)
+                    or getattr(ex, "start_token", 0) != d):
                 # the session saved more state (or was demoted to another
                 # codec by the capacity ladder) after the prefetch
-                # started: the warm executor is stale — restart from the
-                # current manifest
+                # started, or a shared prefix moved the start token: the
+                # warm executor is stale — restart from the current
+                # manifest
                 ex = None
             if ex is None:
-                ex = self.mgr.begin_restore(self.params, sid)
+                ex = self.mgr.begin_restore(self.params, sid,
+                                            start_token=d)
             ex.attach_sink(ViewSink(seq.view))
             seq.executor = ex
             # reserve [0, n) now: concurrent decode steps park their
@@ -260,6 +446,9 @@ class InferenceEngine:
             self.kv.set_length(slot, ex.n_tokens)
         else:
             seq.phase = Phase.PREFILL
+            if seq.history_len:
+                # no-save prefix hit: the adopted range is live history
+                self.kv.set_length(slot, seq.history_len)
             self._prefill_step(seq)
         return True
 
@@ -280,7 +469,7 @@ class InferenceEngine:
             # second admission gate — the page pool — is what's blocking
             # the queue; pausing a victim recycles its pages
             seq = self.admission.select(tuple(self.queue), self)
-            if seq is None or self.kv.can_reserve(self._tokens_needed(seq)):
+            if seq is None or self._can_reserve_for(seq):
                 return
         candidates = [s for s in self.slots
                       if s is not None and s.phase == Phase.DECODE
@@ -311,6 +500,7 @@ class InferenceEngine:
             sid, s.view.snapshot(), n - 1,
             tokens_tail=np.asarray(s.generated[s.tok_saved:-1], np.int32))
         self._after_save(sid)
+        self._publish_slot(s)
         s.tok_saved = len(s.generated) - 1
         s.gen_absorbed = len(s.generated)
         s.pending_prompt = np.asarray([s.generated[-1]], np.int32)
@@ -327,6 +517,121 @@ class InferenceEngine:
         self.slots[i] = None
         self.queue.append(s)
         self.metrics.preemptions += 1
+
+    # ------------------------------------------------------ prefix sharing
+    def _host_pin_fn(self, sid: str, man: dict):
+        """``pin_fn`` for ``PrefixIndex.publish``: pins every persisted
+        stream's chunks covering ``depth`` pages, or None when the
+        coverage is not (fully) flushed — the entry then serves
+        device-only consumers (restore-skip), not fresh-prompt hits."""
+        if not self.save_hidden:
+            return None
+        methods = list(man["methods"])
+        if any(m == "recompute" for m in methods):
+            return None
+        store = self.mgr.store
+        C = store.chunk_tokens
+        bs = self.kv.block_size
+
+        def pin(depth: int):
+            n_tok = depth * bs
+            n_chunks = -(-n_tok // C)
+            targets = []
+            for li, m in enumerate(methods):
+                for stream in (("h",) if m == "hidden" else ("kvk", "kvv")):
+                    for ci in range(n_chunks):
+                        if (store.chunk_rows(sid, stream, li, ci)
+                                < min(C, n_tok - ci * C)):
+                            return None
+                    targets.append((stream, li))
+            pins = {(stream, li): store.pin_chunks(sid, stream, li,
+                                                   list(range(n_chunks)))
+                    for stream, li in targets}
+            return HostPin(methods=methods, pins=pins, n_chunks=n_chunks)
+        return pin
+
+    def _publish_slot(self, seq: SequenceState) -> None:
+        """Index the slot's full pages for cross-session sharing — at
+        prefill completion and again right before the slot frees at
+        pause/retire (published pages are incref'd, so they outlive the
+        publisher's residency)."""
+        if self.prefix_index is None or seq.view is None or seq.slot < 0:
+            return
+        blks = self.kv.slot_blocks[seq.slot]
+        if not blks:
+            return
+        sid = seq.request.session_id
+        length = int(self.kv.get_lengths()[seq.slot])
+        if self.save_hidden:
+            man = self.mgr.store.get_manifest(sid)
+            if not man or man.get("compress", self.mgr.compress) != "none":
+                return                     # demoted codecs are not shared
+            try:
+                tokens = self.mgr._tokens(sid)
+            except KeyError:
+                return
+            self.prefix_index.publish(tokens, min(length, len(tokens)),
+                                      blks, self._host_pin_fn(sid, man))
+        else:
+            if seq.pending_from_gen:
+                return       # token history not reconstructible sans store
+            tokens = np.concatenate(
+                [np.asarray(seq.request.prompt, np.int64).reshape(-1),
+                 np.asarray(seq.generated, np.int64)])
+            self.prefix_index.publish(tokens, min(length, len(tokens)),
+                                      blks, None)
+
+    def fork_session(self, src: str, new_id: str) -> dict:
+        """Fork ``src``'s conversation state as ``new_id`` (DESIGN.md
+        §12): host streams are shared content-addressed (bytes exist
+        once until a side diverges; with prefix_sharing off they are
+        materialized as real copies), and — with sharing on, a paged
+        backend and the source resident — the saved history's device
+        pages are parked for the fork to adopt CoW-shared at admission,
+        making its restoration a no-op. A resident source is
+        checkpointed first (the same dump as a pause, without losing its
+        slot), so the fork point is the full history through the last
+        sampled token's predecessor."""
+        seq = self.sessions.get(src)
+        if seq is not None and seq.view is not None:
+            if seq.phase != Phase.DECODE or not seq.generated:
+                raise ValueError(
+                    f"cannot fork {src!r} mid-{seq.phase.value}; fork "
+                    f"before admission or once it is decoding")
+            if not self.save_hidden:
+                raise ValueError(
+                    "forking a resident session requires save_hidden "
+                    "(its history lives only in streams it never saved)")
+            n = seq.total_len
+            self.mgr.saver.drain()
+            self.mgr.save_session_pause(
+                src, seq.view.snapshot(), n - 1,
+                tokens_tail=np.asarray(seq.generated[seq.tok_saved:-1],
+                                       np.int32))
+            self._after_save(src)
+            seq.tok_saved = len(seq.generated) - 1
+        man = self.mgr.fork_session(src, new_id,
+                                    share=self.prefix_sharing)
+        if (self.prefix_index is not None and seq is not None
+                and seq.view is not None):
+            n_saved = int(man["n_tokens"])
+            pages = -(-n_saved // self.kv.block_size)
+            blocks = [int(b) for b in
+                      self.kv.slot_blocks[seq.slot][:pages]]
+            for b in blocks:
+                self.kv.allocator.incref(b)
+            self._fork_pages[new_id] = {
+                "blocks": blocks, "n_tokens": n_saved,
+                "partial": n_saved % self.kv.block_size != 0}
+        self.metrics.forks += 1
+        return man
+
+    def release_fork(self, new_id: str) -> None:
+        """Drop the parked page holds of a fork that will never be
+        submitted (the host-side state stays forkable)."""
+        fork = self._fork_pages.pop(new_id, None)
+        if fork is not None:
+            self.kv.release_blocks(fork["blocks"])
 
     # ----------------------------------------------------------- restoration
     def _prefetch_queued(self) -> None:
@@ -357,7 +662,8 @@ class InferenceEngine:
                 seq.history_len = ex.n_tokens
                 seq.restore_sim = ex.timeline().makespan
                 seq.restore_wall = ex.wall_time
-                self.metrics.restored_tokens += ex.n_tokens
+                self.metrics.restored_tokens += (
+                    ex.n_tokens - getattr(ex, "start_token", 0))
                 self.metrics.restore_sim_all.append(seq.restore_sim)
                 if seq.pending_from_gen:       # resume of a paused session
                     self.metrics.restore_sim_resume.append(seq.restore_sim)
@@ -399,6 +705,7 @@ class InferenceEngine:
             seq.tok_saved += len(chunk)   # resume feed landed in tok blob
         if seq.prefill_done >= len(prompt):
             seq.phase = Phase.DECODE
+            self._publish_slot(seq)
             lg = out["logits"]
             tok = int(sample(lg, temperature=self.temperature)[0])
             self._emit_token(seq, tok)
@@ -467,6 +774,7 @@ class InferenceEngine:
                                             n - 1, tokens_tail=tail)
                 self._after_save(sid)
                 s.tok_saved = len(s.generated) - 1
+            self._publish_slot(s)
             s.phase = Phase.DONE
             s.view.free()
             s.view = None
@@ -493,6 +801,15 @@ class InferenceEngine:
         if occ.reserved_tokens:
             m.occupancy_sum += occ.utilization
             m.occupancy_count += 1
+        if self.prefix_sharing:
+            m.dedup_host_bytes = int(self.mgr.store.dedup_bytes)
+        if self.prefix_index is not None:
+            pi = self.prefix_index
+            m.prefix_lookups = pi.lookups
+            m.prefix_hits = pi.hits
+            m.prefix_hit_tokens = pi.hit_tokens
+            m.cow_copies = self.kv.cow_copies
+            m.shared_pages, m.private_pages = self.kv.shared_page_stats()
 
     def step(self) -> None:
         self.step_count += 1

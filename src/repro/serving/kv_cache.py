@@ -78,17 +78,30 @@ class OccupancyStats:
 
 
 class BlockAllocator:
-    """LIFO free list over ``num_blocks`` physical pages (LIFO so pages
-    freed by an eviction are immediately reused — cache-warm on real
-    hardware, and deterministic for the reuse tests)."""
+    """Refcounted LIFO free list over ``num_blocks`` physical pages (LIFO
+    so pages freed by an eviction are immediately reused — cache-warm on
+    real hardware, and deterministic for the reuse tests).
+
+    Pages are reference counted so several block-table rows (and the
+    prefix index) may map the same physical page: ``alloc`` hands a page
+    out at refcount 1, ``incref`` adds a holder, and ``free`` drops one
+    holder per page — the page returns to the free list only when its
+    last holder releases it. Freeing a page that has no live holders
+    raises instead of silently corrupting the free list (a double free
+    used to append the page twice, letting the allocator grant the same
+    physical page to two sessions)."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref: List[int] = [0] * num_blocks
 
     @property
     def free_count(self) -> int:
         return len(self._free)
+
+    def refcount(self, block: int) -> int:
+        return self._ref[block]
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """``n`` pages, or None when the pool cannot satisfy the request
@@ -97,11 +110,30 @@ class BlockAllocator:
         if n < 0 or n > len(self._free):
             return None
         taken = [self._free.pop() for _ in range(n)]
+        for b in taken:
+            self._ref[b] = 1
         return taken
 
+    def incref(self, block: int) -> None:
+        if self._ref[block] <= 0:
+            raise RuntimeError(
+                f"incref of unallocated page {block} (refcount "
+                f"{self._ref[block]}) — sharing a page that is already "
+                f"on the free list")
+        self._ref[block] += 1
+
     def free(self, blocks: Sequence[int]) -> None:
+        """Drop one holder per page; a page with no remaining holders
+        returns to the free list (reversed, preserving LIFO reuse
+        order for the common unshared case)."""
         for b in reversed(list(blocks)):
-            self._free.append(b)
+            if self._ref[b] <= 0:
+                raise RuntimeError(
+                    f"double free of page {b}: page is already free "
+                    f"(refcount {self._ref[b]})")
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(b)
 
 
 # -------------------------------------------------------------------- views
@@ -109,18 +141,21 @@ class CacheView:
     """Slot-bound handle; the only way engine/restoration/save code
     touches cache state."""
 
-    def write_layer(self, row: int, k, v) -> None:
-        """One attention layer's restored KV at tokens [0, n);
-        k, v: (1, n, Kv, hd); row indexes the stacked-KV buffer."""
+    def write_layer(self, row: int, k, v, start: int = 0) -> None:
+        """One attention layer's restored KV at tokens [start, start+n);
+        k, v: (1, n, Kv, hd); row indexes the stacked-KV buffer. A
+        nonzero ``start`` is the restore-skip path: tokens [0, start)
+        are already resident via a shared prefix (DESIGN.md §12)."""
         raise NotImplementedError
 
-    def write_layer_group(self, rows: Sequence[int], k, v) -> None:
+    def write_layer_group(self, rows: Sequence[int], k, v,
+                          start: int = 0) -> None:
         """A whole restoration group's KV in one scatter; rows are
         stacked-KV buffer rows, k/v: (G, 1, n, Kv, hd). Default falls
         back to per-layer writes; both backends override with a single
         donated device call (DESIGN.md §10)."""
         for g, row in enumerate(rows):
-            self.write_layer(row, k[g], v[g])
+            self.write_layer(row, k[g], v[g], start)
 
     def write_kv(self, k, v, start: int) -> None:
         """Stacked prefill KV (L, 1, n, Kv, hd) at token offset start."""
@@ -161,11 +196,11 @@ class ViewSink(RestoreSink):
     def __init__(self, view: CacheView):
         self.view = view
 
-    def put_kv(self, row, k, v):
-        self.view.write_layer(row, k, v)
+    def put_kv(self, row, k, v, start=0):
+        self.view.write_layer(row, k, v, start)
 
-    def put_kv_group(self, rows, k, v):
-        self.view.write_layer_group(rows, k, v)
+    def put_kv_group(self, rows, k, v, start=0):
+        self.view.write_layer_group(rows, k, v, start)
 
     def put_states(self, conv, ssm):
         self.view.write_states({"conv": conv, "ssm": ssm})
@@ -223,7 +258,7 @@ class _ContiguousView(CacheView):
         self.b = backend
         self.slot = slot
 
-    def write_layer(self, row, k, v):
+    def write_layer(self, row, k, v, start=0):
         b = self.b
         k_name, v_name = b.model.adapter.kv_names
         row = jnp.asarray(row)              # traced: no recompile per row
@@ -231,9 +266,10 @@ class _ContiguousView(CacheView):
         for name, val in ((k_name, k), (v_name, v)):
             buf = b.cache[name]
             val = jnp.asarray(val, buf.dtype)[None]       # (1, 1, n, H, hd)
-            b.cache[name] = b._slot_update(buf, val, row, slot)
+            b.cache[name] = b._slot_update(buf, val, row, slot,
+                                           jnp.asarray(start))
 
-    def write_layer_group(self, rows, k, v):
+    def write_layer_group(self, rows, k, v, start=0):
         b = self.b
         k_name, v_name = b.model.adapter.kv_names
         kbuf, vbuf = b.cache[k_name], b.cache[v_name]
@@ -242,7 +278,7 @@ class _ContiguousView(CacheView):
             jnp.asarray(k, kbuf.dtype)[:, 0],         # (G, n, Kv, hd)
             jnp.asarray(v, vbuf.dtype)[:, 0],
             jnp.asarray(np.asarray(rows, np.int32)),
-            jnp.asarray(self.slot))
+            jnp.asarray(self.slot), jnp.asarray(start))
 
     def write_kv(self, k, v, start):
         b = self.b
@@ -306,19 +342,23 @@ class ContiguousBackend(KVCacheBackend):
         self._decode_fn = jax.jit(model.decode_step_full)
         # donated so XLA updates the stacked KV buffer in place — a
         # per-layer restore write must not copy the whole (L,B,S,H,hd)
-        # cache (retraces only per distinct restored length n)
+        # cache (retraces only per distinct restored length n). ``start``
+        # is traced: restore-skip lands a suffix at the divergence token
+        # without a new compile per offset
         self._slot_update = jax.jit(
-            lambda buf, val, row, slot: jax.lax.dynamic_update_slice(
-                buf, val, (row, slot, 0, 0, 0)),
+            lambda buf, val, row, slot, start: jax.lax.dynamic_update_slice(
+                buf, val, (row, slot, start, 0, 0)),
             donate_argnums=(0,))
         # grouped restore write: a whole projection group's K and V land
-        # in one donated scatter (rows traced, so group membership never
-        # retraces; retraces only per distinct restored length n)
-        self._group_update = jax.jit(
-            lambda kbuf, vbuf, kval, vval, rows, slot:
-            (kbuf.at[rows, slot, :kval.shape[1]].set(kval),
-             vbuf.at[rows, slot, :vval.shape[1]].set(vval)),
-            donate_argnums=(0, 1))
+        # in one donated scatter (rows and start traced, so group
+        # membership / token offset never retrace; retraces only per
+        # distinct restored length n). Scatter grid rather than basic
+        # slicing because the token offset is traced.
+        def _gupd(kbuf, vbuf, kval, vval, rows, slot, start):
+            pos = start + jnp.arange(kval.shape[1])
+            return (kbuf.at[rows[:, None], slot, pos[None, :]].set(kval),
+                    vbuf.at[rows[:, None], slot, pos[None, :]].set(vval))
+        self._group_update = jax.jit(_gupd, donate_argnums=(0, 1))
 
     def _make_cache(self):
         return self.model.init_cache(self.max_batch, self.max_seq)
@@ -485,20 +525,24 @@ class _PagedView(CacheView):
         return (jnp.asarray(row[positions // b.block_size]),
                 jnp.asarray(positions % b.block_size))
 
-    def write_layer(self, row, k, v):
+    def write_layer(self, row, k, v, start=0):
         b = self.b
         n = k.shape[1]
-        blk, off = self._addr(np.arange(n))
+        positions = start + np.arange(n)
+        b._ensure_private(self.slot, positions // b.block_size)
+        blk, off = self._addr(positions)
         row = jnp.asarray(row)
         for name, val in (("k_pool", k), ("v_pool", v)):
             pool = b.cache[name]
             val = jnp.asarray(val, pool.dtype)[0]         # (n, Kv, hd)
             b.cache[name] = b._write_layer(pool, val, row, blk, off)
 
-    def write_layer_group(self, rows, k, v):
+    def write_layer_group(self, rows, k, v, start=0):
         b = self.b
         n = k.shape[2]
-        blk, off = self._addr(np.arange(n))
+        positions = start + np.arange(n)
+        b._ensure_private(self.slot, positions // b.block_size)
+        blk, off = self._addr(positions)
         kp, vp = b.cache["k_pool"], b.cache["v_pool"]
         b.cache["k_pool"], b.cache["v_pool"] = b._write_group(
             kp, vp,
@@ -509,7 +553,9 @@ class _PagedView(CacheView):
     def write_kv(self, k, v, start):
         b = self.b
         n = k.shape[2]
-        blk, off = self._addr(start + np.arange(n))
+        positions = start + np.arange(n)
+        b._ensure_private(self.slot, positions // b.block_size)
+        blk, off = self._addr(positions)
         for name, val in (("k_pool", k), ("v_pool", v)):
             pool = b.cache[name]
             # (L, n, Kv, hd) lands at [:, blk[i], off[i]] per token
@@ -581,6 +627,10 @@ class PagedBackend(KVCacheBackend):
         self.table_np = np.asarray(self.cache["block_table"]).copy()
         self.allocator = BlockAllocator(self.num_blocks)
         self.slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+        # set by the engine when --prefix-sharing is on: pages held by the
+        # index are reclaimable under pressure (see _alloc_pages)
+        self.prefix_index = None
+        self.cow_copies = 0
         self._decode_fn = jax.jit(model.decode_step_paged)
         # donated in-place page scatter, retraced per restored length n
         self._write_layer = jax.jit(
@@ -595,12 +645,94 @@ class PagedBackend(KVCacheBackend):
             (kp.at[rows[:, None], blk[None, :], off[None, :]].set(kval),
              vp.at[rows[:, None], blk[None, :], off[None, :]].set(vval)),
             donate_argnums=(0, 1))
+        # copy-on-write page clone: one physical page (all layers) copied
+        # inside the donated pool update; dst/src traced so divergence at
+        # any page never retraces
+        self._copy_page = jax.jit(
+            lambda pool, dst, src: pool.at[:, dst].set(pool[:, src]),
+            donate_argnums=(0,))
 
     def _push_table(self) -> None:
         self.cache["block_table"] = jnp.asarray(self.table_np)
 
     def view(self, slot):
         return _PagedView(self, slot)
+
+    # ---------------------------------------------- CoW page sharing
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """Allocator grant, spilling LRU prefix-index pages on shortfall
+        (index-held pages are a cache, never a reservation)."""
+        got = self.allocator.alloc(n)
+        if got is None and self.prefix_index is not None:
+            short = n - self.allocator.free_count
+            if self.prefix_index.release(short) > 0:
+                got = self.allocator.alloc(n)
+        return got
+
+    def _ensure_private(self, slot: int, logical_pages) -> None:
+        """CoW barrier: every listed logical page of ``slot`` that maps a
+        shared physical page (refcount > 1) is copied to a fresh private
+        page before the caller writes through it. Copies only the pages
+        actually written — the rest of the prefix stays shared."""
+        blks = self.slot_blocks[slot]
+        touched = False
+        for lp in sorted(set(int(p) for p in np.atleast_1d(logical_pages))):
+            if lp >= len(blks) or self.allocator.refcount(blks[lp]) <= 1:
+                continue
+            fresh = self._alloc_pages(1)
+            if fresh is None:
+                raise RuntimeError(
+                    "page pool exhausted during copy-on-write divergence "
+                    "(no free page to privatize a shared page); raise "
+                    "cache_blocks or lower concurrency")
+            dst = fresh[0]
+            src = blks[lp]
+            d, s = jnp.asarray(dst), jnp.asarray(src)
+            for name in ("k_pool", "v_pool"):
+                self.cache[name] = self._copy_page(self.cache[name], d, s)
+            self.allocator.free([src])          # drop this slot's hold
+            blks[lp] = dst
+            self.table_np[slot, lp] = dst
+            self.cow_copies += 1
+            touched = True
+        if touched:
+            self._push_table()
+
+    def adopt_shared(self, slot: int, blocks: Sequence[int], *,
+                     owned: bool = False) -> None:
+        """Map an already-populated shared page run as the slot's logical
+        prefix (prefix-index hit or fork adoption). ``owned=False``
+        increfs each page (the donor keeps its hold); ``owned=True``
+        transfers holds that the caller already owns (parked fork pages).
+        Must run before ``reserve`` tops the row up with private pages."""
+        if self.slot_blocks[slot]:
+            raise RuntimeError(f"adopt_shared on a non-empty slot {slot}")
+        blocks = [int(b) for b in blocks]
+        if not owned:
+            for b in blocks:
+                self.allocator.incref(b)
+        self.slot_blocks[slot] = list(blocks)
+        row = self.table_np[slot]
+        row[:] = self.num_blocks
+        row[:len(blocks)] = blocks
+        self._push_table()
+
+    def release_blocks(self, blocks: Sequence[int]) -> None:
+        """Drop caller-owned holds not bound to any slot (e.g. parked
+        fork pages that will never be adopted)."""
+        self.allocator.free(list(blocks))
+
+    def shared_page_stats(self):
+        """(shared, private) physical page counts for the gauges: a page
+        is shared when more than one holder maps it."""
+        shared = private = 0
+        for b in range(self.num_blocks):
+            r = self.allocator.refcount(b)
+            if r > 1:
+                shared += 1
+            elif r == 1:
+                private += 1
+        return shared, private
 
     def _blocks_needed(self, n_tokens: int) -> int:
         need = max(-(-max(n_tokens, 1) // self.block_size), 1)
@@ -611,14 +743,17 @@ class PagedBackend(KVCacheBackend):
         return min(need, self.blocks_per_seq, self.num_blocks)
 
     def can_reserve(self, n_tokens):
-        return self._blocks_needed(n_tokens) <= self.allocator.free_count
+        avail = self.allocator.free_count
+        if self.prefix_index is not None:
+            avail += self.prefix_index.releasable()
+        return self._blocks_needed(n_tokens) <= avail
 
     def reserve(self, slot, n_tokens):
         need = self._blocks_needed(n_tokens)
         have = self.slot_blocks[slot]
         if len(have) >= need:
             return True
-        blocks = self.allocator.alloc(need - len(have))
+        blocks = self._alloc_pages(need - len(have))
         if blocks is None:
             return False
         have.extend(blocks)
@@ -636,6 +771,15 @@ class PagedBackend(KVCacheBackend):
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
 
     def decode(self, params, tokens):
+        # CoW barrier before the batched scatter: the step writes one
+        # token at lengths[slot] for EVERY occupied slot (the engine
+        # rolls scratch writes back) — each slot's frontier page must be
+        # private or the write would leak into a sibling's shared prefix
+        lengths = np.asarray(self.cache["lengths"])
+        for slot, blks in enumerate(self.slot_blocks):
+            if blks:
+                self._ensure_private(slot, [int(lengths[slot])
+                                            // self.block_size])
         lg, self.cache, hidden = self._decode_fn(params, self.cache, tokens)
         return lg, hidden
 

@@ -93,7 +93,22 @@ class ChunkStore:
         self.cold = list(cold_devices) if cold_devices else None
         self.chunk_tokens = chunk_tokens
         self._partials: Dict[Tuple[str, str, int], _Partial] = {}
-        self._lock = threading.Lock()
+        # content-addressed sharing (DESIGN.md §12): a logical key may
+        # alias a physical key owned by another session (fork / prefix
+        # index). ``_refs`` counts holders of a physical key INCLUDING
+        # its owner (absent entry == plain unshared key, refcount 1);
+        # ``_orphans`` marks physical keys whose owning session no longer
+        # holds them (owner dropped, or content shadowed out) — they are
+        # excluded from per-session accounting, drops, and demotions, and
+        # are physically deleted when their last alias/pin releases.
+        self._alias: Dict[str, str] = {}
+        self._refs: Dict[str, int] = {}
+        self._orphans: set = set()
+        self._pin_n = 0
+        self._shadow_n = 0
+        # RLock: the sharing bookkeeping runs inside append/flush, which
+        # already hold the staging lock
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------- placement
     def _device_for(self, layer: int, chunk: int) -> Backend:
@@ -118,6 +133,170 @@ class ChunkStore:
         if reclaim is not None:
             reclaim()
 
+    # ------------------------------------------------- shared-chunk plumbing
+    @staticmethod
+    def _coords(key: str) -> Tuple[int, int]:
+        """(layer, chunk) parsed back out of a key (shadow suffixes on
+        the chunk component are ignored — placement is by coordinates)."""
+        parts = key.split("/")
+        return int(parts[2][1:]), int(parts[3][1:].split("@")[0])
+
+    def _resolve(self, key: str) -> str:
+        """Physical key behind a logical key (identity when unshared)."""
+        return self._alias.get(key, key)
+
+    def _incref(self, phys: str) -> None:
+        with self._lock:
+            self._refs[phys] = self._refs.get(phys, 1) + 1
+
+    def _release_phys(self, phys: str) -> None:
+        """Drop one holder of a physical key; delete the bytes when the
+        last holder releases (the deferred-eviction rule: a shared chunk
+        outlives its owning session until the last referent lets go)."""
+        with self._lock:
+            r = self._refs.get(phys, 1) - 1
+            if r <= 0:
+                self._refs.pop(phys, None)
+                self._orphans.discard(phys)
+                for d in self._all_devices():
+                    if d.contains(phys):
+                        d.delete(phys)
+                return
+            if r == 1 and phys not in self._orphans:
+                self._refs.pop(phys, None)     # back to plain owned
+            else:
+                self._refs[phys] = r
+
+    def _prepare_write(self, session: str, stream: str, layer: int,
+                       chunk: int) -> None:
+        """Copy-on-write for the host tier: called before (over)writing a
+        physical chunk/blob key. If the logical key aliases another
+        session's data, the alias is dropped (the writer diverges onto
+        its own bytes). If the key's current content is held by other
+        sessions/pins, that content is shadowed out to a renamed physical
+        key first, so the sharers keep reading the old bytes."""
+        k = _key(session, stream, layer, chunk)
+        with self._lock:
+            phys = self._alias.pop(k, None)
+            if phys is not None:
+                self._release_phys(phys)
+                return                          # k itself holds no bytes yet
+            others = self._refs.get(k, 1) - (0 if k in self._orphans else 1)
+            if others <= 0:
+                return
+            self._shadow_n += 1
+            shadow = f"{k}@s{self._shadow_n}"
+            dev = self._backend_for(layer, chunk, k)
+            if dev.contains(k):
+                dev.write(shadow, np.asarray(dev.peek(k)))
+                dev.delete(k)
+            for lk, pk in self._alias.items():
+                if pk == k:
+                    self._alias[lk] = shadow
+            self._refs[shadow] = others
+            self._refs.pop(k, None)
+            self._orphans.discard(k)
+            self._orphans.add(shadow)
+
+    # ------------------------------------------------------------- sharing
+    def pin_chunks(self, session: str, stream: str, layer: int,
+                   chunks: Sequence[int]) -> List[str]:
+        """Pin chunk content against deletion (prefix index): each pin id
+        holds one reference to the chunk's current physical bytes, which
+        therefore survive the owning session's eviction. Returns opaque
+        pin ids for ``alias_chunk``/``unpin``."""
+        ids = []
+        with self._lock:
+            for ci in chunks:
+                phys = self._resolve(_key(session, stream, layer, int(ci)))
+                self._pin_n += 1
+                pid = f"__pin/{self._pin_n}"
+                self._alias[pid] = phys
+                self._incref(phys)
+                ids.append(pid)
+        return ids
+
+    def chunk_rows(self, session: str, stream: str, layer: int,
+                   chunk: int) -> int:
+        """Rows (tokens) of a stored chunk, 0 when absent — the prefix
+        index probes coverage with this before pinning (``pin_chunks``
+        pins whatever key resolves; pinning a hole would hand out a pin
+        id that aliases nothing)."""
+        with self._lock:
+            k = self._resolve(_key(session, stream, layer, int(chunk)))
+            dev = self._backend_for(layer, int(chunk), k)
+            return int(dev.nrows(k)) if dev.contains(k) else 0
+
+    def unpin(self, pin_ids: Sequence[str]) -> None:
+        with self._lock:
+            for pid in pin_ids:
+                phys = self._alias.pop(pid, None)
+                if phys is not None:
+                    self._release_phys(phys)
+
+    def alias_chunk(self, session: str, stream: str, layer: int,
+                    chunk: int, ref_key: str) -> None:
+        """Map ``session``'s (stream, layer, chunk) onto existing bytes
+        (``ref_key``: an ordinary key or a pin id). The new session reads
+        the shared bytes; its first write to the chunk diverges onto its
+        own copy (``_prepare_write``)."""
+        logical = _key(session, stream, layer, chunk)
+        with self._lock:
+            phys = self._resolve(ref_key)
+            old = self._alias.pop(logical, None)
+            if old is not None:
+                self._release_phys(old)
+            self._alias[logical] = phys
+            self._incref(phys)
+
+    def share_session(self, src: str, dst: str, *, copy: bool = False)\
+            -> int:
+        """Alias every stored chunk/blob of ``src`` into ``dst`` (fork).
+        ``copy=True`` materializes real copies instead (sharing-off
+        reference behavior — byte-identical semantics, no dedup).
+        Returns the number of keys shared/copied."""
+        self.flush(src)
+        prefix = _enc(src) + "/"
+        dstp = _enc(dst) + "/"
+        with self._lock:
+            seen = set()
+            for d in self._all_devices():
+                for k in d.keys():
+                    if (k.startswith(prefix) and "/meta/" not in k
+                            and k not in self._orphans):
+                        seen.add(k)
+            seen.update(lk for lk in self._alias
+                        if lk.startswith(prefix))
+            for k in sorted(seen):
+                newk = dstp + k[len(prefix):]
+                layer, chunk = self._coords(k)
+                phys = self._resolve(k)
+                if copy:
+                    dev = self._backend_for(layer, chunk, phys)
+                    self._device_for(layer, chunk).write(
+                        newk, np.asarray(dev.peek(phys)))
+                else:
+                    self._alias[newk] = phys
+                    self._incref(phys)
+        self._maybe_reclaim()
+        return len(seen)
+
+    @property
+    def dedup_bytes(self) -> int:
+        """Bytes that sharing avoided storing twice: one count of the
+        physical bytes per session-visible alias (pins excluded — they
+        keep data alive but do not stand for a second copy)."""
+        saved = 0
+        with self._lock:
+            entries = [(lk, pk) for lk, pk in self._alias.items()
+                       if not lk.startswith("__pin/")]
+        for lk, pk in entries:
+            layer, chunk = self._coords(pk)
+            dev = self._backend_for(layer, chunk, pk)
+            if dev.contains(pk):
+                saved += dev.nbytes(pk)
+        return saved
+
     # ----------------------------------------------------------------- write
     def append_tokens(self, session: str, stream: str, layer: int,
                       start_token: int, data: np.ndarray) -> None:
@@ -132,9 +311,11 @@ class ChunkStore:
                 pad = start_token - part.start_token
                 if pad:
                     # resuming mid-chunk (multi-round session): recover the
-                    # previously-flushed partial chunk as the prefix
+                    # previously-flushed partial chunk as the prefix —
+                    # through the alias map, so a forked/prefix-matched
+                    # session seeds its divergent chunk from shared bytes
                     ci = part.start_token // C
-                    kstr = _key(session, stream, layer, ci)
+                    kstr = self._resolve(_key(session, stream, layer, ci))
                     dev = self._backend_for(layer, ci, kstr)
                     if dev.contains(kstr):
                         prev = np.asarray(dev.read(kstr))[:pad]
@@ -150,6 +331,7 @@ class ChunkStore:
             while part.n >= C:
                 block = np.concatenate(part.rows, axis=0)
                 chunk_idx = part.start_token // C
+                self._prepare_write(session, stream, layer, chunk_idx)
                 self._device_for(layer, chunk_idx).write(
                     _key(session, stream, layer, chunk_idx), block[:C])
                 part.start_token += C
@@ -164,6 +346,7 @@ class ChunkStore:
                     continue
                 block = np.concatenate(part.rows, axis=0)
                 chunk_idx = part.start_token // self.chunk_tokens
+                self._prepare_write(s, stream, layer, chunk_idx)
                 self._device_for(layer, chunk_idx).write(
                     _key(session, stream, layer, chunk_idx), block)
                 del self._partials[(s, stream, layer)]
@@ -172,48 +355,57 @@ class ChunkStore:
     def put_blob(self, session: str, stream: str, layer: int,
                  data: np.ndarray) -> None:
         """Whole-object write (SSM states, token ids)."""
+        self._prepare_write(session, stream, layer, 0)
         self._device_for(layer, 0).write(_key(session, stream, layer, 0),
                                          np.asarray(data))
         self._maybe_reclaim()
 
     def get_blob(self, session: str, stream: str, layer: int) -> np.ndarray:
-        key = _key(session, stream, layer, 0)
+        key = self._resolve(_key(session, stream, layer, 0))
         return self._backend_for(layer, 0, key).read(key)
 
     def has_blob(self, session: str, stream: str, layer: int) -> bool:
-        key = _key(session, stream, layer, 0)
+        key = self._resolve(_key(session, stream, layer, 0))
         return self._backend_for(layer, 0, key).contains(key)
 
     # ------------------------------------------------------------------ read
     def read_layer(self, session: str, stream: str, layer: int,
-                   n_tokens: int) -> np.ndarray:
+                   n_tokens: int, start_token: int = 0) -> np.ndarray:
         """Restoration read: all chunks of one layer, token order.
 
         With SimulatedSSD devices the per-device clocks advance in parallel
         (round-robin striping aggregates bandwidth); completion time is
         queried via ``read_completion``."""
-        return self.read_layer_async(session, stream, layer, n_tokens).data
+        return self.read_layer_async(session, stream, layer, n_tokens,
+                                     start_token=start_token).data
 
     def read_layer_async(self, session: str, stream: str, layer: int,
-                         n_tokens: int) -> AsyncRead:
+                         n_tokens: int, start_token: int = 0) -> AsyncRead:
         """Batched striped read of one layer with completion times.
 
         Issues every chunk read up front (each device queues its own IOs
         on its clock) and returns the assembled array plus the per-device
         virtual completion times — the executor overlaps compute with the
-        stripe instead of re-simulating the IO separately."""
+        stripe instead of re-simulating the IO separately.
+
+        ``start_token`` is the restore-skip entry point: only the chunks
+        covering tokens [start_token, n_tokens) are read (and charged on
+        the device clocks); the returned data starts at ``start_token``."""
         C = self.chunk_tokens
+        first = start_token // C
         n_chunks = (n_tokens + C - 1) // C
         parts = []
         completions = []
-        for ci in range(n_chunks):
-            key = _key(session, stream, layer, ci)
+        for ci in range(first, n_chunks):
+            key = self._resolve(_key(session, stream, layer, ci))
             data, done = self._backend_for(layer, ci, key).read_async(key)
             parts.append(data)
             completions.append(done)
-        out = np.concatenate(parts, axis=0)
-        return AsyncRead(out[:n_tokens], max(completions, default=0.0),
-                         completions)
+        out = np.concatenate(parts, axis=0) if parts else \
+            np.zeros((0,), np.float32)
+        off = start_token - first * C
+        return AsyncRead(out[off:n_tokens - first * C],
+                         max(completions, default=0.0), completions)
 
     def layer_available(self, session: str, stream: str, layer: int,
                         n_tokens: int = 1) -> bool:
@@ -232,7 +424,7 @@ class ChunkStore:
         for ci in range(n_chunks):
             lo = ci * C
             hi = min(n_tokens, lo + C)
-            kstr = _key(session, stream, layer, ci)
+            kstr = self._resolve(_key(session, stream, layer, ci))
             dev = self._backend_for(layer, ci, kstr)
             # the stream's final chunk is stored at its true (short)
             # length — existence alone does not cover the range
@@ -278,6 +470,28 @@ class ChunkStore:
         return sorted(out)
 
     # -------------------------------------------------------------- eviction
+    def _drop_key(self, d: Backend, k: str) -> int:
+        """Owner-side delete of one device key; returns bytes physically
+        freed. Shared keys are NOT deleted — the owner's hold is dropped
+        and the bytes become an orphan kept alive by the remaining
+        aliases/pins (deferred eviction)."""
+        with self._lock:
+            if k in self._orphans:
+                return 0                      # not this session's bytes
+            if self._refs.get(k, 1) > 1:
+                self._refs[k] -= 1
+                self._orphans.add(k)
+                return 0
+            self._refs.pop(k, None)
+            freed = d.nbytes(k)
+            d.delete(k)
+            return freed
+
+    def _drop_aliases(self, prefix: str) -> None:
+        with self._lock:
+            for lk in [lk for lk in self._alias if lk.startswith(prefix)]:
+                self._release_phys(self._alias.pop(lk))
+
     def drop_session(self, session: str) -> None:
         with self._lock:
             for key in list(self._partials):
@@ -287,12 +501,15 @@ class ChunkStore:
         for d in self._all_devices():
             for k in d.keys():
                 if k.startswith(prefix):
-                    d.delete(k)
+                    self._drop_key(d, k)
+        self._drop_aliases(prefix)
 
     def drop_stream(self, session: str, stream: str) -> int:
         """Delete every chunk of one (session, stream); returns bytes
-        freed. Used by the capacity ladder to degrade a session to a
-        cheaper representation (e.g. drop 'h' after re-encoding)."""
+        freed (shared chunks drop the owner's hold without freeing —
+        their bytes free when the last referent releases). Used by the
+        capacity ladder to degrade a session to a cheaper representation
+        (e.g. drop 'h' after re-encoding)."""
         with self._lock:
             for key in list(self._partials):
                 if key[0] == session and key[1] == stream:
@@ -302,8 +519,8 @@ class ChunkStore:
         for d in self._all_devices():
             for k in d.keys():
                 if k.startswith(prefix):
-                    freed += d.nbytes(k)
-                    d.delete(k)
+                    freed += self._drop_key(d, k)
+        self._drop_aliases(prefix)
         return freed
 
     # ------------------------------------------------------ tier demotion
@@ -322,9 +539,12 @@ class ChunkStore:
             for k in d.keys():
                 if not k.startswith(prefix):
                     continue
-                parts = k.split("/")
-                layer = int(parts[2][1:])
-                chunk = int(parts[3][1:])
+                # demotion of a shared chunk is deferred until its last
+                # referent releases it: a sibling session may be resident
+                # and restoring from these bytes right now
+                if k in self._orphans or self._refs.get(k, 1) > 1:
+                    continue
+                layer, chunk = self._coords(k)
                 data = d.peek(k)
                 self._cold_for(layer, chunk).write(k, np.asarray(data))
                 moved += data.nbytes
@@ -353,9 +573,9 @@ class ChunkStore:
             for k in d.keys():
                 if not k.startswith(prefix):
                     continue
-                parts = k.split("/")
-                layer = int(parts[2][1:])
-                chunk = int(parts[3][1:])
+                if k in self._orphans or self._refs.get(k, 1) > 1:
+                    continue                   # deferred: shared bytes
+                layer, chunk = self._coords(k)
                 data = d.peek(k)
                 self._cold_for(layer, chunk).write(k, np.asarray(data))
                 moved += data.nbytes
@@ -376,11 +596,19 @@ class ChunkStore:
                   include_cold: bool = True) -> int:
         """Per-session (optionally per-stream) stored bytes, both tiers
         by default. Computed by key scan — always consistent with the
-        devices, including after a FileBackend reopen."""
+        devices, including after a FileBackend reopen.
+
+        Dedup-aware: shared bytes are counted once, toward the session
+        that OWNS the physical key. Aliased streams (a fork reading a
+        sibling's chunks) and orphans (bytes whose owner dropped but that
+        pins/aliases keep alive) cost the session nothing — the capacity
+        manager therefore never evicts a session to reclaim bytes it is
+        not actually paying for."""
         prefix = _enc(session) + "/" + (f"{stream}/" if stream else "")
         devices = self._all_devices() if include_cold else list(self.devices)
         return sum(d.nbytes(k) for d in devices
-                   for k in d.keys() if k.startswith(prefix))
+                   for k in d.keys()
+                   if k.startswith(prefix) and k not in self._orphans)
 
     def sync_clocks(self, now: float) -> None:
         for d in self.devices:

@@ -5,6 +5,17 @@ from repro.distributed.sharding import default_rules
 from repro.launch.mesh import make_mesh
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _drop_jax_caches():
+    # Each module builds its own smoke model; the compiled executables
+    # are dead weight once the module finishes.  Left to accumulate,
+    # the process-wide JIT code footprint grows with every module added
+    # to the suite and eventually segfaults XLA's CPU compiler
+    # mid-suite, so release them at module teardown.
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def mesh():
     return make_mesh((1, 1), ("data", "model"))
