@@ -1,0 +1,148 @@
+"""Self-calibrating scheduler bake-off (DESIGN.md §13).
+
+The datasheet says the machine is a PAPER_A100; the machine actually
+delivers ~40% of the datasheet storage bandwidth, ~75% of the sustained
+GEMM fraction, and a 25 µs per-dispatch overhead (the usual shape of the
+gap: shared PCIe lanes, filesystem overhead, launch latency). Three
+planners restore the same session under the TRUE machine at 1/2/4-way
+restore concurrency:
+
+  * static          — solve() + uniform group 8 priced off the datasheet
+                      (what the seed shipped),
+  * calibrated      — solve() + auto group size priced off a
+                      MeasuredProfile fitted to the true machine and the
+                      current IO multiplicity,
+  * calibrated+fetch — calibrated split with the fetch-aligned
+                      non-uniform group partition.
+
+Every plan is scored by the SAME judge: the two-stream replay of its
+compiled task graph under the true machine's times at that multiplicity.
+The acceptance criterion is calibrated+fetch beating static by ≥1.2x
+makespan under 4-way concurrency. Emits BENCH_sched.json for CI
+trending. Fully analytic — no model forward pass.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit
+
+ARCH = "llama2-13b"
+N_TOKENS = 2048
+STATIC_GROUP = 8
+STREAMS = (1, 2, 4)
+# the synthetic "true machine": how it diverges from its datasheet
+TRUE_STORAGE = 0.4
+TRUE_FLOPS = 0.75
+TRUE_OVERHEAD = 25e-6
+CALIBRATION_ROUNDS = 2          # "converges within a few restores"
+
+
+def _true_profile(guess):
+    return guess.derated(storage=TRUE_STORAGE, flops=TRUE_FLOPS,
+                         dispatch_overhead=TRUE_OVERHEAD)
+
+
+def _measure(cfg, true_hw):
+    """The profile the executor would converge to: per-kind (work,
+    seconds) observations priced under the true machine, including the
+    per-dispatch overhead the intercept fit recovers."""
+    from repro.core.cost_model import layer_costs, method_times
+    from repro.core.profiler import MeasuredProfile
+
+    p = MeasuredProfile()
+    for _ in range(CALIBRATION_ROUNDS):
+        for bucket in (N_TOKENS // 2, N_TOKENS):
+            c = layer_costs(cfg, bucket)[0]
+            t = method_times(c, true_hw)
+            p.record("io_h", bucket, c.io_hidden, t.io_h)
+            p.record("io_kv", bucket, c.io_kv, t.io_kv)
+            p.record("project", bucket, c.c_hidden,
+                     t.c_h + TRUE_OVERHEAD)
+            p.record("recompute", bucket, c.c_token,
+                     t.c_token + TRUE_OVERHEAD)
+    return p
+
+
+def _score(cfg, methods, group, true_hw, streams):
+    """Replay a plan's compiled graph under the TRUE machine at the
+    given restore multiplicity — the one judge every planner faces."""
+    from repro.core.cost_model import layer_costs, method_times
+    from repro.core.restoration import compile_tasks, replay
+
+    times = [method_times(c, true_hw, io_streams=streams)
+             for c in layer_costs(cfg, N_TOKENS)]
+    tasks = compile_tasks(tuple(methods), group_size=group)
+    tl = replay(tasks, times, dispatch_overhead=TRUE_OVERHEAD)
+    return tl
+
+
+def run_sched_bench(out_path: str = "BENCH_sched.json"):
+    from repro.config.hardware import PAPER_A100
+    from repro.configs import get_arch
+    from repro.core.restoration import choose_group_size
+    from repro.core.scheduler import solve
+
+    cfg = get_arch(ARCH)
+    guess = PAPER_A100
+    true_hw = _true_profile(guess)
+    profile = _measure(cfg, true_hw)
+
+    results = {"workload": {"arch": ARCH, "n_tokens": N_TOKENS,
+                            "true_storage_frac": TRUE_STORAGE,
+                            "true_flops_frac": TRUE_FLOPS,
+                            "true_dispatch_overhead_s": TRUE_OVERHEAD,
+                            "calibration_rounds": CALIBRATION_ROUNDS},
+               "streams": {}}
+    rows = []
+    static_sched = solve(cfg, N_TOKENS, guess)
+    for m in STREAMS:
+        cal_sched = solve(cfg, N_TOKENS, guess, profile=profile,
+                          io_streams=m)
+        cal_group = choose_group_size(cfg, guess, N_TOKENS,
+                                      cal_sched.methods, profile=profile,
+                                      io_streams=m)
+        fetch_group = choose_group_size(cfg, guess, N_TOKENS,
+                                        cal_sched.methods,
+                                        profile=profile, io_streams=m,
+                                        fetch_aligned=True)
+        plans = {
+            "static": (static_sched.methods, STATIC_GROUP),
+            "calibrated": (cal_sched.methods, cal_group),
+            "calibrated_fetch": (cal_sched.methods, fetch_group),
+        }
+        per = {}
+        for name, (methods, group) in plans.items():
+            tl = _score(cfg, methods, group, true_hw, m)
+            bubble = max(tl.io_bubble, tl.compute_bubble)
+            per[name] = {
+                "makespan_s": tl.makespan,
+                "bubble": bubble,
+                "counts": {k: list(methods).count(k)
+                           for k in ("hidden", "kv", "recompute")},
+                "group": (list(group) if isinstance(group, tuple)
+                          else group),
+            }
+            rows.append((f"bench_sched_m{m}_{name}",
+                         tl.makespan * 1e6,
+                         f"bubble={bubble:.3f};group={group}"))
+        per["speedup_calibrated"] = (per["static"]["makespan_s"]
+                                     / per["calibrated"]["makespan_s"])
+        per["speedup_calibrated_fetch"] = (
+            per["static"]["makespan_s"]
+            / per["calibrated_fetch"]["makespan_s"])
+        results["streams"][str(m)] = per
+
+    final = results["streams"][str(STREAMS[-1])]
+    results["acceptance_speedup_4way"] = final["speedup_calibrated_fetch"]
+    results["acceptance_met"] = final["speedup_calibrated_fetch"] >= 1.2
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    rows.append(("bench_sched_acceptance_4way_speedup",
+                 0.0, f"{final['speedup_calibrated_fetch']:.2f}x;"
+                 f"met={results['acceptance_met']}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_sched_bench()

@@ -41,7 +41,8 @@ def main() -> None:
     p.add_argument("--mode", default=None,
                    choices=["bench_restoration", "bench_capacity",
                             "bench_paged", "bench_restore_batch",
-                            "bench_encdec", "bench_prefix"],
+                            "bench_encdec", "bench_prefix",
+                            "bench_sched"],
                    help="special modes: bench_restoration compares "
                         "blocking vs pipelined TTFT -> "
                         "BENCH_restoration.json; bench_capacity runs the "
@@ -55,7 +56,10 @@ def main() -> None:
                         "batched vs sequential whisper serving and "
                         "restore-vs-recompute TTFT -> BENCH_encdec.json; "
                         "bench_prefix compares prefix sharing on vs off "
-                        "at an equal page pool -> BENCH_prefix.json")
+                        "at an equal page pool -> BENCH_prefix.json; "
+                        "bench_sched compares static vs calibrated vs "
+                        "fetch-aligned restore plans under 1/2/4-way "
+                        "concurrency -> BENCH_sched.json")
     args = p.parse_args()
     print("name,us_per_call,derived")
     if args.mode == "bench_restoration":
@@ -90,6 +94,11 @@ def main() -> None:
         from benchmarks.bench_prefix import run_prefix_comparison
         rows = run_prefix_comparison()
         print(f"# {len(rows)} rows -> BENCH_prefix.json", file=sys.stderr)
+        return
+    if args.mode == "bench_sched":
+        from benchmarks.bench_sched import run_sched_bench
+        rows = run_sched_bench()
+        print(f"# {len(rows)} rows -> BENCH_sched.json", file=sys.stderr)
         return
     filters = args.only.split(",") if args.only else None
     t0 = time.time()

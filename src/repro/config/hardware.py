@@ -30,6 +30,25 @@ class HardwareProfile:
     # effect on makespan.
     dispatch_overhead: float = 0.0
 
+    def derated(self, *, storage: float = 1.0, host_link: float = 1.0,
+                flops: float = 1.0,
+                dispatch_overhead: float = None) -> "HardwareProfile":
+        """A copy with bandwidths/FLOPs scaled and an optional dispatch
+        overhead — the shape real hardware diverges from its datasheet in
+        (shared PCIe lanes, filesystem overhead on the SSDs, sustained
+        vs peak GEMM throughput). Every profile here is a guess until
+        the online profiler (core/profiler.py) measures it; derated
+        copies stand in for "what the machine actually does" in
+        calibration tests and bench_sched."""
+        return dataclasses.replace(
+            self, name=self.name + "-derated",
+            storage_bw=self.storage_bw * storage,
+            host_link_bw=self.host_link_bw * host_link,
+            flops=self.flops * flops,
+            dispatch_overhead=(self.dispatch_overhead
+                               if dispatch_overhead is None
+                               else dispatch_overhead))
+
 
 TB = 1e12
 GB = 1e9

@@ -50,18 +50,30 @@ def restore_makespan(mgr, n_tokens: int,
     adapter = mgr.model.adapter
     cross = adapter.has_cross
     cross_times = cross_restore_times(mgr, enc_len) if cross else None
-    times = [method_times(c, mgr.hw)
+    # contention-aware pricing: the manager's measured profile (if any)
+    # replaces datasheet rates, and ``mgr.io_streams`` stretches the IO
+    # legs by the current restore multiplicity — so admission/eviction
+    # cost a restore under shared host-link bandwidth, not exclusive
+    # access
+    profile = getattr(mgr, "profile", None)
+    streams = max(int(getattr(mgr, "io_streams", 1)), 1)
+    times = [method_times(c, mgr.hw, profile=profile, io_streams=streams)
              for c in layer_costs(mgr.cfg, n_tokens, mgr.dtype_bytes)]
     resolve = getattr(mgr, "resolve_group_size", None)
     if resolve is not None:
         group = resolve(n_tokens, methods, enc_len=enc_len)
     else:                        # duck-typed manager without the knob
         group = max(int(getattr(mgr, "restore_group_size", 1)), 1)
+    if not isinstance(group, tuple):     # fetch-aligned plans are tuples
+        group = max(int(group), 1)
+    overhead = getattr(mgr.hw, "dispatch_overhead", 0.0)
+    if profile is not None:
+        measured = profile.dispatch_overhead()
+        if measured is not None:
+            overhead = measured
     tasks = compile_tasks(tuple(methods), n_blobs=adapter.n_state_blobs,
-                          group_size=max(int(group), 1), cross=cross)
-    return replay(tasks, times,
-                  dispatch_overhead=getattr(mgr.hw, "dispatch_overhead",
-                                            0.0),
+                          group_size=group, cross=cross)
+    return replay(tasks, times, dispatch_overhead=overhead,
                   cross_times=cross_times).makespan
 
 

@@ -119,15 +119,36 @@ class MethodTimes:
 
 
 def method_times(cost: LayerCost, hw: HardwareProfile,
-                 gemm_eff: float = GEMM_EFFICIENCY) -> MethodTimes:
+                 gemm_eff: float = GEMM_EFFICIENCY, *,
+                 profile=None, io_streams: int = 1) -> MethodTimes:
+    """Seconds per layer. With a ``MeasuredProfile`` the observed marginal
+    rates (seconds/byte, seconds/FLOP) replace the datasheet numbers for
+    every kind that has samples; unmeasured kinds keep the static model.
+    ``io_streams`` prices shared host-link/storage bandwidth: N sessions
+    restoring concurrently each see 1/N of the link, so IO legs stretch
+    N-fold while compute legs (per-chip) do not."""
     flops = hw.flops * gemm_eff
     bw = min(hw.storage_bw, hw.host_link_bw)
-    return MethodTimes(
-        io_h=cost.io_hidden / bw,
-        io_kv=cost.io_kv / bw if cost.io_kv else cost.io_state / bw,
-        c_h=cost.c_hidden / flops,
-        c_token=cost.c_token / flops,
-    )
+    m = max(int(io_streams), 1)
+    io_h = cost.io_hidden / bw
+    io_kv = cost.io_kv / bw if cost.io_kv else cost.io_state / bw
+    c_h = cost.c_hidden / flops
+    c_token = cost.c_token / flops
+    if profile is not None:
+        r = profile.rate("io_h")
+        if r is not None:
+            io_h = cost.io_hidden * r
+        r = profile.rate("io_kv")
+        if r is not None:
+            io_kv = (cost.io_kv or cost.io_state) * r
+        r = profile.rate("project")
+        if r is not None:
+            c_h = cost.c_hidden * r
+        r = profile.rate("recompute")
+        if r is not None:
+            c_token = cost.c_token * r
+    return MethodTimes(io_h=io_h * m, io_kv=io_kv * m,
+                       c_h=c_h, c_token=c_token)
 
 
 def restoration_time(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile,

@@ -53,24 +53,42 @@ class HCacheManager:
                  hw: HardwareProfile = TPU_V5E, saver: Optional[TwoStageSaver]
                  = None, compress: str = "none", dtype_bytes: int = 2,
                  schedule_override: Optional[str] = None,
-                 store_dtype=np.float16, restore_group_size=8):
+                 store_dtype=np.float16, restore_group_size=8,
+                 profile=None):
         self.model = model
         self.cfg = model.cfg
         self.store = store
-        self.hw = hw
-        # projection group width for the batched restoration data path
+        # plan caches must exist before the hw property setter (which
+        # invalidates them) runs
+        self._plans: Dict[tuple, Schedule] = {}
+        self._group_plans: Dict[tuple, object] = {}
+        self._hw = hw
+        # online calibration (DESIGN.md §13): a MeasuredProfile the
+        # executors fold observed task times into and every planning
+        # call (plan / resolve_group_size / capacity.restore_makespan)
+        # prices with. None (the default) keeps the static
+        # HardwareProfile model exactly — planning stays deterministic.
+        self.profile = profile
+        # IO-stream multiplicity: how many sessions are restoring
+        # concurrently (the engine updates this every step); admission
+        # and scheduling price shared host-link/storage bandwidth with
+        # it instead of assuming exclusive access
+        self.io_streams = 1
+        # projection group plan for the batched restoration data path
         # (DESIGN.md §10): one stacked device call per group instead of
-        # one per layer; 1 recovers the per-layer graph exactly, and
-        # "auto" lets each restore pick the makespan-argmin width over
-        # {1, 2, 4, 8, L} from the group-aware cost model
-        # (restoration.choose_group_size)
-        self.restore_group_size = (
-            "auto" if restore_group_size == "auto"
-            else max(int(restore_group_size), 1))
-        # memoized "auto" resolutions, keyed (S-bucket, methods,
-        # enc-bucket) — the choice is bucket-stable by construction, and
-        # admission calls restore_makespan per queued session per step
-        self._group_plans: Dict[tuple, int] = {}
+        # one per layer; 1 recovers the per-layer graph exactly; "auto"
+        # lets each restore pick the makespan-argmin over uniform widths
+        # {1, 2, 4, 8, L} AND the fetch-aligned non-uniform partition;
+        # "fetch" forces the fetch-aligned partition
+        # (restoration.choose_group_size / fetch_aligned_partition); an
+        # explicit tuple of widths pins a non-uniform plan directly
+        if restore_group_size in ("auto", "fetch"):
+            self.restore_group_size = restore_group_size
+        elif isinstance(restore_group_size, tuple):
+            self.restore_group_size = tuple(
+                max(int(w), 1) for w in restore_group_size)
+        else:
+            self.restore_group_size = max(int(restore_group_size), 1)
         # once-per-(model, params) restoration weight pack, built lazily
         # on the first restore and shared by every executor
         self._pack = None
@@ -84,7 +102,6 @@ class HCacheManager:
         self.compress = compress
         self.dtype_bytes = dtype_bytes
         self.schedule_override = schedule_override   # None|hidden|kv|recompute
-        self._plans: Dict[int, Schedule] = {}
         # per-session compression overrides (capacity demotion ladder);
         # synced from the manifest on resume so a fresh manager over a
         # demoted store keeps appending in the session's stored codec
@@ -92,6 +109,49 @@ class HCacheManager:
 
     def _compress_for(self, session: str) -> str:
         return self._session_compress.get(session, self.compress)
+
+    # ----------------------------------------------- plan-cache invalidation
+    @property
+    def hw(self) -> HardwareProfile:
+        return self._hw
+
+    @hw.setter
+    def hw(self, value: HardwareProfile) -> None:
+        # regression guard (ISSUE 7 satellite): schedules and group plans
+        # are memoized against the hardware numbers — swapping the
+        # profile without flushing them left restores running stale
+        # widths/splits forever
+        if value is not self._hw:
+            self._hw = value
+            self.invalidate_plans()
+
+    def invalidate_plans(self) -> None:
+        """Flush every memoized schedule and group plan. Called on any
+        hardware-profile swap; measured-profile drift and IO-multiplicity
+        changes need no flush because both are part of the cache keys
+        (``_price_key``)."""
+        self._plans.clear()
+        self._group_plans.clear()
+
+    def set_profile(self, profile) -> None:
+        """Attach (or detach) a MeasuredProfile; memoized plans priced
+        under the old profile are flushed."""
+        if profile is not self.profile:
+            self.profile = profile
+            self.invalidate_plans()
+
+    def set_io_streams(self, n: int) -> None:
+        """Engine-reported restore multiplicity. No cache flush: plans
+        are memoized per multiplicity (``_price_key``), so flipping
+        between 1-way and 4-way reuses both sets of plans."""
+        self.io_streams = max(int(n), 1)
+
+    def _price_key(self) -> tuple:
+        """The planning-relevant calibration state: plans computed under
+        a different profile epoch or IO multiplicity must not be
+        reused."""
+        epoch = self.profile.epoch if self.profile is not None else -1
+        return (epoch, self.io_streams)
 
     def param_pack(self, params):
         """Device-stacked restoration weights (wk/wv/bk/bv/ln1 + RoPE
@@ -106,32 +166,70 @@ class HCacheManager:
 
     # ------------------------------------------------------------- planning
     def resolve_group_size(self, n_tokens: int, methods, *,
-                           enc_len: int = 0) -> int:
-        """Concrete projection group width for one restore: the fixed
-        knob, or — under ``restore_group_size="auto"`` — the
-        bucket-stable makespan argmin (``restoration.choose_group_size``),
-        memoized per (S-bucket, methods, enc-bucket) like ``plan``'s
-        ``_plans`` cache. The single resolution point for the executor
-        and ``capacity.restore_makespan``."""
-        if self.restore_group_size != "auto":
+                           enc_len: int = 0):
+        """Concrete projection group plan for one restore: the fixed
+        width, or — under ``restore_group_size="auto"``/``"fetch"`` —
+        the bucket-stable makespan argmin over uniform widths plus the
+        fetch-aligned non-uniform partition (``"fetch"`` forces the
+        partition). Returns an int width or a tuple of widths. Memoized
+        per (S-bucket, methods, enc-bucket, price state) like ``plan``'s
+        ``_plans`` cache: a profile-epoch bump or multiplicity change
+        re-plans, a converged profile memoizes again. The single
+        resolution point for the executor and
+        ``capacity.restore_makespan``."""
+        if self.restore_group_size not in ("auto", "fetch"):
             return self.restore_group_size
-        from repro.core.restoration import choose_group_size, s_bucket
+        from repro.core.restoration import (choose_group_size,
+                                            fetch_aligned_partition,
+                                            s_bucket)
         adapter = self.model.adapter
         cross = adapter.has_cross and enc_len > 0
         key = (s_bucket(max(int(n_tokens), 1)), tuple(methods),
-               s_bucket(enc_len) if cross else 0)
+               s_bucket(enc_len) if cross else 0, self._price_key())
         got = self._group_plans.get(key)
         if got is None:
-            got = choose_group_size(self.cfg, self.hw, n_tokens, methods,
-                                    dtype_bytes=self.dtype_bytes,
-                                    n_blobs=adapter.n_state_blobs,
-                                    cross=adapter.has_cross,
-                                    enc_len=enc_len)
+            if self.restore_group_size == "fetch":
+                got = self._fetch_partition(n_tokens, methods)
+            else:
+                got = choose_group_size(self.cfg, self.hw, n_tokens,
+                                        methods,
+                                        dtype_bytes=self.dtype_bytes,
+                                        n_blobs=adapter.n_state_blobs,
+                                        cross=adapter.has_cross,
+                                        enc_len=enc_len,
+                                        profile=self.profile,
+                                        io_streams=self.io_streams,
+                                        fetch_aligned=True)
             self._group_plans[key] = got
         return got
 
+    def _fetch_partition(self, n_tokens: int, methods):
+        """The forced fetch-aligned partition (``restore_group_size=
+        "fetch"``), priced at the S-bucket under the current profile and
+        multiplicity; a degenerate all-equal partition collapses to its
+        uniform int width."""
+        from repro.core.cost_model import layer_costs, method_times
+        from repro.core.restoration import (fetch_aligned_partition,
+                                            s_bucket)
+        bucket = s_bucket(max(int(n_tokens), 1))
+        times = [method_times(c, self.hw, profile=self.profile,
+                              io_streams=self.io_streams)
+                 for c in layer_costs(self.cfg, bucket, self.dtype_bytes)]
+        overhead = getattr(self.hw, "dispatch_overhead", 0.0)
+        if self.profile is not None:
+            measured = self.profile.dispatch_overhead()
+            if measured is not None:
+                overhead = measured
+        part = fetch_aligned_partition(methods, times,
+                                       dispatch_overhead=overhead)
+        if not part:
+            return 1
+        return part[0] if len(set(part)) == 1 else part
+
     def plan(self, n_tokens: int) -> Schedule:
-        """Bucketed bubble-free schedule (power-of-two token buckets)."""
+        """Bucketed bubble-free schedule (power-of-two token buckets),
+        priced under the measured profile and current IO multiplicity
+        when calibration is on (part of the memoization key)."""
         if self.schedule_override:
             m = self.schedule_override
             methods = tuple(
@@ -139,15 +237,18 @@ class HCacheManager:
                 for bk in self.cfg.block_kinds())
             return Schedule(methods, 0.0, 0.0, 0.0, 0.0)
         bucket = 1 << max(int(np.ceil(np.log2(max(n_tokens, 128)))), 7)
-        if bucket not in self._plans:
+        key = (bucket, self._price_key())
+        if key not in self._plans:
             # recompute-prefix is only defined where the adapter says so
             # (hybrid: an attention block's recompute would depend on
             # interleaved mamba layers; encdec: on the cross context)
             allow_re = self.model.adapter.supports_recompute
-            self._plans[bucket] = solve(self.cfg, bucket, self.hw,
-                                        dtype_bytes=self.dtype_bytes,
-                                        allow_recompute=allow_re)
-        return self._plans[bucket]
+            self._plans[key] = solve(self.cfg, bucket, self.hw,
+                                     dtype_bytes=self.dtype_bytes,
+                                     allow_recompute=allow_re,
+                                     profile=self.profile,
+                                     io_streams=self.io_streams)
+        return self._plans[key]
 
     # ----------------------------------------------------------------- save
     def save_prefill(self, session: str, tokens: np.ndarray, prefill_out:

@@ -46,7 +46,7 @@ class Timeline:
 
 
 def simulate(methods: Sequence[str], times: Sequence[MethodTimes], *,
-             group_size: int = 1,
+             group_size=1,
              dispatch_overhead: float = 0.0,
              cross: bool = False, cross_times=None) -> Timeline:
     """Simulate a restoration schedule. methods[i] in {hidden, kv, recompute}.
@@ -55,7 +55,8 @@ def simulate(methods: Sequence[str], times: Sequence[MethodTimes], *,
     ``compile_tasks`` + ``replay`` that drive the serving engine's
     incremental execution produce this timeline, so the simulated and the
     executed orders cannot drift apart (see core/restoration.py).
-    ``group_size`` coalesces projections into grouped compute tasks and
+    ``group_size`` — a uniform width or a tuple of widths (fetch-aligned
+    partition) — coalesces projections into grouped compute tasks and
     ``dispatch_overhead`` charges the per-dispatch launch cost once per
     compute task — the batched data path's makespan knob (DESIGN.md §10).
     ``cross``/``cross_times`` add the enc-dec encoder-blob read and
@@ -69,11 +70,17 @@ def simulate(methods: Sequence[str], times: Sequence[MethodTimes], *,
 def restore_timeline(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile,
                      methods: Sequence[str],
                      dtype_bytes: int = 2, *,
-                     group_size: int = 1) -> Timeline:
-    times = [method_times(c, hw)
+                     group_size=1, profile=None,
+                     io_streams: int = 1) -> Timeline:
+    times = [method_times(c, hw, profile=profile, io_streams=io_streams)
              for c in layer_costs(cfg, n_tokens, dtype_bytes)]
+    overhead = getattr(hw, "dispatch_overhead", 0.0)
+    if profile is not None:
+        measured = profile.dispatch_overhead()
+        if measured is not None:
+            overhead = measured
     return simulate(methods, times, group_size=group_size,
-                    dispatch_overhead=getattr(hw, "dispatch_overhead", 0.0))
+                    dispatch_overhead=overhead)
 
 
 # --------------------------------------------------------- serving estimates

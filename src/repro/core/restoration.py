@@ -105,8 +105,34 @@ class CrossTimes:
     compute: float
 
 
+def group_widths(group_size, n_hidden: int) -> Tuple[int, ...]:
+    """Normalize a group plan — a uniform width (int) or an explicit
+    partition (sequence of widths, the fetch-aligned form) — into the
+    tuple of group widths that covers ``n_hidden`` hidden layers
+    exactly. A short partition is extended with its last width; a long
+    one is truncated; widths are clamped positive."""
+    if n_hidden <= 0:
+        return ()
+    if isinstance(group_size, (tuple, list)):
+        widths: List[int] = []
+        total = 0
+        for w in group_size:
+            if total >= n_hidden:
+                break
+            w = max(int(w), 1)
+            widths.append(min(w, n_hidden - total))
+            total += widths[-1]
+        last = widths[-1] if widths else 1
+        while total < n_hidden:
+            widths.append(min(last, n_hidden - total))
+            total += widths[-1]
+        return tuple(widths)
+    g = max(int(group_size), 1)
+    return tuple(min(g, n_hidden - s) for s in range(0, n_hidden, g))
+
+
 def compile_tasks(methods: Sequence[str], *, n_blobs: int = 0,
-                  group_size: int = 1, cross: bool = False) -> List[Task]:
+                  group_size=1, cross: bool = False) -> List[Task]:
     """Compile a per-layer method assignment into the ordered task graph.
 
     List order encodes per-stream priority (paper §4.1): the IO stream
@@ -116,7 +142,12 @@ def compile_tasks(methods: Sequence[str], *, n_blobs: int = 0,
     compute stream runs the recompute prefix from t=0, then projections
     in fetch order, then the cross projection. A projection group
     depends on *all* of its members' fetches; with ``group_size=1`` this
-    degenerates exactly to the per-layer graph."""
+    degenerates exactly to the per-layer graph.
+
+    ``group_size`` is either a uniform width (int) or an explicit
+    partition — a tuple of widths, the fetch-aligned non-uniform form
+    (small leading groups so projection starts the moment the first
+    stripe lands, wide tail groups to amortize dispatch)."""
     tasks: List[Task] = []
     io_of: Dict[int, int] = {}
     hidden_layers = [i for i, m in enumerate(methods) if m == "hidden"]
@@ -135,9 +166,10 @@ def compile_tasks(methods: Sequence[str], *, n_blobs: int = 0,
     for i, m in enumerate(methods):
         if m == "recompute":
             tasks.append(Task("recompute", i))
-    g = max(int(group_size), 1)
-    for s in range(0, len(hidden_layers), g):
-        grp = tuple(hidden_layers[s:s + g])
+    s = 0
+    for w in group_widths(group_size, len(hidden_layers)):
+        grp = tuple(hidden_layers[s:s + w])
+        s += w
         deps = tuple(io_of[i] for i in grp)
         tasks.append(Task("project", grp[0], dep=deps[-1], layers=grp,
                           deps=deps))
@@ -172,13 +204,18 @@ def task_duration(task: Task, times: Sequence[MethodTimes],
 def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
            order: Optional[Sequence[int]] = None,
            dispatch_overhead: float = 0.0,
-           cross_times: Optional[CrossTimes] = None):
+           cross_times: Optional[CrossTimes] = None,
+           durations: Optional[Dict[int, float]] = None):
     """Two-stream virtual replay of ``tasks`` in ``order`` → Timeline.
 
     Each stream is serial; a compute task with deps starts no earlier
     than the completion of ALL its deps on the IO stream. ``order``
     defaults to list order (the compiled priority); the executor passes
-    the order it actually ran."""
+    the order it actually ran. ``durations`` overrides individual task
+    durations (task index → seconds) with *measured* values — the
+    executor's observed timeline replays the same graph under what each
+    task actually took, so predicted-vs-measured makespan error is a
+    like-for-like comparison."""
     from repro.core.pipeline import Timeline
     if order is None:
         order = range(len(tasks))
@@ -186,7 +223,10 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
     io_t = comp_t = io_busy = comp_busy = 0.0
     for idx in order:
         t = tasks[idx]
-        dur = task_duration(t, times, dispatch_overhead, cross_times)
+        if durations is not None and idx in durations:
+            dur = durations[idx]
+        else:
+            dur = task_duration(t, times, dispatch_overhead, cross_times)
         if t.stream == "io":
             io_t += dur
             io_busy += dur
@@ -201,11 +241,12 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
     return Timeline(max(io_t, comp_t), io_busy, comp_busy, io_t, comp_t)
 
 
-def _cross_times_at(cfg, hw, dtype_bytes: int,
-                    enc_len: int) -> Optional[CrossTimes]:
+def _cross_times_at(cfg, hw, dtype_bytes: int, enc_len: int, *,
+                    profile=None, io_streams: int = 1)\
+        -> Optional[CrossTimes]:
     if not enc_len:
         return None
-    tms = [method_times(c, hw)
+    tms = [method_times(c, hw, profile=profile, io_streams=io_streams)
            for c in layer_costs(cfg, int(enc_len), dtype_bytes)]
     return CrossTimes(io=tms[0].io_h, compute=sum(t.c_h for t in tms))
 
@@ -216,37 +257,99 @@ def cross_restore_times(mgr, enc_len: int) -> Optional[CrossTimes]:
     ``enc_len`` field and fall back to the paper's zero-cost blob
     model). IO: one (S_enc, D) blob; compute: the K,V projection of
     that blob for every decoder layer."""
-    return _cross_times_at(mgr.cfg, mgr.hw, mgr.dtype_bytes, enc_len)
+    return _cross_times_at(mgr.cfg, mgr.hw, mgr.dtype_bytes, enc_len,
+                           profile=getattr(mgr, "profile", None),
+                           io_streams=getattr(mgr, "io_streams", 1))
 
 
 GROUP_SIZE_CANDIDATES = (1, 2, 4, 8)
 
 
+def fetch_aligned_partition(methods: Sequence[str],
+                            times: Sequence[MethodTimes], *,
+                            dispatch_overhead: float = 0.0)\
+        -> Tuple[int, ...]:
+    """Group boundaries at fetch-completion times (ROADMAP: "non-uniform
+    groups aligned to fetch completions — the open half of group-size
+    tuning").
+
+    A projection group cannot start before its LAST member's hidden
+    fetch lands, so a wide first group leaves the compute stream idle
+    for the whole fetch ramp while a width-1 tail pays dispatch overhead
+    per layer. The optimal shape is non-uniform: boundaries placed where
+    the fetch stream has just caught up — small leading groups, wide
+    tail groups. Exact O(n²) DP over the hidden layers: ``f(j)`` =
+    earliest compute-stream completion of the first ``j`` projections,
+    with fetch ``j`` landing at the io_h prefix sum and the compute
+    stream starting busy for the recompute prefix (which replay runs
+    before any projection)."""
+    hidden = [i for i, m in enumerate(methods) if m == "hidden"]
+    n = len(hidden)
+    if n <= 1:
+        return (1,) * n
+    fetch_done = [0.0] * (n + 1)            # io_h prefix completion times
+    for j, li in enumerate(hidden):
+        fetch_done[j + 1] = fetch_done[j] + times[li].io_h
+    busy0 = sum(times[li].c_token + dispatch_overhead
+                for li, m in enumerate(methods) if m == "recompute")
+    c_h = [times[li].c_h for li in hidden]
+    f = [0.0] * (n + 1)
+    parent = [0] * (n + 1)
+    f[0] = busy0
+    for j in range(1, n + 1):
+        best = None
+        proj = 0.0
+        for i in range(j - 1, -1, -1):      # group = hidden[i:j]
+            proj += c_h[i]
+            t = max(f[i], fetch_done[j]) + dispatch_overhead + proj
+            if best is None or t < best:
+                best, parent[j] = t, i
+        f[j] = best
+    widths: List[int] = []
+    j = n
+    while j > 0:
+        widths.append(j - parent[j])
+        j = parent[j]
+    return tuple(reversed(widths))
+
+
 def choose_group_size(cfg, hw, n_tokens: int, methods: Sequence[str], *,
                       dtype_bytes: int = 2, n_blobs: int = 0,
-                      cross: bool = False, enc_len: int = 0) -> int:
+                      cross: bool = False, enc_len: int = 0,
+                      profile=None, io_streams: int = 1,
+                      fetch_aligned: bool = False):
     """Auto group-size planning (ROADMAP "restoration group-size
     tuning", planning half): replay the grouped task graph over the
-    hardware profile for g ∈ {1, 2, 4, 8, L} and take the makespan
-    argmin — the same group-aware cost model the executor's timeline and
-    ``capacity.restore_makespan`` use, so the planner and the bake-off
-    metric cannot disagree. Ties prefer the larger group (equal modeled
-    makespan, strictly fewer real device dispatches).
+    hardware profile for g ∈ {1, 2, 4, 8, L} — plus, with
+    ``fetch_aligned``, the non-uniform fetch-completion partition — and
+    take the makespan argmin. The same group-aware cost model the
+    executor's timeline and ``capacity.restore_makespan`` use, so the
+    planner and the bake-off metric cannot disagree. Ties prefer fewer
+    groups (equal modeled makespan, strictly fewer real device
+    dispatches). Returns an int (uniform width) or a tuple of widths
+    (non-uniform partition).
 
-    The choice is computed at the ``s_bucket`` of ``n_tokens`` (and of
+    ``profile``/``io_streams`` price the replay with measured rates and
+    the current restore multiplicity — the self-calibrating half. The
+    choice is computed at the ``s_bucket`` of ``n_tokens`` (and of
     ``enc_len``), NOT the exact lengths: the compiled projection shape
     is ``(G_pad, S_bucket, D)``, so every session in a bucket must pick
-    the same width or the auto knob would reintroduce the per-session
+    the same plan or the auto knob would reintroduce the per-session
     recompiles the bucketing exists to prevent (DESIGN.md §10)."""
     n_hidden = sum(1 for m in methods if m == "hidden")
     if n_hidden <= 1:
         return 1
     n_bucket = s_bucket(max(int(n_tokens), 1))
-    times = [method_times(c, hw)
+    times = [method_times(c, hw, profile=profile, io_streams=io_streams)
              for c in layer_costs(cfg, n_bucket, dtype_bytes)]
-    cross_times = (_cross_times_at(cfg, hw, dtype_bytes, s_bucket(enc_len))
+    cross_times = (_cross_times_at(cfg, hw, dtype_bytes, s_bucket(enc_len),
+                                   profile=profile, io_streams=io_streams)
                    if cross and enc_len else None)
     overhead = getattr(hw, "dispatch_overhead", 0.0)
+    if profile is not None:
+        measured = profile.dispatch_overhead()
+        if measured is not None:
+            overhead = measured
     cands = sorted({g for g in GROUP_SIZE_CANDIDATES if g < n_hidden}
                    | {n_hidden})
 
@@ -256,7 +359,17 @@ def choose_group_size(cfg, hw, n_tokens: int, methods: Sequence[str], *,
         return replay(tasks, times, dispatch_overhead=overhead,
                       cross_times=cross_times).makespan
 
-    return min(cands, key=lambda g: (makespan(g), -g))
+    best = min(cands, key=lambda g: (makespan(g), -g))
+    if not fetch_aligned:
+        return best
+    part = fetch_aligned_partition(methods, times,
+                                   dispatch_overhead=overhead)
+    widths = set(part)
+    if len(widths) == 1:                 # degenerate partition is uniform
+        part = widths.pop()
+        return part if makespan(part) < makespan(best) else best
+    # prefer the uniform plan on ties: same modeled makespan, simpler
+    return part if makespan(part) < makespan(best) else best
 
 
 # ----------------------------------------------------- hidden-state codec
@@ -586,22 +699,39 @@ class RestorationExecutor:
                             if self.has_cross else None)
         gs = mgr.resolve_group_size(self.n_eff, self.methods,
                                     enc_len=self.enc_len)
-        self.group_size = max(int(gs), 1)
+        # int = uniform width; tuple = fetch-aligned non-uniform partition
+        self.group_size = (tuple(int(w) for w in gs)
+                           if isinstance(gs, (tuple, list))
+                           else max(int(gs), 1))
         self.pack: Optional[RestoreParamPack] = mgr.param_pack(params)
         # stable padded group width: every group in this restore uploads
-        # and projects the same (G_pad, S_bucket, D) shape, so a run
-        # compiles at most one projection per (bucket, codec)
+        # and projects the same (G_pad, S_bucket, D) shape — for a
+        # non-uniform partition that is the WIDEST group's width — so a
+        # run compiles at most one projection per (bucket, codec)
         n_attn_hidden = sum(1 for i, m in enumerate(self.methods)
                             if m == "hidden" and i in self._row_of)
-        self._g_pad = min(self.group_size, max(n_attn_hidden, 1))
+        max_w = (max(self.group_size) if isinstance(self.group_size, tuple)
+                 else self.group_size)
+        self._g_pad = min(max_w, max(n_attn_hidden, 1))
+        # calibration inputs: the manager's measured profile (rates +
+        # dispatch overhead, when sampled) and the engine-reported IO
+        # multiplicity price this executor's virtual timeline the same
+        # way the planner priced its schedule
+        self.profile = getattr(mgr, "profile", None)
+        self.io_streams = max(int(getattr(mgr, "io_streams", 1)), 1)
         self.dispatch_overhead = getattr(mgr.hw, "dispatch_overhead", 0.0)
+        if self.profile is not None:
+            measured = self.profile.dispatch_overhead()
+            if measured is not None:
+                self.dispatch_overhead = measured
         self.tasks = compile_tasks(self.methods,
                                    n_blobs=adapter.n_state_blobs,
                                    group_size=self.group_size,
                                    cross=self.has_cross)
-        self.times = [method_times(c, mgr.hw)
-                      for c in layer_costs(mgr.cfg, self.n_eff,
-                                           mgr.dtype_bytes)]
+        self.costs = layer_costs(mgr.cfg, self.n_eff, mgr.dtype_bytes)
+        self.times = [method_times(c, mgr.hw, profile=self.profile,
+                                   io_streams=self.io_streams)
+                      for c in self.costs]
         self.executed: List[int] = []
         self._done = [False] * len(self.tasks)
         # event-driven stream interleaving state
@@ -631,6 +761,23 @@ class RestorationExecutor:
         self.project_wall = 0.0
         self.dispatch_count = 0
         self._enc_out: Optional[np.ndarray] = None
+        # online profiling (DESIGN.md §13): per-task observed durations.
+        # IO tasks read the striped store's accumulated service time
+        # (virtual seconds on SimulatedSSD, nothing on plain DRAM);
+        # compute tasks are wall-clocked, skipping any call that traced
+        # (compile time is not dispatch time). Each sample is folded
+        # into mgr.profile and kept here for ``measured_timeline``.
+        self.observed: Dict[int, float] = {}
+        self._bucket = s_bucket(max(self.n_eff, 1))
+        self._enc_bucket = s_bucket(self.enc_len) if self.enc_len else 0
+        n_timed = getattr(mgr.store, "n_timed_devices", None)
+        self._n_timed = n_timed() if n_timed is not None else 0
+        # the plan this graph was compiled under, for the engine's
+        # predicted-vs-measured gauge (list order == compiled priority)
+        self.predicted_makespan = replay(
+            self.tasks, self.times,
+            dispatch_overhead=self.dispatch_overhead,
+            cross_times=self.cross_times).makespan
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -656,6 +803,18 @@ class RestorationExecutor:
         return replay(self.tasks, self.times, order,
                       dispatch_overhead=self.dispatch_overhead,
                       cross_times=self.cross_times)
+
+    def measured_timeline(self):
+        """``timeline()`` with each task's duration replaced by what it
+        was *observed* to take (modeled values fill unmeasured tasks) —
+        the "measured" side of the engine's predicted-vs-measured
+        makespan gauge."""
+        order = self.executed + [i for i in range(len(self.tasks))
+                                 if not self._done[i]]
+        return replay(self.tasks, self.times, order,
+                      dispatch_overhead=self.dispatch_overhead,
+                      cross_times=self.cross_times,
+                      durations=self.observed)
 
     # ------------------------------------------------------------ stepping
     def _ready(self, idx: int) -> bool:
@@ -720,9 +879,67 @@ class RestorationExecutor:
             start = (self._comp_clock if not t.all_deps else
                      max(self._comp_clock, self._io_clock))
             self._comp_clock = max(self._comp_clock, start) + dur
-        getattr(self, "_exec_" + t.kind)(t)
+        if self.profile is not None:
+            self._run_profiled(idx, t)
+        else:
+            getattr(self, "_exec_" + t.kind)(t)
         self._done[idx] = True
         self.executed.append(idx)
+
+    def _task_work(self, t: Task) -> float:
+        """Work units of one task: bytes for IO kinds, FLOPs for compute
+        kinds — the x-axis of the profiler's time fits, on the same cost
+        basis ``method_times`` predicts with."""
+        if t.kind == "io_h":
+            return self.costs[t.layer].io_hidden
+        if t.kind == "io_kv":
+            c = self.costs[t.layer]
+            return c.io_kv or c.io_state
+        if t.kind == "recompute":
+            return self.costs[t.layer].c_token
+        if t.kind == "project":
+            return sum(self.costs[li].c_hidden for li in t.members
+                       if self._is_attn(li))
+        if t.kind in ("io_enc", "project_cross") and self.enc_len:
+            costs = layer_costs(self.mgr.cfg, self.enc_len,
+                                self.mgr.dtype_bytes)
+            return (costs[0].io_hidden if t.kind == "io_enc"
+                    else sum(c.c_hidden for c in costs))
+        return 0.0
+
+    def _run_profiled(self, idx: int, t: Task) -> None:
+        """Execute one task with its real duration observed and folded
+        into the manager's ``MeasuredProfile``.
+
+        IO tasks: the striped store accumulates per-device read service
+        time; the delta across this task, divided by the device count
+        (stripes are read in parallel), is the contention-free stream
+        seconds the cost model predicts. Plain DRAM backends accumulate
+        nothing and record nothing. Compute tasks: wall seconds, thrown
+        away when the call traced (JIT compile time is not dispatch
+        time — folding it in would poison the overhead fit)."""
+        bucket = (self._enc_bucket
+                  if t.kind in ("io_enc", "project_cross")
+                  else self._bucket)
+        if t.kind in IO_KINDS:
+            base = (self.mgr.store.read_service_total()
+                    if self._n_timed else 0.0)
+            getattr(self, "_exec_" + t.kind)(t)
+            if self._n_timed:
+                delta = ((self.mgr.store.read_service_total() - base)
+                         / self._n_timed)
+                if delta > 0.0:
+                    self.observed[idx] = delta
+                    self.profile.record(t.kind, bucket,
+                                        self._task_work(t), delta)
+            return
+        traces = projection_trace_count()
+        t0 = time.perf_counter()
+        getattr(self, "_exec_" + t.kind)(t)
+        wall = time.perf_counter() - t0
+        if wall > 0.0 and projection_trace_count() == traces:
+            self.observed[idx] = wall
+            self.profile.record(t.kind, bucket, self._task_work(t), wall)
 
     def _is_attn(self, layer: int) -> bool:
         return layer in self._row_of

@@ -84,8 +84,15 @@ def _evaluate(counts_per_class, class_times, class_ids) -> Tuple[float, float]:
 
 def solve(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile, *,
           dtype_bytes: int = 2, allow_recompute: bool = True,
-          allow_kv: bool = True, force_hidden: bool = False) -> Schedule:
-    """Exact min-max schedule over (possibly heterogeneous) layers."""
+          allow_kv: bool = True, force_hidden: bool = False,
+          profile=None, io_streams: int = 1) -> Schedule:
+    """Exact min-max schedule over (possibly heterogeneous) layers.
+
+    ``profile`` (a ``MeasuredProfile``) substitutes observed rates for the
+    static hardware numbers; ``io_streams`` prices N-way concurrent
+    restores sharing the host link (IO legs stretch, compute does not), so
+    under contention the split shifts layers from IO methods toward
+    recompute."""
     costs = layer_costs(cfg, n_tokens, dtype_bytes)
     # group identical layers into classes
     class_of: List[int] = []
@@ -98,7 +105,9 @@ def solve(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile, *,
         else:
             class_costs.append(c)
             class_of.append(len(class_costs) - 1)
-    class_times = [method_times(c, hw) for c in class_costs]
+    class_times = [method_times(c, hw, profile=profile,
+                                io_streams=io_streams)
+                   for c in class_costs]
     n_per_class = [class_of.count(i) for i in range(len(class_costs))]
 
     # SSM classes have no KV-offload analog with io==0; their "kv" method is

@@ -63,9 +63,18 @@ def main() -> None:
                         "credit per queued engine step (anti-starvation)")
     p.add_argument("--restore-group-size", default="8",
                    help="projection layers per stacked restoration "
-                        "dispatch (1 = per-layer; see DESIGN.md §10), or "
+                        "dispatch (1 = per-layer; see DESIGN.md §10), "
                         "'auto' to pick the restore_makespan argmin over "
-                        "{1, 2, 4, 8, L} per restore")
+                        "{1, 2, 4, 8, L} + the fetch-aligned partition "
+                        "per restore, or 'fetch' to force fetch-aligned "
+                        "non-uniform group boundaries (DESIGN.md §13)")
+    p.add_argument("--hw-profile", default=None, metavar="PATH",
+                   help="online scheduler calibration (DESIGN.md §13): "
+                        "load a MeasuredProfile JSON from PATH if it "
+                        "exists, fold every restore's observed task "
+                        "times into it, re-plan from it, and save it "
+                        "back on exit — restores converge to measured "
+                        "hardware behavior instead of datasheet numbers")
     p.add_argument("--enc-seq", type=int, default=None,
                    help="enc-dec models: encoder positions per slot in "
                         "the paired self/cross cache (default max-seq)")
@@ -77,7 +86,7 @@ def main() -> None:
                         "dedup / session forking")
     args = p.parse_args()
     group_size = (args.restore_group_size
-                  if args.restore_group_size == "auto"
+                  if args.restore_group_size in ("auto", "fetch")
                   else int(args.restore_group_size))
 
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -91,8 +100,15 @@ def main() -> None:
     cold = make_array("dram", args.ssds) if args.budget_kb else None
     store = ChunkStore(make_array("ssd", args.ssds), chunk_tokens=64,
                        cold_devices=cold)
+    measured = None
+    if args.hw_profile:
+        import os
+        from repro.core.profiler import MeasuredProfile
+        measured = (MeasuredProfile.load(args.hw_profile)
+                    if os.path.exists(args.hw_profile)
+                    else MeasuredProfile())
     mgr = HCacheManager(model, store, hw=PROFILES[args.profile],
-                        restore_group_size=group_size)
+                        restore_group_size=group_size, profile=measured)
     capacity = (CapacityManager(mgr, host_budget_bytes=args.budget_kb * 1024)
                 if args.budget_kb else None)
     admission = (RestoreCostAwareAdmission(aging=args.admission_aging)
@@ -150,6 +166,18 @@ def main() -> None:
               f"{m.cow_copies} CoW copies, pages shared/private "
               f"{m.shared_pages}/{m.private_pages}, host dedup "
               f"{m.dedup_host_bytes / 1e6:.2f} MB, forks {m.forks}")
+    if m.restore_bubble_n:
+        print(f"scheduler calibration: observed bubble "
+              f"{m.restore_bubble_mean:.1%} over {m.restore_bubble_n} "
+              f"restores, planned-vs-measured makespan error "
+              f"{m.makespan_err_mean:.1%}, peak restore concurrency "
+              f"{m.io_streams_peak} streams")
+    if measured is not None:
+        counts = ", ".join(f"{k}={v}"
+                           for k, v in measured.sample_counts().items())
+        print(f"hw profile: epoch {measured.epoch}, samples "
+              f"[{counts or 'none'}] -> {args.hw_profile}")
+        measured.save(args.hw_profile)
     if capacity is not None and capacity.actions:
         print("capacity ladder actions:", capacity.actions)
     print("recoverable sessions:", engine.recoverable_sessions())

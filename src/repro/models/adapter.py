@@ -289,10 +289,13 @@ class HybridAdapter(FamilyAdapter):
 # --------------------------------------------------------------- encdec
 class EncDecAdapter(FamilyAdapter):
     kind = "encdec"
-    # unchunked: the encoder pass and the cross-KV projection run once
-    # per residency; the decoder prompt rides the same call. Resume /
-    # multi-round prefill (hist > 0) instead attends over the restored
-    # self-KV history and the cross state already sitting in the view.
+    # chunkable: the encoder pass and the cross-KV projection run once,
+    # on the FIRST chunk of a residency (hist == 0); later chunks — and
+    # resume / multi-round prefill — attend over the self-KV history and
+    # the cross state already sitting in the view (the hist > 0 path
+    # below), so a long decoder prompt no longer monopolizes an engine
+    # step: it interleaves with the decode batch like the LM family.
+    chunkable = True
     supports_resume = True
     kv_names = ("self_k", "self_v")
     has_cross = True

@@ -128,6 +128,30 @@ class EngineMetrics:
     private_pages: int = 0              # refcount == 1 (last sample)
     dedup_host_bytes: int = 0           # host bytes sharing avoided
     forks: int = 0
+    # self-calibrating scheduler gauges (DESIGN.md §13). Per completed
+    # restore: the observed bubble fraction (idle share of the slack
+    # stream in the measured-duration replay) and the relative error of
+    # the planned makespan against the measured one. Running (sum, n)
+    # pairs, same rationale as occupancy above. profiler_samples is the
+    # MeasuredProfile's per-kind sample-count snapshot (empty when the
+    # engine runs uncalibrated).
+    restore_bubble_sum: float = 0.0
+    restore_bubble_n: int = 0
+    makespan_err_sum: float = 0.0
+    makespan_err_n: int = 0
+    io_streams_peak: int = 1            # max concurrent RESTORING slots
+    profiler_samples: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def restore_bubble_mean(self) -> float:
+        return (self.restore_bubble_sum / self.restore_bubble_n
+                if self.restore_bubble_n else 0.0)
+
+    @property
+    def makespan_err_mean(self) -> float:
+        return (self.makespan_err_sum / self.makespan_err_n
+                if self.makespan_err_n else 0.0)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -435,6 +459,10 @@ class InferenceEngine:
                 # manifest
                 ex = None
             if ex is None:
+                # this restore joins the already-RESTORING slots on the
+                # shared host link: plan it at the new multiplicity
+                # (this slot already shows RESTORING — no extra)
+                self._update_io_streams()
                 ex = self.mgr.begin_restore(self.params, sid,
                                             start_token=d)
             ex.attach_sink(ViewSink(seq.view))
@@ -646,6 +674,19 @@ class InferenceEngine:
             if ex is not None:
                 ex.prefetch_step(1)
 
+    def _update_io_streams(self, extra: int = 0) -> None:
+        """Report the restore multiplicity to the planner: how many
+        sessions are (about to be) pulling the shared host link at once.
+        ``extra`` counts a restore being placed this instant, before its
+        slot shows RESTORING."""
+        n = max(sum(1 for s in self.slots
+                    if s is not None and s.phase == Phase.RESTORING)
+                + extra, 1)
+        setter = getattr(self.mgr, "set_io_streams", None)
+        if setter is not None:
+            setter(n)
+        self.metrics.io_streams_peak = max(self.metrics.io_streams_peak, n)
+
     def _restore_step(self) -> None:
         """Advance every RESTORING session by a bounded number of pipeline
         tasks. Several sessions restore concurrently; the decode batch of
@@ -669,9 +710,34 @@ class InferenceEngine:
                     self.metrics.restore_sim_resume.append(seq.restore_sim)
                 self.metrics.restore_io_measured = max(
                     self.metrics.restore_io_measured, ex.io_measured)
+                self._record_calibration(ex)
                 seq.phase = Phase.PREFILL
         if ran:
             self.metrics.restore_steps += 1
+
+    def _record_calibration(self, ex) -> None:
+        """Scheduler-calibration gauges from one finished restore:
+        observed bubble fraction and planned-vs-measured makespan error.
+        Only meaningful when the executor observed task durations (a
+        timed store and/or calibration on)."""
+        if not getattr(ex, "observed", None):
+            return
+        m = self.metrics
+        tl = ex.measured_timeline()
+        if tl.makespan > 0:
+            # the bottleneck stream's bubble is ~0 by construction; the
+            # slack stream's idle share is the bubble the scheduler
+            # exists to close
+            m.restore_bubble_sum += max(tl.io_bubble, tl.compute_bubble)
+            m.restore_bubble_n += 1
+            predicted = getattr(ex, "predicted_makespan", 0.0)
+            if predicted > 0:
+                m.makespan_err_sum += (abs(predicted - tl.makespan)
+                                       / tl.makespan)
+                m.makespan_err_n += 1
+        profile = getattr(self.mgr, "profile", None)
+        if profile is not None:
+            m.profiler_samples = profile.sample_counts()
 
     # -------------------------------------------------------------- prefill
     def _prefill_step(self, seq: SequenceState) -> None:
@@ -813,6 +879,9 @@ class InferenceEngine:
 
     def step(self) -> None:
         self.step_count += 1
+        # refresh the planner's view of restore contention (completed
+        # restores lower the multiplicity; admission below may raise it)
+        self._update_io_streams()
         self._admit()
         self._maybe_preempt()
         self._restore_step()

@@ -621,3 +621,21 @@ class ChunkStore:
             if isinstance(d, SimulatedSSD):
                 done = max(done, d.read_completion())
         return done
+
+    def n_timed_devices(self) -> int:
+        """Devices with a read-service clock (SimulatedSSD), hot + cold —
+        0 means reads carry no timing (plain DRAM) and the restoration
+        profiler has no IO signal to fold."""
+        return sum(1 for d in self._all_devices()
+                   if isinstance(d, SimulatedSSD))
+
+    def read_service_total(self) -> float:
+        """Accumulated per-device read service seconds across all timed
+        devices. The restoration profiler snapshots this around each IO
+        task: the delta, divided by the device count (stripes are served
+        in parallel), is the task's observed IO-stream seconds — queueing
+        behind other sessions' reads is excluded, so the sample is the
+        contention-free service time the cost model's 1-stream rate
+        predicts."""
+        return sum(d.read_time_total for d in self._all_devices()
+                   if isinstance(d, SimulatedSSD))

@@ -230,7 +230,7 @@ def test_engine_has_no_family_branches():
                    "supports_recompute")),
     ("falcon-mamba-7b", ()),
     ("zamba2-2.7b", ()),
-    ("whisper-medium", ("supports_resume",)),
+    ("whisper-medium", ("chunkable", "supports_resume")),
 ])
 def test_adapter_capability_matrix(arch, expect, rules):
     cfg = reduced_for_smoke(get_arch(arch))
@@ -243,6 +243,26 @@ def test_adapter_capability_matrix(arch, expect, rules):
 
 
 # ------------------------------------------- hybrid unchunked regression
+def test_encdec_chunked_prefill_matches_whole_prompt(setup):
+    """Chunked decoder-prompt prefill (DESIGN.md §13 satellite): the
+    encoder runs once on the FIRST chunk, later chunks attend to the
+    already-resident cross context with the right position offset —
+    greedy output is byte-identical to a single-chunk prefill and to
+    the direct path."""
+    cfg, model, params = setup
+    prompt = (np.arange(19, dtype=np.int32) * 3) % cfg.vocab_size
+    frames = _frames(cfg, 16, seed=11)
+    outs = {}
+    for chunk in (4, 64):                 # 19 tokens: 5 chunks vs 1
+        eng, _ = fresh_engine(setup, prefill_chunk=chunk)
+        eng.submit(Request("c", prompt, max_new_tokens=6, frames=frames))
+        eng.run()
+        outs[chunk] = eng.result("c")
+        eng.close()
+    assert outs[4] == outs[64]
+    assert outs[4] == direct_greedy(model, params, frames, prompt, 6)
+
+
 def test_hybrid_prefill_ignores_chunk_knob(rules):
     """Hybrid prefill must stay unchunked (recurrent conv/ssm states are
     computed in one scan with no carry-in): with prefill_chunk smaller

@@ -1,0 +1,370 @@
+"""Self-calibrating bubble-free scheduler (DESIGN.md §13): online
+profiler fit/persistence, measured-rate substitution in the cost model,
+(L_H, L_KV, L_RE) convergence under a skewed synthetic clock, contention
+pricing monotonicity, fetch-aligned non-uniform restore groups
+(byte-identity on both cache backends incl. restore-skip), and
+plan-cache invalidation (the stale-plan regression)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.arch import reduced_for_smoke
+from repro.config.hardware import PAPER_A100
+from repro.configs import get_arch
+from repro.core.capacity import restore_makespan
+from repro.core.cost_model import MethodTimes, layer_costs, method_times
+from repro.core.hcache import HCacheManager
+from repro.core.profiler import MeasuredProfile
+from repro.core.restoration import (CacheAssembler, compile_tasks,
+                                    fetch_aligned_partition, group_widths,
+                                    replay, s_bucket)
+from repro.core.scheduler import solve
+from repro.models import Model
+from repro.models.module import split
+from repro.serving import InferenceEngine, Request
+from repro.serving.kv_cache import ContiguousBackend, PagedBackend, ViewSink
+from repro.storage import ChunkStore, make_array
+
+B, S = 1, 40
+
+
+def build(arch, rules):
+    cfg = reduced_for_smoke(get_arch(arch))
+    model = Model(cfg, rules=rules, model_axis=1, dtype=jnp.float32,
+                  remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def manager(model, *, group_size=1, profile=None, device="dram",
+            schedule_override="hidden"):
+    store = ChunkStore(make_array(device, 4), chunk_tokens=16)
+    return HCacheManager(model, store, hw=PAPER_A100,
+                         schedule_override=schedule_override,
+                         store_dtype=np.float32,
+                         restore_group_size=group_size, profile=profile)
+
+
+def save_session(cfg, model, params, mgr, sid="sess", n_tokens=S, key=1):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, n_tokens), 0,
+                              cfg.vocab_size)
+    pre = model.prefill(params, {"tokens": toks}, capture_hidden=True)
+    mgr.save_prefill(sid, np.asarray(toks[0]), pre)
+    return toks, pre
+
+
+# ---------------------------------------------------------------- profiler
+def test_profiler_fit_recovers_overhead_and_rate():
+    """Two buckets on an exact line seconds = a + b·work recover the
+    intercept (dispatch overhead) and slope (marginal rate)."""
+    a, b = 1e-4, 9e-10
+    p = MeasuredProfile()
+    for work in (1e6, 2e6, 4e6):
+        p.record("project", s_bucket(int(work)), work, a + b * work)
+    assert p.rate("project") == pytest.approx(b, rel=1e-6)
+    assert p.overhead("project") == pytest.approx(a, rel=1e-6)
+    assert p.dispatch_overhead() == pytest.approx(a, rel=1e-6)
+    assert p.predict("project", 3e6) == pytest.approx(a + b * 3e6, rel=1e-6)
+    # unmeasured kinds stay unknown (static model keeps pricing them)
+    assert p.rate("io_kv") is None
+    assert p.dispatch_overhead() is not None and p.overhead("io_h") is None
+
+
+def test_profiler_single_bucket_through_origin():
+    """One bucket cannot separate overhead from rate: degrade to a
+    through-origin rate instead of extrapolating a fake intercept."""
+    p = MeasuredProfile()
+    p.record("io_h", 64, 1e6, 2e-3)
+    assert p.rate("io_h") == pytest.approx(2e-9)
+    assert p.overhead("io_h") == 0.0
+
+
+def test_profiler_roundtrip_and_epoch(tmp_path):
+    """JSON persistence preserves the fit and the epoch; the epoch stops
+    bumping once observations stop drifting (converged profile)."""
+    p = MeasuredProfile()
+    for i in range(3):
+        p.record("io_h", 1024, 1e6, 1e-3)
+        p.record("io_h", 2048, 2e6, 2e-3)
+    early = p.epoch
+    for i in range(10):
+        p.record("io_h", 1024, 1e6, 1e-3)
+        p.record("io_h", 2048, 2e6, 2e-3)
+    assert p.epoch == early, "identical samples kept bumping the epoch"
+    path = str(tmp_path / "hw.json")
+    p.save(path)
+    q = MeasuredProfile.load(path)
+    assert q.epoch == p.epoch
+    assert q.rate("io_h") == pytest.approx(p.rate("io_h"))
+    assert q.sample_counts() == p.sample_counts()
+    # a genuinely different machine drifts the reloaded profile
+    for i in range(4):
+        q.record("io_h", 1024, 1e6, 5e-3)
+    assert q.epoch > p.epoch
+
+
+# -------------------------------------------------- cost model substitution
+def test_method_times_measured_rates_replace_datasheet():
+    cfg = get_arch("llama2-13b")
+    cost = layer_costs(cfg, 2048)[0]
+    p = MeasuredProfile()
+    r_io, r_proj = 3e-10, 2e-14
+    p.record("io_h", 2048, 1e6, 1e6 * r_io)
+    p.record("project", 2048, 1e9, 1e9 * r_proj)
+    static = method_times(cost, PAPER_A100)
+    cal = method_times(cost, PAPER_A100, profile=p)
+    assert cal.io_h == pytest.approx(cost.io_hidden * r_io)
+    assert cal.c_h == pytest.approx(cost.c_hidden * r_proj)
+    # kinds without samples keep the static model
+    assert cal.io_kv == static.io_kv
+    assert cal.c_token == static.c_token
+
+
+def test_method_times_contention_scales_io_only():
+    """N-way restore multiplicity stretches the shared-link IO legs
+    N-fold; per-chip compute legs are unaffected."""
+    cfg = get_arch("llama2-13b")
+    cost = layer_costs(cfg, 2048)[0]
+    t1 = method_times(cost, PAPER_A100, io_streams=1)
+    t4 = method_times(cost, PAPER_A100, io_streams=4)
+    assert t4.io_h == pytest.approx(4 * t1.io_h)
+    assert t4.io_kv == pytest.approx(4 * t1.io_kv)
+    assert t4.c_h == t1.c_h and t4.c_token == t1.c_token
+
+
+def test_solve_converges_under_skewed_clock():
+    """Skewed synthetic clock: the machine's storage is 12.5x slower
+    than the datasheet. Feeding two rounds of observations priced under
+    the TRUE hardware makes solve() under the WRONG static profile
+    produce the true machine's split — calibration converges within a
+    few restores."""
+    cfg = get_arch("llama2-13b")
+    guess = PAPER_A100
+    true_hw = PAPER_A100.derated(storage=0.08)
+    n = 2048
+    sched_static = solve(cfg, n, guess)
+    sched_true = solve(cfg, n, true_hw)
+    assert sched_static.counts != sched_true.counts, \
+        "skew too small to matter — test would be vacuous"
+    p = MeasuredProfile()
+    for _ in range(2):                       # "a few restores"
+        for bucket in (1024, 2048):
+            c = layer_costs(cfg, bucket)[0]
+            t = method_times(c, true_hw)
+            p.record("io_h", bucket, c.io_hidden, t.io_h)
+            p.record("io_kv", bucket, c.io_kv, t.io_kv)
+            p.record("project", bucket, c.c_hidden, t.c_h)
+            p.record("recompute", bucket, c.c_token, t.c_token)
+    sched_cal = solve(cfg, n, guess, profile=p)
+    assert sched_cal.counts == sched_true.counts
+    assert sched_cal.makespan == pytest.approx(sched_true.makespan,
+                                               rel=1e-3)
+
+
+def test_solve_contention_shifts_split_from_io():
+    """Under 4-way contention the IO legs stretch and the split moves
+    layers off the IO methods (toward recompute), never onto them."""
+    cfg = get_arch("llama2-13b")
+    s1 = solve(cfg, 2048, PAPER_A100, io_streams=1)
+    s4 = solve(cfg, 2048, PAPER_A100, io_streams=4)
+    io1 = s1.counts["hidden"] + s1.counts["kv"]
+    io4 = s4.counts["hidden"] + s4.counts["kv"]
+    assert io4 <= io1
+    assert s4.makespan > s1.makespan
+
+
+# ------------------------------------------------------ contention pricing
+def test_restore_makespan_monotonic_in_io_streams(rules):
+    """Admission/eviction pricing: the same session costs strictly more
+    to restore while other sessions share the host link."""
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model)
+    save_session(cfg, model, params, mgr)
+    spans = []
+    for m in (1, 2, 4):
+        mgr.set_io_streams(m)
+        spans.append(restore_makespan(mgr, S))
+    assert spans[0] < spans[1] < spans[2]
+    mgr.saver.close()
+
+
+# ----------------------------------------------- plan-cache invalidation
+def test_hw_swap_invalidates_plan_cache(rules):
+    """The stale-plan regression: re-pointing ``mgr.hw`` at different
+    hardware must flush the memoized schedule/group plans — before the
+    fix the old argmin survived the swap and every later restore ran a
+    plan priced for the wrong machine."""
+    cfg, model, params = build("llama2-7b", rules)
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        store_dtype=np.float32, restore_group_size="auto")
+    plan_fast = mgr.plan(S)
+    mgr.resolve_group_size(S, plan_fast.methods)
+    assert mgr._plans and mgr._group_plans
+    # a machine whose GEMMs are ~10^6x slower: recompute becomes the
+    # worst method and the replan must flip the split to pure IO
+    mgr.hw = PAPER_A100.derated(flops=1e-6)
+    assert not mgr._plans and not mgr._group_plans, \
+        "hw swap left stale plans memoized"
+    plan_slow = mgr.plan(S)
+    assert plan_slow.counts != plan_fast.counts
+    assert plan_slow.counts["recompute"] == 0
+    mgr.saver.close()
+
+
+def test_profile_epoch_keys_plan_cache(rules):
+    """An epoch bump (fit drift) re-plans without an explicit flush:
+    the price state is part of the memo key."""
+    cfg, model, params = build("llama2-7b", rules)
+    p = MeasuredProfile()
+    mgr = manager(model, group_size="auto", profile=p)
+    methods = ("hidden",) * cfg.n_layers
+    mgr.resolve_group_size(S, methods)
+    n0 = len(mgr._group_plans)
+    mgr.resolve_group_size(S, methods)
+    assert len(mgr._group_plans) == n0          # memoized, no churn
+    for i in range(3):                          # drift the io_h fit
+        p.record("io_h", s_bucket(S), 1e6, 1e-3 * (i + 1))
+    mgr.resolve_group_size(S, methods)
+    assert len(mgr._group_plans) == n0 + 1, \
+        "profile drift did not re-key the group plan"
+    # multiplicity is also part of the key
+    mgr.set_io_streams(4)
+    mgr.resolve_group_size(S, methods)
+    assert len(mgr._group_plans) == n0 + 2
+    mgr.saver.close()
+
+
+# -------------------------------------------- fetch-aligned partitioning
+def test_group_widths_normalization():
+    assert group_widths(4, 10) == (4, 4, 2)
+    assert group_widths(1, 3) == (1, 1, 1)
+    assert group_widths((2, 3), 10) == (2, 3, 3, 2)   # extend with last
+    assert group_widths((8, 8), 10) == (8, 2)          # clamp + truncate
+    assert group_widths(5, 0) == ()
+
+
+def test_fetch_partition_covers_and_is_optimal():
+    """The DP partition covers every hidden layer exactly once and its
+    replayed makespan is never worse than ANY uniform width (uniform
+    partitions are a subset of its search space)."""
+    methods = ["recompute"] * 2 + ["hidden"] * 10
+    times = [MethodTimes(io_h=1.0, io_kv=0.5, c_h=0.9, c_token=0.4)
+             for _ in methods]
+    ovh = 0.3
+    part = fetch_aligned_partition(methods, times, dispatch_overhead=ovh)
+    assert sum(part) == 10 and all(w >= 1 for w in part)
+
+    def makespan(g):
+        return replay(compile_tasks(tuple(methods), group_size=g),
+                      times, dispatch_overhead=ovh).makespan
+
+    best_uniform = min(makespan(g) for g in (1, 2, 4, 8, 10))
+    assert makespan(part) <= best_uniform + 1e-12
+    # with per-group overhead against a fetch ramp the optimum is
+    # genuinely non-uniform: strictly beats every uniform width
+    assert len(set(part)) > 1
+    assert makespan(part) < best_uniform
+
+
+def test_fetch_partition_compiles_to_matching_groups():
+    methods = ["hidden"] * 7 + ["kv"]
+    tasks = compile_tasks(tuple(methods), group_size=(1, 2, 4))
+    projects = [t.members for t in tasks if t.kind == "project"]
+    assert projects == [(0,), (1, 2), (3, 4, 5, 6)]
+
+
+@pytest.mark.parametrize("start", [0, 16])
+def test_nonuniform_groups_byte_identical_both_backends(start, rules):
+    """Uniform and non-uniform group plans land byte-identical KV on the
+    contiguous slot and the paged pool — including the restore-skip
+    path, where only the suffix [start, S) ships."""
+    cfg, model, params = build("llama2-7b", rules)
+    views = {}
+    for plan in (1, (1, 2, 1), "fetch"):
+        mgr = manager(model, group_size=plan)
+        save_session(cfg, model, params, mgr)
+        for backend in (ContiguousBackend(model, 2, 64),
+                        PagedBackend(model, 2, 64, block_size=8)):
+            assert backend.reserve(1, S)
+            view = backend.view(1)
+            ex = mgr.begin_restore(params, "sess", sink=ViewSink(view),
+                                   start_token=start)
+            ex.run()
+            k, v = view.gather_hist(S)
+            views[(str(plan), backend.name)] = (np.asarray(k),
+                                                np.asarray(v))
+        mgr.saver.close()
+    ref = views[("1", "contiguous")]
+    for key, (k, v) in views.items():
+        np.testing.assert_array_equal(k, ref[0], err_msg=str(key))
+        np.testing.assert_array_equal(v, ref[1], err_msg=str(key))
+
+
+def test_nonuniform_groups_zero_recompile_same_bucket(rules):
+    """Non-uniform plans pad every group to the widest width: two
+    same-bucket sessions under a tuple plan share one compiled
+    projection (the DESIGN.md §10 guarantee survives §13)."""
+    from repro.core.restoration import projection_trace_count
+    cfg, model, params = build("llama2-7b", rules)
+    mgr = manager(model, group_size=(1, 2, 1))
+    save_session(cfg, model, params, mgr, sid="a", n_tokens=20, key=1)
+    save_session(cfg, model, params, mgr, sid="b", n_tokens=28, key=2)
+    ex = mgr.begin_restore(params, "a", sink=CacheAssembler(model))
+    ex.run()
+    before = projection_trace_count()
+    ex = mgr.begin_restore(params, "b", sink=CacheAssembler(model))
+    ex.run()
+    assert projection_trace_count() == before, \
+        "non-uniform groups reintroduced per-session recompiles"
+    mgr.saver.close()
+
+
+# ------------------------------------------------- executor / engine loop
+def test_executor_records_profile_on_ssd_store(rules):
+    """A real restore over the simulated-SSD store feeds the profiler:
+    observed task durations, a measured timeline, and a predicted
+    makespan to compare against."""
+    cfg, model, params = build("llama2-7b", rules)
+    p = MeasuredProfile()
+    mgr = manager(model, profile=p, device="ssd")
+    save_session(cfg, model, params, mgr)
+    ex = mgr.begin_restore(params, "sess", sink=CacheAssembler(model))
+    ex.run()
+    assert ex.observed, "profiled executor recorded no task durations"
+    assert p.samples("io_h") > 0
+    assert ex.predicted_makespan > 0
+    tl = ex.measured_timeline()
+    assert tl.makespan > 0
+    mgr.saver.close()
+
+
+def test_engine_calibration_gauges(rules):
+    """Round-2 restore through the engine populates the calibration
+    gauges: observed bubble fraction, predicted-vs-measured makespan
+    error, peak restore concurrency, and profiler sample counts."""
+    cfg, model, params = build("llama2-7b", rules)
+    p = MeasuredProfile()
+    store = ChunkStore(make_array("ssd", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden",
+                        store_dtype=np.float32, profile=p)
+    eng = InferenceEngine(model, params, mgr, max_batch=2, max_seq=128,
+                          prefill_chunk=8)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 18).astype(np.int32)
+    eng.submit(Request("alice", prompt, max_new_tokens=4))
+    eng.run()
+    eng.submit(Request("alice",
+                       rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                       max_new_tokens=4))
+    eng.run()
+    m = eng.metrics
+    assert m.restore_bubble_n >= 1
+    assert 0.0 <= m.restore_bubble_mean <= 1.0
+    assert m.makespan_err_mean >= 0.0
+    assert m.io_streams_peak >= 1
+    assert m.profiler_samples and sum(m.profiler_samples.values()) > 0
+    assert p.samples() > 0
+    eng.close()
