@@ -1,4 +1,11 @@
-"""Self-calibrating scheduler bake-off (DESIGN.md §13).
+"""Scheduler benchmarks: the paper's Fig 12 ablation (``run``) and the
+self-calibrating bake-off (``run_sched_bench``, DESIGN.md §13).
+
+Fig 12: bubble-free scheduler — HCACHE (full) vs HCACHE-O (hidden only,
+no complementary method) vs naive hybrid (recompute+KV mix, no hidden
+states) under balanced / compute-sufficient / IO-sufficient platforms.
+
+Self-calibrating bake-off:
 
 The datasheet says the machine is a PAPER_A100; the machine actually
 delivers ~40% of the datasheet storage bandwidth, ~75% of the sustained
@@ -75,6 +82,50 @@ def _score(cfg, methods, group, true_hw, streams):
     tasks = compile_tasks(tuple(methods), group_size=group)
     tl = replay(tasks, times, dispatch_overhead=TRUE_OVERHEAD)
     return tl
+
+
+def run():
+    """Paper Fig 12 ablation (the analytic smoke suite entry)."""
+    import dataclasses
+
+    from repro.config.hardware import GB, PAPER_A100
+    from repro.configs import get_arch
+    from repro.core.pipeline import restore_timeline
+    from repro.core.scheduler import solve
+
+    settings = {
+        "balanced": PAPER_A100,
+        "compute_sufficient": dataclasses.replace(
+            PAPER_A100, flops=990e12, storage_bw=6.9 * GB),
+        "io_sufficient": dataclasses.replace(
+            PAPER_A100, flops=80e12, storage_bw=16 * 6.9 * GB),
+    }
+    rows = []
+    cfg = get_arch("llama2-13b")
+    n = 4096
+    for name, hw in settings.items():
+        full = solve(cfg, n, hw)
+        only_h = solve(cfg, n, hw, force_hidden=True)
+        # naive hybrid = scheduler WITHOUT hidden states
+        best_naive = None
+        for n_kv in range(cfg.n_layers + 1):
+            methods = (["recompute"] * (cfg.n_layers - n_kv)
+                       + ["kv"] * n_kv)
+            t = restore_timeline(cfg, n, hw, methods).makespan
+            if best_naive is None or t < best_naive[0]:
+                best_naive = (t, methods)
+        t_full = restore_timeline(cfg, n, hw, full.methods).makespan
+        t_only = restore_timeline(cfg, n, hw, only_h.methods).makespan
+        t_kv = restore_timeline(cfg, n, hw, ["kv"] * cfg.n_layers).makespan
+        rows.append((f"fig12_{name}_hcache", t_full * 1e6,
+                     f"sched={full.summary().split('|')[0].strip()}"))
+        rows.append((f"fig12_{name}_hcache_only", t_only * 1e6,
+                     f"vs_full={t_only / t_full:.2f}x"))
+        rows.append((f"fig12_{name}_naive_hybrid", best_naive[0] * 1e6,
+                     f"vs_full={best_naive[0] / t_full:.2f}x"))
+        rows.append((f"fig12_{name}_kv_offload", t_kv * 1e6,
+                     f"vs_full={t_kv / t_full:.2f}x"))
+    return emit(rows)
 
 
 def run_sched_bench(out_path: str = "BENCH_sched.json"):

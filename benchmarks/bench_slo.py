@@ -1,0 +1,382 @@
+"""Multi-tenant SLO harness (DESIGN.md §14): the front door measured
+end to end, steered vs route-blind at equal resources.
+
+One seeded synthetic tenant mix, Poisson arrivals, served twice through
+the exact ``FrontDoor.handle`` request path the HTTP binding exposes
+(no sockets — the handler layer is the product):
+
+  * **multi-round chat** — conversations that return every round with
+    their growing transcript. Half pass the ``conversation_id`` back
+    (exact router hit), half only resend the transcript (the router must
+    recover them by prefix similarity);
+  * **shared-system-prompt RAG** — one-shot requests over a common
+    retrieval preamble plus a unique question (placement/displacement
+    load on the slot table);
+  * **enc-dec audio** — whisper requests through their own engine pump
+    (frames on round 1; round 2 restores the paired self/cross state),
+    coexisting with the text tenants.
+
+Modes at EQUAL engine configuration (prefix sharing off on both — the
+delta is routing, nothing else):
+
+  * ``steered`` — ``SessionRouter(steer=True)``: exact/similarity hits
+    trim the prompt to the new suffix and the engine restores the
+    stored history (HCache restoration instead of recomputation);
+  * ``blind``   — ``SessionRouter(steer=False)``: every request lands
+    on a fresh session and re-prefills its full transcript.
+
+TTFT is wall time from request send to the first streamed content
+chunk; TBT from inter-chunk gaps — measured at the API surface, so
+queueing, routing and restoration are all inside the number. The
+acceptance criterion is steered beating blind by ≥1.3x p50 TTFT on
+round-≥2 chat requests with byte-identical greedy transcripts per
+conversation. Emits BENCH_slo.json for CI trending.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+SEED = 0
+N_CHAT = 4                      # conversations; even index -> passes conv id
+ROUNDS = 3
+N_RAG = 3
+N_ENCDEC = 2
+GEN_TOKENS = 6
+MAX_BATCH = 4
+MAX_SEQ = 256
+BLOCK_SIZE = 16
+ARRIVAL_MEAN_S = 0.03           # Poisson inter-arrival between clients
+THINK_MEAN_S = 0.05             # per-round think time within a chat
+ACCEPT_SPEEDUP = 1.3
+
+
+def _build_lm():
+    import jax
+    import jax.numpy as jnp
+    from repro.config.arch import reduced_for_smoke
+    from repro.configs import get_arch
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    from repro.models import Model
+    from repro.models.module import split
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced_for_smoke(get_arch("llama2-7b"))
+    model = Model(cfg, rules=default_rules(mesh), model_axis=1,
+                  dtype=jnp.float32, remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def _build_encdec():
+    import jax
+    import jax.numpy as jnp
+    from repro.config.arch import reduced_for_smoke
+    from repro.configs import get_arch
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    from repro.models import Model
+    from repro.models.module import split
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced_for_smoke(get_arch("whisper-medium"))
+    model = Model(cfg, rules=default_rules(mesh), model_axis=1,
+                  dtype=jnp.float32, remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def _fresh_engine(model, params, *, max_batch, max_seq):
+    from repro.config.hardware import PAPER_A100
+    from repro.core.hcache import HCacheManager
+    from repro.serving import InferenceEngine
+    from repro.storage import ChunkStore, make_array
+
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden", store_dtype=np.float32)
+    return InferenceEngine(model, params, mgr, max_batch=max_batch,
+                           max_seq=max_seq, prefill_chunk=8)
+
+
+# ---------------------------------------------------------------- workload
+def _words(rng, n: int) -> str:
+    letters = "abcdefghijklmnopqrstuvwxyz      "
+    return "".join(letters[i]
+                   for i in rng.integers(0, len(letters), n)).strip() or "x"
+
+
+def _mk_workload(lm_cfg, enc_cfg):
+    """The full tenant mix, generated once from SEED so both modes see
+    byte-identical prompts, arrival offsets and think times."""
+    rng = np.random.default_rng(SEED)
+    clock = 0.0
+    clients = []
+    for c in range(N_CHAT):
+        clock += float(rng.exponential(ARRIVAL_MEAN_S))
+        clients.append({
+            "kind": "chat", "name": f"chat{c}", "start": clock,
+            "use_id": c % 2 == 0,
+            "system": _words(rng, 24),
+            "users": [_words(rng, int(rng.integers(10, 18)))
+                      for _ in range(ROUNDS)],
+            "think": [float(rng.exponential(THINK_MEAN_S))
+                      for _ in range(ROUNDS)],
+        })
+    rag_system = _words(rng, 64)    # the shared retrieval preamble
+    for r in range(N_RAG):
+        clock += float(rng.exponential(ARRIVAL_MEAN_S))
+        clients.append({
+            "kind": "rag", "name": f"rag{r}", "start": clock,
+            "system": rag_system,
+            "users": [_words(rng, int(rng.integers(10, 18)))],
+        })
+    for a in range(N_ENCDEC):
+        clock += float(rng.exponential(ARRIVAL_MEAN_S))
+        clients.append({
+            "kind": "encdec", "name": f"audio{a}", "start": clock,
+            "frames": (rng.standard_normal(
+                (20 + 4 * a, enc_cfg.d_model)) * 0.1).astype(np.float32),
+            "prompts": [rng.integers(0, enc_cfg.vocab_size,
+                                     8).astype(np.int32)
+                        for _ in range(2)],
+            "think": float(rng.exponential(THINK_MEAN_S)),
+        })
+    return clients
+
+
+# ----------------------------------------------------------------- clients
+async def _stream_round(api, body, sample):
+    """POST a streaming chat round; fill ``sample`` with TTFT/TBT/route
+    read off the SSE chunks exactly as an HTTP client would see them."""
+    t_send = time.perf_counter()
+    status, payload = await api.handle("POST", "/v1/chat/completions", body)
+    assert status == 200, payload
+    times, content, route, conv_id = [], [], None, None
+    async for chunk in payload:
+        if not chunk.startswith("data: ") or chunk.startswith("data: ["):
+            continue
+        obj = json.loads(chunk[len("data: "):])
+        conv_id = obj.get("conversation_id", conv_id)
+        if obj.get("hcache"):
+            route = obj["hcache"]
+        delta = obj["choices"][0].get("delta", {})
+        if delta.get("content"):
+            times.append(time.perf_counter())
+            content.append(delta["content"])
+    sample["ttft"] = times[0] - t_send
+    sample["tbt"] = [b - a for a, b in zip(times, times[1:])]
+    sample["route"] = route["route"]
+    sample["matched_tokens"] = route["matched_tokens"]
+    return "".join(content), conv_id
+
+
+async def _run_chat(api, spec, samples, transcripts):
+    await asyncio.sleep(spec["start"])
+    messages = [{"role": "system", "content": spec["system"]},
+                {"role": "user", "content": spec["users"][0]}]
+    conv_id, out = None, []
+    for rnd in range(ROUNDS):
+        body = {"messages": messages, "max_tokens": GEN_TOKENS,
+                "stream": True}
+        if spec["use_id"] and conv_id is not None:
+            body["conversation_id"] = conv_id
+        sample = {"kind": "chat", "client": spec["name"], "round": rnd}
+        content, conv_id = await _stream_round(api, body, sample)
+        samples.append(sample)
+        out.append(content)
+        if rnd + 1 < ROUNDS:
+            messages = messages + [
+                {"role": "assistant", "content": content},
+                {"role": "user", "content": spec["users"][rnd + 1]}]
+            await asyncio.sleep(spec["think"][rnd])
+    transcripts[spec["name"]] = out
+
+
+async def _run_rag(api, spec, samples, transcripts):
+    await asyncio.sleep(spec["start"])
+    body = {"messages": [{"role": "system", "content": spec["system"]},
+                         {"role": "user", "content": spec["users"][0]}],
+            "max_tokens": GEN_TOKENS, "stream": True}
+    sample = {"kind": "rag", "client": spec["name"], "round": 0}
+    content, _ = await _stream_round(api, body, sample)
+    samples.append(sample)
+    transcripts[spec["name"]] = [content]
+
+
+async def _run_encdec(pump, spec, samples, transcripts):
+    from repro.serving import Request
+
+    await asyncio.sleep(spec["start"])
+    out = []
+    for rnd, prompt in enumerate(spec["prompts"]):
+        req = Request(spec["name"], prompt, max_new_tokens=GEN_TOKENS,
+                      frames=spec["frames"] if rnd == 0 else None)
+        sub = pump.submit(req)
+        async for _ in sub.events():
+            pass
+        samples.append({"kind": "encdec", "client": spec["name"],
+                        "round": rnd, "ttft": sub.ttft, "tbt": sub.tbt,
+                        "route": "restore" if rnd else "fresh",
+                        "matched_tokens": 0})
+        out.append(list(sub.tokens))
+        if rnd + 1 < len(spec["prompts"]):
+            await asyncio.sleep(spec["think"])
+    transcripts[spec["name"]] = out
+
+
+# -------------------------------------------------------------------- mode
+def _pcts(xs):
+    if not xs:
+        return {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0, "n": 0}
+    a = np.asarray(xs, np.float64)
+    return {"p50_s": float(np.percentile(a, 50)),
+            "p99_s": float(np.percentile(a, 99)),
+            "mean_s": float(a.mean()), "n": int(a.size)}
+
+
+async def _run_mode(lm, enc, clients, *, steer: bool):
+    from repro.frontend import EnginePump, FrontDoor, SessionRouter
+
+    lm_cfg, lm_model, lm_params = lm
+    enc_cfg, enc_model, enc_params = enc
+    engine = _fresh_engine(lm_model, lm_params, max_batch=MAX_BATCH,
+                           max_seq=MAX_SEQ)
+    enc_engine = _fresh_engine(enc_model, enc_params, max_batch=N_ENCDEC,
+                               max_seq=96)
+    pump = EnginePump(engine).start()
+    enc_pump = EnginePump(enc_engine).start()
+    router = SessionRouter(engine, n_slots=N_CHAT + N_RAG + 1,
+                           block_size=BLOCK_SIZE, steer=steer)
+    api = FrontDoor(pump, router)
+    samples, transcripts = [], {}
+    t0 = time.perf_counter()
+    tasks = []
+    for spec in clients:
+        if spec["kind"] == "chat":
+            tasks.append(_run_chat(api, spec, samples, transcripts))
+        elif spec["kind"] == "rag":
+            tasks.append(_run_rag(api, spec, samples, transcripts))
+        else:
+            tasks.append(_run_encdec(enc_pump, spec, samples, transcripts))
+    await asyncio.gather(*tasks)
+    wall = time.perf_counter() - t0
+    metrics = engine.metrics.to_dict()
+    enc_metrics = enc_engine.metrics.to_dict()
+    stats = {
+        "steer": steer,
+        "wall_s": wall,
+        "requests": len(samples),
+        "ttft": _pcts([s["ttft"] for s in samples]),
+        "tbt": _pcts([t for s in samples for t in s["tbt"]]),
+        "chat_round2plus_ttft": _pcts(
+            [s["ttft"] for s in samples
+             if s["kind"] == "chat" and s["round"] >= 1]),
+        "by_kind": {k: _pcts([s["ttft"] for s in samples
+                              if s["kind"] == k])
+                    for k in ("chat", "rag", "encdec")},
+        "routes": {k: sum(1 for s in samples if s["route"] == k)
+                   for k in ("exact", "restore", "fork", "fresh")},
+        "router": router.stats(),
+        "engine": metrics,
+        "enc_engine": {"restored_tokens": enc_metrics["restored_tokens"],
+                       "ttft_wall_restored":
+                           enc_metrics["ttft_wall_restored"],
+                       "ttft_wall_cold": enc_metrics["ttft_wall_cold"]},
+    }
+    pump.close()
+    enc_pump.close()
+    return stats, transcripts
+
+
+def _warmup(lm, enc):
+    """Compile the prefill/decode/restore/save paths once so neither
+    measured mode pays jit time (the first mode to run would otherwise
+    eat every compile)."""
+    from repro.serving import Request
+
+    lm_cfg, lm_model, lm_params = lm
+    enc_cfg, enc_model, enc_params = enc
+    rng = np.random.default_rng(99)
+    engine = _fresh_engine(lm_model, lm_params, max_batch=MAX_BATCH,
+                           max_seq=MAX_SEQ)
+    p1 = rng.integers(0, lm_cfg.vocab_size, 70).astype(np.int32)
+    engine.submit(Request("warm", p1, max_new_tokens=GEN_TOKENS))
+    engine.run()
+    engine.submit(Request("warm", rng.integers(
+        0, lm_cfg.vocab_size, 40).astype(np.int32),
+        max_new_tokens=GEN_TOKENS))
+    engine.run()                    # round 2: the restore path compiles
+    engine.close()
+    engine = _fresh_engine(enc_model, enc_params, max_batch=N_ENCDEC,
+                           max_seq=96)
+    frames = (rng.standard_normal((20, enc_cfg.d_model)) * 0.1
+              ).astype(np.float32)
+    engine.submit(Request("warm", rng.integers(
+        0, enc_cfg.vocab_size, 8).astype(np.int32),
+        max_new_tokens=GEN_TOKENS, frames=frames))
+    engine.run()
+    engine.submit(Request("warm", rng.integers(
+        0, enc_cfg.vocab_size, 8).astype(np.int32),
+        max_new_tokens=GEN_TOKENS))
+    engine.run()
+    engine.close()
+
+
+def run_slo_bench(out_path: str = "BENCH_slo.json"):
+    lm = _build_lm()
+    enc = _build_encdec()
+    clients = _mk_workload(lm[0], enc[0])
+    _warmup(lm, enc)
+    results = {"workload": {
+        "chat_conversations": N_CHAT, "rounds": ROUNDS,
+        "rag_requests": N_RAG, "encdec_sessions": N_ENCDEC,
+        "gen_tokens": GEN_TOKENS, "max_batch": MAX_BATCH,
+        "arrival_mean_s": ARRIVAL_MEAN_S, "think_mean_s": THINK_MEAN_S,
+        "seed": SEED}, "modes": {}}
+    outs = {}
+    rows = []
+    for label, steer in (("steered", True), ("blind", False)):
+        stats, transcripts = asyncio.run(_run_mode(lm, enc, clients,
+                                                   steer=steer))
+        results["modes"][label] = stats
+        outs[label] = transcripts
+        rows.append((
+            f"bench_slo_{label}", stats["ttft"]["p50_s"] * 1e6,
+            f"round2_ttft_p50_us="
+            f"{stats['chat_round2plus_ttft']['p50_s'] * 1e6:.0f};"
+            f"tbt_p99_us={stats['tbt']['p99_s'] * 1e6:.0f};"
+            f"hit_rate={stats['router']['hit_rate']:.2f};"
+            f"restored={stats['engine']['restored_tokens']}"))
+    st = results["modes"]["steered"]
+    bl = results["modes"]["blind"]
+    results["outputs_identical"] = outs["steered"] == outs["blind"]
+    results["acceptance_speedup"] = (
+        bl["chat_round2plus_ttft"]["p50_s"]
+        / max(st["chat_round2plus_ttft"]["p50_s"], 1e-9))
+    results["acceptance_met"] = bool(
+        results["acceptance_speedup"] >= ACCEPT_SPEEDUP
+        and results["outputs_identical"])
+    results["restore_vs_recompute"] = {
+        "steered_restored_tokens": st["engine"]["restored_tokens"],
+        "blind_restored_tokens": bl["engine"]["restored_tokens"],
+        "steered_ttft_wall_restored": st["engine"]["ttft_wall_restored"],
+        "blind_ttft_wall_cold": bl["engine"]["ttft_wall_cold"],
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    rows.append(("bench_slo_acceptance", 0.0,
+                 f"{results['acceptance_speedup']:.2f}x;"
+                 f"met={results['acceptance_met']};"
+                 f"identical={results['outputs_identical']}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run_slo_bench()

@@ -4,11 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows. Run:
     PYTHONPATH=src python -m benchmarks.run [--only fig9,fig12] [--smoke]
     PYTHONPATH=src python -m benchmarks.run --mode bench_restoration
 
-``--smoke`` runs the fast analytic suites only (CI gate). ``--mode
-bench_restoration`` compares blocking vs pipelined restoration TTFT from
-the executor's task graph and writes BENCH_restoration.json. ``--mode
-bench_capacity`` runs the capacity bake-off (mid-stream eviction policy
-comparison + host-budget degradation) and writes BENCH_capacity.json.
+``--smoke`` runs the fast analytic suites only (CI gate). ``--mode X``
+runs one special-mode entry and writes its ``BENCH_X.json`` artifact.
+Everything — figure suites, smoke membership, mode names, artifacts —
+is enumerated from the single ``REGISTRY`` below, so a new mode can't
+be silently skipped by a stale hand-maintained list.
 """
 from __future__ import annotations
 
@@ -16,20 +16,55 @@ import argparse
 import sys
 import time
 
-SUITES = [
-    ("fig1/kernels", "benchmarks.bench_kernels"),
-    ("fig9/fig10 TTFT", "benchmarks.bench_restoration"),
-    ("fig11 sensitivity", "benchmarks.bench_sensitivity"),
-    ("fig12 scheduler ablation", "benchmarks.bench_scheduler"),
-    ("fig13 partition methods", "benchmarks.bench_partition"),
-    ("fig14 two-stage saving", "benchmarks.bench_two_stage"),
-    ("fig15 kv reuse", "benchmarks.bench_kv_reuse"),
-    ("table3 storage cost", "benchmarks.bench_storage_cost"),
+# One entry per benchmark module. Fields:
+#   label    — figure-suite label; present iff the module has a ``run()``
+#              the default full sweep should execute
+#   smoke    — label runs under --smoke (fast analytic, no forward pass)
+#   mode     — ``--mode`` name; present iff the module has a special mode
+#   entry    — the mode's entry function (writes ``artifact``)
+#   artifact — JSON file the mode emits (CI uploads exactly these)
+REGISTRY = [
+    dict(label="fig1/kernels", module="benchmarks.bench_kernels"),
+    dict(label="fig9/fig10 TTFT", module="benchmarks.bench_restoration",
+         smoke=True, mode="bench_restoration",
+         entry="run_pipeline_comparison", artifact="BENCH_restoration.json",
+         help="blocking vs pipelined restoration TTFT"),
+    dict(label="fig11 sensitivity", module="benchmarks.bench_sensitivity",
+         smoke=True),
+    dict(label="fig12 scheduler ablation", module="benchmarks.bench_sched",
+         smoke=True, mode="bench_sched", entry="run_sched_bench",
+         artifact="BENCH_sched.json",
+         help="static vs calibrated vs fetch-aligned restore plans "
+              "under 1/2/4-way concurrency"),
+    dict(label="fig13 partition methods", module="benchmarks.bench_partition",
+         smoke=True),
+    dict(label="fig14 two-stage saving", module="benchmarks.bench_two_stage"),
+    dict(label="fig15 kv reuse", module="benchmarks.bench_kv_reuse"),
+    dict(label="table3 storage cost",
+         module="benchmarks.bench_storage_cost", smoke=True),
+    dict(module="benchmarks.bench_capacity", mode="bench_capacity",
+         entry="run_capacity_comparison", artifact="BENCH_capacity.json",
+         help="eviction-policy + host-budget bake-off"),
+    dict(module="benchmarks.bench_paged", mode="bench_paged",
+         entry="run_paged_comparison", artifact="BENCH_paged.json",
+         help="paged vs contiguous KV layouts at equal cache memory"),
+    dict(module="benchmarks.bench_restore_batch", mode="bench_restore_batch",
+         entry="run_restore_batch", artifact="BENCH_restore_batch.json",
+         help="grouped-restoration group-size sweep"),
+    dict(module="benchmarks.bench_encdec", mode="bench_encdec",
+         entry="run_encdec_bench", artifact="BENCH_encdec.json",
+         help="batched vs sequential whisper serving and "
+              "restore-vs-recompute TTFT"),
+    dict(module="benchmarks.bench_prefix", mode="bench_prefix",
+         entry="run_prefix_comparison", artifact="BENCH_prefix.json",
+         help="prefix sharing on vs off at an equal page pool"),
+    dict(module="benchmarks.bench_slo", mode="bench_slo",
+         entry="run_slo_bench", artifact="BENCH_slo.json",
+         help="front-door SLO harness: steered vs route-blind "
+              "multi-tenant mix (DESIGN.md §14)"),
 ]
 
-# analytic suites that finish in seconds without a model forward pass
-SMOKE = ("bench_restoration", "bench_sensitivity", "bench_scheduler",
-         "bench_partition", "bench_storage_cost")
+MODES = {e["mode"]: e for e in REGISTRY if "mode" in e}
 
 
 def main() -> None:
@@ -38,75 +73,29 @@ def main() -> None:
                    help="comma-separated substring filters")
     p.add_argument("--smoke", action="store_true",
                    help="fast analytic suites only (CI)")
-    p.add_argument("--mode", default=None,
-                   choices=["bench_restoration", "bench_capacity",
-                            "bench_paged", "bench_restore_batch",
-                            "bench_encdec", "bench_prefix",
-                            "bench_sched"],
-                   help="special modes: bench_restoration compares "
-                        "blocking vs pipelined TTFT -> "
-                        "BENCH_restoration.json; bench_capacity runs the "
-                        "eviction-policy + host-budget bake-off -> "
-                        "BENCH_capacity.json; bench_paged compares paged "
-                        "vs contiguous KV layouts at equal cache memory "
-                        "-> BENCH_paged.json; bench_restore_batch sweeps "
-                        "the grouped-restoration group size (dispatches, "
-                        "projection wall time, makespan) -> "
-                        "BENCH_restore_batch.json; bench_encdec compares "
-                        "batched vs sequential whisper serving and "
-                        "restore-vs-recompute TTFT -> BENCH_encdec.json; "
-                        "bench_prefix compares prefix sharing on vs off "
-                        "at an equal page pool -> BENCH_prefix.json; "
-                        "bench_sched compares static vs calibrated vs "
-                        "fetch-aligned restore plans under 1/2/4-way "
-                        "concurrency -> BENCH_sched.json")
+    p.add_argument("--mode", default=None, choices=sorted(MODES),
+                   help="special modes: " + "; ".join(
+                       f"{m} — {e.get('help', e['entry'])} -> "
+                       f"{e['artifact']}" for m, e in sorted(MODES.items())))
     args = p.parse_args()
     print("name,us_per_call,derived")
-    if args.mode == "bench_restoration":
-        from benchmarks.bench_restoration import run_pipeline_comparison
-        rows = run_pipeline_comparison()
-        print(f"# {len(rows)} rows -> BENCH_restoration.json",
-              file=sys.stderr)
-        return
-    if args.mode == "bench_capacity":
-        from benchmarks.bench_capacity import run_capacity_comparison
-        rows = run_capacity_comparison()
-        print(f"# {len(rows)} rows -> BENCH_capacity.json",
-              file=sys.stderr)
-        return
-    if args.mode == "bench_paged":
-        from benchmarks.bench_paged import run_paged_comparison
-        rows = run_paged_comparison()
-        print(f"# {len(rows)} rows -> BENCH_paged.json", file=sys.stderr)
-        return
-    if args.mode == "bench_restore_batch":
-        from benchmarks.bench_restore_batch import run_restore_batch
-        rows = run_restore_batch()
-        print(f"# {len(rows)} rows -> BENCH_restore_batch.json",
-              file=sys.stderr)
-        return
-    if args.mode == "bench_encdec":
-        from benchmarks.bench_encdec import run_encdec_bench
-        rows = run_encdec_bench()
-        print(f"# {len(rows)} rows -> BENCH_encdec.json", file=sys.stderr)
-        return
-    if args.mode == "bench_prefix":
-        from benchmarks.bench_prefix import run_prefix_comparison
-        rows = run_prefix_comparison()
-        print(f"# {len(rows)} rows -> BENCH_prefix.json", file=sys.stderr)
-        return
-    if args.mode == "bench_sched":
-        from benchmarks.bench_sched import run_sched_bench
-        rows = run_sched_bench()
-        print(f"# {len(rows)} rows -> BENCH_sched.json", file=sys.stderr)
+    if args.mode:
+        e = MODES[args.mode]
+        mod = __import__(e["module"], fromlist=[e["entry"]])
+        rows = getattr(mod, e["entry"])()
+        print(f"# {len(rows)} rows -> {e['artifact']}", file=sys.stderr)
         return
     filters = args.only.split(",") if args.only else None
     t0 = time.time()
     n_rows = 0
-    for label, module in SUITES:
+    for e in REGISTRY:
+        label = e.get("label")
+        if label is None:
+            continue
+        module = e["module"]
         if filters and not any(f in label or f in module for f in filters):
             continue
-        if args.smoke and module.rsplit(".", 1)[-1] not in SMOKE:
+        if args.smoke and not e.get("smoke"):
             continue
         print(f"# --- {label} ({module}) ---", file=sys.stderr)
         mod = __import__(module, fromlist=["run"])

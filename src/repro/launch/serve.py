@@ -84,6 +84,25 @@ def main() -> None:
                         "refcounted CoW pages + token-hash prefix index "
                         "(paged backend) and content-addressed host chunk "
                         "dedup / session forking")
+    p.add_argument("--metrics-json", default=None, metavar="PATH",
+                   help="dump the final EngineMetrics counters/gauges as "
+                        "JSON to PATH on exit (what bench_slo and CI "
+                        "consume instead of scraping printed text)")
+    p.add_argument("--serve-http", action="store_true",
+                   help="serve the engine through the front door "
+                        "(DESIGN.md §14): OpenAI-compatible HTTP API + "
+                        "session router, instead of the synthetic trace; "
+                        "Ctrl-C to stop")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8080,
+                   help="--serve-http listen port (0 = ephemeral)")
+    p.add_argument("--max-pending", type=int, default=64,
+                   help="--serve-http backpressure: queue-depth cap "
+                        "before requests are shed with 429/overloaded")
+    p.add_argument("--priority-levels", type=int, default=1,
+                   help="synthetic trace: session s gets priority "
+                        "s %% N (exercises --admission priority; 1 = all "
+                        "equal)")
     args = p.parse_args()
     group_size = (args.restore_group_size
                   if args.restore_group_size in ("auto", "fetch")
@@ -126,6 +145,18 @@ def main() -> None:
                              enc_seq=args.enc_seq,
                              prefix_sharing=args.prefix_sharing)
 
+    if args.serve_http:
+        import asyncio
+
+        from repro.frontend import serve_engine
+        try:
+            asyncio.run(serve_engine(engine, args.host, args.port,
+                                     max_pending=args.max_pending))
+        except KeyboardInterrupt:
+            pass
+        _dump_metrics(engine, args.metrics_json)
+        return
+
     rng = np.random.default_rng(0)
     for rnd in range(args.rounds):
         for s in range(args.sessions):
@@ -138,7 +169,9 @@ def main() -> None:
                 frames = rng.standard_normal(
                     (args.prompt_len, cfg.d_model)).astype(np.float32) * 0.1
             engine.submit(Request(f"user{s}", prompt,
-                                  max_new_tokens=args.gen, frames=frames))
+                                  max_new_tokens=args.gen, frames=frames,
+                                  priority=s % max(args.priority_levels,
+                                                   1)))
         engine.run()
         for s in range(args.sessions):
             seq = engine.sessions[f"user{s}"]
@@ -181,7 +214,17 @@ def main() -> None:
     if capacity is not None and capacity.actions:
         print("capacity ladder actions:", capacity.actions)
     print("recoverable sessions:", engine.recoverable_sessions())
+    _dump_metrics(engine, args.metrics_json)
     engine.close()
+
+
+def _dump_metrics(engine, path) -> None:
+    if not path:
+        return
+    import json
+    with open(path, "w") as f:
+        json.dump(engine.metrics.to_dict(), f, indent=2)
+    print(f"metrics -> {path}")
 
 
 if __name__ == "__main__":

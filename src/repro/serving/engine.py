@@ -167,6 +167,36 @@ class EngineMetrics:
     def fragmentation_mean(self) -> float:
         return 1.0 - self.occupancy_mean if self.occupancy_count else 0.0
 
+    @staticmethod
+    def _summary(xs: List[float]) -> Dict[str, float]:
+        if not xs:
+            return {"n": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
+        a = np.asarray(xs, np.float64)
+        return {"n": int(a.size), "mean": float(a.mean()),
+                "p50": float(np.percentile(a, 50)),
+                "p99": float(np.percentile(a, 99)),
+                "max": float(a.max())}
+
+    def to_dict(self) -> dict:
+        """JSON-serializable dump of every counter/gauge; per-request
+        populations (TTFT/TBT/makespans) summarized as n/mean/p50/p99/max.
+        This is what ``serve.py --metrics-json`` writes and what the SLO
+        harness consumes — benches never scrape printed text."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, list):
+                out[f.name] = self._summary(v)
+            elif isinstance(v, dict):
+                out[f.name] = {str(k): int(n) for k, n in v.items()}
+            else:
+                out[f.name] = v
+        for prop in ("restore_bubble_mean", "makespan_err_mean",
+                     "prefix_hit_rate", "occupancy_mean",
+                     "fragmentation_mean"):
+            out[prop] = float(getattr(self, prop))
+        return out
+
 
 class InferenceEngine:
     def __init__(self, model: Model, params, manager: HCacheManager, *,
@@ -221,6 +251,17 @@ class InferenceEngine:
             self.prefix_index = PrefixIndex(self.kv)
             self.prefix_index.store = manager.store
             self.kv.prefix_index = self.prefix_index
+        # token-callback seam (DESIGN.md §14): the front door's engine
+        # pump fans emitted tokens out to per-request async queues
+        # through these hooks. on_token fires exactly once per emitted
+        # token (the resume feed after a pause replays an EXISTING token
+        # through prefill and does not re-fire); on_finish fires exactly
+        # once per request, at retire, with reason "stop" (EOS) or
+        # "length"; on_pause fires at each mid-stream eviction. All run
+        # on the engine-stepping thread.
+        self.on_token = None               # fn(seq, tok)
+        self.on_finish = None              # fn(seq, reason)
+        self.on_pause = None               # fn(seq)
         self.queue: deque = deque()
         self.slots: List[Optional[SequenceState]] = [None] * max_batch
         self.sessions: Dict[str, SequenceState] = {}
@@ -231,7 +272,12 @@ class InferenceEngine:
     # ----------------------------------------------------------- submission
     def submit(self, request: Request) -> SequenceState:
         seq = SequenceState(request=request)
-        seq.request.arrival_time = time.perf_counter()
+        if request.arrival_time == 0.0:
+            # the front door pre-stamps arrival at ingress so TTFT covers
+            # its own queueing; direct callers are stamped here
+            seq.request.arrival_time = time.perf_counter()
+        if request.arrival_step < 0:
+            seq.request.arrival_step = self.step_count
         seq.enqueue_step = self.step_count
         self.queue.append(seq)
         return seq
@@ -545,6 +591,8 @@ class InferenceEngine:
         self.slots[i] = None
         self.queue.append(s)
         self.metrics.preemptions += 1
+        if self.on_pause is not None:
+            self.on_pause(s)
 
     # ------------------------------------------------------ prefix sharing
     def _host_pin_fn(self, sid: str, man: dict):
@@ -788,6 +836,8 @@ class InferenceEngine:
                 self.metrics.ttft_wall_restored.append(seq.ttft_wall)
             else:
                 self.metrics.ttft_wall_cold.append(seq.ttft_wall)
+        if self.on_token is not None:
+            self.on_token(seq, tok)
 
     def _decode_batch(self) -> None:
         active = [s for s in self.slots
@@ -845,6 +895,12 @@ class InferenceEngine:
             s.view.free()
             s.view = None
             self.slots[i] = None
+            if self.on_finish is not None:
+                r = s.request
+                reason = ("stop" if (r.eos_token is not None and s.generated
+                                     and s.generated[-1] == r.eos_token)
+                          else "length")
+                self.on_finish(s, reason)
 
     def _after_save(self, sid: str) -> None:
         """On-save capacity hook: a demoted session whose stream was just

@@ -38,6 +38,43 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 
+def roll_hash(prev: Optional[bytes], page) -> bytes:
+    """One step of the rolling page hash: ``sha1(prev || page_tokens)``.
+    The module-level form is shared with the session router
+    (frontend/router.py), so device-page identity and router-side
+    conversation matching agree on what "the same prefix" means."""
+    h = hashlib.sha1(prev or b"\x00")
+    h.update(np.ascontiguousarray(page, dtype=np.int64).tobytes())
+    return h.digest()
+
+
+def hash_chain(tokens, block_size: int,
+               prev: Optional[bytes] = None) -> List[bytes]:
+    """Rolling hashes of every FULL ``block_size`` page of ``tokens``.
+    Passing the last element back as ``prev`` (with only the new tokens)
+    extends a chain incrementally — the router grows per-conversation
+    chains one round at a time this way."""
+    toks = np.asarray(tokens).reshape(-1)
+    chain: List[bytes] = []
+    key = prev
+    for p in range(len(toks) // block_size):
+        key = roll_hash(key, toks[p * block_size:(p + 1) * block_size])
+        chain.append(key)
+    return chain
+
+
+def common_chain_prefix(a: List[bytes], b: List[bytes]) -> int:
+    """Length (in pages) of the common prefix of two hash chains. Each
+    element already commits to its whole history, so equality at depth d
+    implies equality at every shallower depth — one comparison per page."""
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
 @dataclasses.dataclass
 class HostPin:
     """Pinned host-chunk backing of one entry: enough chunks of each
@@ -86,9 +123,7 @@ class PrefixIndex:
 
     @staticmethod
     def _roll(prev: Optional[bytes], page: np.ndarray) -> bytes:
-        h = hashlib.sha1(prev or b"\x00")
-        h.update(np.ascontiguousarray(page, dtype=np.int64).tobytes())
-        return h.digest()
+        return roll_hash(prev, page)
 
     def _touch(self, e: _Entry) -> None:
         self._clock += 1

@@ -32,7 +32,12 @@ class Request:
     # runs once and the result persists as the 'enc' blob); later rounds
     # and resumes restore the cross context from the store instead.
     frames: Optional[np.ndarray] = None
-    arrival_time: float = 0.0
+    # arrival stamps. The engine fills both at submit() UNLESS the caller
+    # pre-stamped them — the front door (frontend/pump.py) stamps
+    # arrival_time at ingress so TTFT includes its queueing, and the SLO
+    # harness keys per-request accounting off arrival_step ordering.
+    arrival_time: float = 0.0                # perf_counter at arrival
+    arrival_step: int = -1                   # engine step_count at arrival
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
 
