@@ -1,0 +1,208 @@
+"""Distributed ChunkStore bake-off (DESIGN.md §15).
+
+Three questions, one artifact (``BENCH_distributed.json``):
+
+  1. Does cross-host striping actually cut the restore makespan? A real
+     session is restored through the executor over {1, 2, 4} SSD-backed
+     host shards under both placements; the virtual-clock timeline (the
+     same per-link replay the planner prices with) is the judge.
+     Acceptance: 4-shard striped ≥ 1.5x over 1-shard.
+  2. Does the async IO engine beat sync inline IO on WALL-CLOCK TTFT
+     when the reads are real? The same restore over ``FileBackend``
+     shards (np.load from disk), sync vs engine-attached — the engine
+     fans reads over per-shard workers that overlap the projection
+     compute, sync blocks the executor thread per stripe.
+  3. Are restored caches byte-identical across every shard count and
+     placement? (If not, nothing else matters.)
+
+Runs the reduced-smoke model — the restore graph, store, links and IO
+engine are the real ones; only the transformer is shrunk.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import emit
+
+N_TOKENS = 2048
+CHUNK_TOKENS = 64
+SHARD_COUNTS = (1, 2, 4)
+DEVS_PER_SHARD = 2
+GROUP_SIZE = 2                  # several projections -> overlap window
+ACCEPT_SPEEDUP = 1.5
+
+
+def _setup():
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config.arch import reduced_for_smoke
+    from repro.configs import get_arch
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    from repro.models import Model
+    from repro.models.module import split
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    # wider + deeper than the smoke config: the wall-clock comparison
+    # needs real bytes on disk (8 layers x 2048 tokens x 256 dims), but
+    # still CPU-friendly
+    # GQA (1 kv head) keeps the projection compute small relative to the
+    # hidden-state bytes on disk — the regime where restoration is
+    # IO-bound and overlapping IO with compute pays
+    cfg = dataclasses.replace(reduced_for_smoke(get_arch("llama2-7b")),
+                              n_layers=8, d_model=256, head_dim=64,
+                              n_kv_heads=1, d_ff=512)
+    model = Model(cfg, rules=default_rules(mesh), model_axis=1,
+                  dtype=jnp.float32, remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, N_TOKENS), 0,
+                              cfg.vocab_size)
+    pre = model.prefill(params, {"tokens": toks}, capture_hidden=True)
+    return model, params, np.asarray(toks[0]), pre
+
+
+def _drop_page_cache(root):
+    """fadvise(DONTNEED) every stored file: a restore happens long after
+    its save (the session was evicted), so the OS page cache is cold —
+    without this the np.load reads are warm memcpys and the sync/async
+    comparison measures the cache, not the IO."""
+    import os
+    for dirpath, _, files in os.walk(root):
+        for name in files:
+            try:
+                fd = os.open(os.path.join(dirpath, name), os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                    os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+                finally:
+                    os.close(fd)
+            except OSError:
+                pass
+
+
+def _restore(model, params, tokens, pre, store, io_engine=None,
+             cold_root=None):
+    """One full executor restore; returns (cache_k, cache_v,
+    virtual_makespan_s, wall_s)."""
+    import numpy as np
+
+    from repro.config.hardware import PAPER_A100
+    from repro.core.hcache import HCacheManager
+    from repro.core.restoration import CacheAssembler, RestorationExecutor
+
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden",
+                        restore_group_size=GROUP_SIZE)
+    mgr.save_prefill("s", tokens, pre)
+    if cold_root is not None:
+        _drop_page_cache(cold_root)
+    if io_engine is not None:
+        store.attach_io_engine(io_engine)
+    sink = CacheAssembler(model)
+    t0 = time.perf_counter()
+    ex = RestorationExecutor(mgr, params, "s", sink=sink)
+    while not ex.step(max_tasks=4):
+        pass
+    wall = time.perf_counter() - t0
+    return (np.asarray(sink.cache["k"]), np.asarray(sink.cache["v"]),
+            ex.timeline().makespan, wall)
+
+
+def run_distributed_bench(out_path: str = "BENCH_distributed.json"):
+    import numpy as np
+
+    from repro.storage import AsyncIOEngine, ChunkStore, make_array, \
+        make_shards
+
+    model, params, tokens, pre = _setup()
+    results = {"workload": {"arch": "llama2-7b (reduced)",
+                            "n_tokens": N_TOKENS,
+                            "chunk_tokens": CHUNK_TOKENS,
+                            "devices_per_shard": DEVS_PER_SHARD},
+               "virtual": {}, "wall": {}}
+    rows = []
+
+    # baseline cache for byte-identity
+    k0, v0, _, _ = _restore(model, params, tokens, pre,
+                            ChunkStore(make_array("dram", 2),
+                                       chunk_tokens=CHUNK_TOKENS))
+    identical = True
+
+    # 1 + 3: virtual-clock makespan across the shard matrix + identity
+    for placement in ("layer", "chunk"):
+        for n in SHARD_COUNTS:
+            store = ChunkStore(shards=make_shards(n, DEVS_PER_SHARD, "ssd"),
+                               chunk_tokens=CHUNK_TOKENS,
+                               placement=placement)
+            k, v, makespan, _ = _restore(model, params, tokens, pre, store)
+            store.close()
+            same = (np.array_equal(k, k0) and np.array_equal(v, v0))
+            identical = identical and same
+            results["virtual"][f"{placement}_x{n}"] = {
+                "restore_makespan_ms": makespan * 1e3,
+                "byte_identical": bool(same)}
+            rows.append((f"bench_distributed_{placement}_x{n}",
+                         makespan * 1e6, f"identical={same}"))
+
+    v1 = results["virtual"]["layer_x1"]["restore_makespan_ms"]
+    v4 = results["virtual"]["layer_x4"]["restore_makespan_ms"]
+    speedup = v1 / v4 if v4 > 0 else float("inf")
+    results["virtual"]["speedup_4shard_layer"] = speedup
+
+    # 2: sync inline vs async engine on real file IO, best of 3
+    root = tempfile.mkdtemp(prefix="bench_dist_")
+    try:
+        walls = {"sync": [], "async": []}
+        ident_async = True
+        for rep in range(3):
+            for mode in ("sync", "async"):
+                store = ChunkStore(
+                    shards=make_shards(4, DEVS_PER_SHARD, "file",
+                                       root=f"{root}/{mode}{rep}"),
+                    chunk_tokens=CHUNK_TOKENS, placement="layer")
+                eng = AsyncIOEngine(4) if mode == "async" else None
+                k, v, _, wall = _restore(model, params, tokens, pre,
+                                         store, io_engine=eng,
+                                         cold_root=f"{root}/{mode}{rep}")
+                store.close()
+                walls[mode].append(wall)
+                if mode == "async":
+                    ident_async = ident_async and np.array_equal(k, k0)
+        sync_wall = min(walls["sync"])
+        async_wall = min(walls["async"])
+        identical = identical and ident_async
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    results["wall"] = {
+        "file_backend_sync_restore_s": sync_wall,
+        "file_backend_async_restore_s": async_wall,
+        "async_speedup": sync_wall / async_wall if async_wall else 0.0}
+    rows.append(("bench_distributed_file_sync", sync_wall * 1e6, ""))
+    rows.append(("bench_distributed_file_async", async_wall * 1e6,
+                 f"speedup={sync_wall / async_wall:.2f}x"))
+
+    results["acceptance_speedup_4shard"] = speedup
+    results["acceptance_async_beats_sync"] = bool(async_wall < sync_wall)
+    results["acceptance_byte_identical"] = bool(identical)
+    results["acceptance_met"] = bool(speedup >= ACCEPT_SPEEDUP
+                                     and async_wall < sync_wall
+                                     and identical)
+    rows.append(("bench_distributed_acceptance", speedup,
+                 f"met={results['acceptance_met']}"))
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    emit(rows)
+    print(f"wrote {out_path} (4-shard speedup {speedup:.2f}x, async "
+          f"{sync_wall / async_wall:.2f}x, identical={identical})")
+    return results
+
+
+if __name__ == "__main__":
+    run_distributed_bench()

@@ -62,6 +62,10 @@ REGISTRY = [
          entry="run_slo_bench", artifact="BENCH_slo.json",
          help="front-door SLO harness: steered vs route-blind "
               "multi-tenant mix (DESIGN.md §14)"),
+    dict(module="benchmarks.bench_distributed", mode="bench_distributed",
+         entry="run_distributed_bench", artifact="BENCH_distributed.json",
+         help="sharded restore across {1,2,4} hosts x both placements + "
+              "sync vs async IO on real file reads (DESIGN.md §15)"),
 ]
 
 MODES = {e["mode"]: e for e in REGISTRY if "mode" in e}

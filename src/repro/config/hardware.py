@@ -88,5 +88,10 @@ SSD_READ_BW = 6.9 * GB
 SSD_WRITE_BW = 4.0 * GB
 DRAM_BW = 80 * GB
 
+# Cross-host NIC link defaults for the distributed chunk store (100 GbE
+# per host shard; RTT covers the request round-trip + kernel stack).
+NIC_BW = 12.5 * GB
+NIC_RTT = 30e-6
+
 # TPU-native chunk size: 128 tokens (lane-aligned), vs the paper's 64.
 TPU_CHUNK_TOKENS = 128

@@ -28,9 +28,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import layer_costs, method_times
+from repro.core.cost_model import layer_costs, link_priced_times
 from repro.core.restoration import (compile_tasks, cross_restore_times,
-                                    replay)
+                                    replay, task_links)
 
 
 # ----------------------------------------------------- restore-cost estimate
@@ -51,14 +51,19 @@ def restore_makespan(mgr, n_tokens: int,
     cross = adapter.has_cross
     cross_times = cross_restore_times(mgr, enc_len) if cross else None
     # contention-aware pricing: the manager's measured profile (if any)
-    # replaces datasheet rates, and ``mgr.io_streams`` stretches the IO
-    # legs by the current restore multiplicity — so admission/eviction
-    # cost a restore under shared host-link bandwidth, not exclusive
-    # access
+    # replaces datasheet rates; a one-host store stretches IO legs by
+    # ``mgr.io_streams``, a distributed store prices each layer on the
+    # links its stripes occupy (``mgr.link_load``) and replays the IO
+    # stream per link — so admission/eviction cost a restore under the
+    # bandwidth it would actually contend for, not exclusive access
     profile = getattr(mgr, "profile", None)
     streams = max(int(getattr(mgr, "io_streams", 1)), 1)
-    times = [method_times(c, mgr.hw, profile=profile, io_streams=streams)
-             for c in layer_costs(mgr.cfg, n_tokens, mgr.dtype_bytes)]
+    topo_fn = getattr(mgr.store, "shard_topology", None)
+    topology = topo_fn() if topo_fn is not None else None
+    times, layer_links = link_priced_times(
+        layer_costs(mgr.cfg, n_tokens, mgr.dtype_bytes), mgr.hw,
+        profile=profile, io_streams=streams, topology=topology,
+        link_load=getattr(mgr, "link_load", None))
     resolve = getattr(mgr, "resolve_group_size", None)
     if resolve is not None:
         group = resolve(n_tokens, methods, enc_len=enc_len)
@@ -74,7 +79,8 @@ def restore_makespan(mgr, n_tokens: int,
     tasks = compile_tasks(tuple(methods), n_blobs=adapter.n_state_blobs,
                           group_size=group, cross=cross)
     return replay(tasks, times, dispatch_overhead=overhead,
-                  cross_times=cross_times).makespan
+                  cross_times=cross_times,
+                  links=task_links(tasks, layer_links)).makespan
 
 
 def session_restore_cost(mgr, session_id: str) -> float:

@@ -19,7 +19,7 @@ FLOPs only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.config.arch import ArchConfig, BlockKind
 from repro.config.hardware import GEMM_EFFICIENCY, HardwareProfile
@@ -120,13 +120,16 @@ class MethodTimes:
 
 def method_times(cost: LayerCost, hw: HardwareProfile,
                  gemm_eff: float = GEMM_EFFICIENCY, *,
-                 profile=None, io_streams: int = 1) -> MethodTimes:
+                 profile=None, io_streams: int = 1,
+                 link: Optional[int] = None) -> MethodTimes:
     """Seconds per layer. With a ``MeasuredProfile`` the observed marginal
     rates (seconds/byte, seconds/FLOP) replace the datasheet numbers for
     every kind that has samples; unmeasured kinds keep the static model.
     ``io_streams`` prices shared host-link/storage bandwidth: N sessions
     restoring concurrently each see 1/N of the link, so IO legs stretch
-    N-fold while compute legs (per-chip) do not."""
+    N-fold while compute legs (per-chip) do not. ``link`` selects the
+    per-NIC-link learned rate for the IO kinds when the profile has one
+    (distributed store; see ``link_priced_times``)."""
     flops = hw.flops * gemm_eff
     bw = min(hw.storage_bw, hw.host_link_bw)
     m = max(int(io_streams), 1)
@@ -135,10 +138,10 @@ def method_times(cost: LayerCost, hw: HardwareProfile,
     c_h = cost.c_hidden / flops
     c_token = cost.c_token / flops
     if profile is not None:
-        r = profile.rate("io_h")
+        r = profile.rate("io_h", link=link)
         if r is not None:
             io_h = cost.io_hidden * r
-        r = profile.rate("io_kv")
+        r = profile.rate("io_kv", link=link)
         if r is not None:
             io_kv = (cost.io_kv or cost.io_state) * r
         r = profile.rate("project")
@@ -149,6 +152,88 @@ def method_times(cost: LayerCost, hw: HardwareProfile,
             c_token = cost.c_token * r
     return MethodTimes(io_h=io_h * m, io_kv=io_kv * m,
                        c_h=c_h, c_token=c_token)
+
+
+class LinkLoad:
+    """Concurrent restore-stream counts per NIC link.
+
+    The engine reports, for each link of the distributed store, how many
+    RESTORING sessions currently have IO in flight on it. Planners then
+    charge contention only on the links a candidate restore actually
+    touches — ``factor(links)`` is the max load over the touched links
+    (the slowest link gates the stripe), replacing PR 7's global
+    ``io_streams`` stretch which taxed every restore for every other
+    restore even on disjoint links."""
+
+    __slots__ = ("streams",)
+
+    def __init__(self, streams: Optional[Dict[int, int]] = None):
+        self.streams = {int(k): int(v)
+                        for k, v in (streams or {}).items() if int(v) > 0}
+
+    def factor(self, links: Sequence[int]) -> int:
+        if not self.streams:
+            return 1
+        return max([self.streams.get(int(l), 0) for l in links] + [1])
+
+    def key(self) -> Tuple[Tuple[int, int], ...]:
+        """Hashable identity for plan-cache keys."""
+        return tuple(sorted(self.streams.items()))
+
+    def __repr__(self):
+        return f"LinkLoad({self.streams})"
+
+
+def link_priced_times(costs: Sequence[LayerCost], hw: HardwareProfile,
+                      gemm_eff: float = GEMM_EFFICIENCY, *,
+                      profile=None, io_streams: int = 1,
+                      topology=None, link_load: Optional[LinkLoad] = None,
+                      aggregate: bool = False)\
+        -> Tuple[List[MethodTimes], Optional[Dict[int, int]]]:
+    """Per-layer times priced on the links each layer's IO touches.
+
+    Without a topology (one-host store) this is the legacy model: every
+    IO leg stretched uniformly by ``io_streams``. With a sharded store:
+
+      * ``layer`` placement — layer L's IO occupies exactly link L%N.
+        Contention = load on that one link. Returns full per-layer IO
+        durations plus a ``{layer: link}`` map; the restoration replay
+        runs one virtual IO clock per link, so layers on different
+        links genuinely overlap. ``aggregate=True`` (for planners that
+        sum IO serially, e.g. the layer-split solver) instead divides
+        the IO legs by N — the balanced-stripe approximation of the
+        per-link max — and returns no map.
+      * ``chunk`` placement — every layer stripes all N links: IO legs
+        aggregate N links' bandwidth (÷N) but pay the max load across
+        all of them. No per-layer map (no link-level parallelism left
+        to expose between layers).
+
+    ``topology`` is duck-typed (``n_shards``/``placement``/
+    ``links_for_layer``) so planning code needs no storage import."""
+    if topology is None or topology.n_shards <= 1:
+        times = [method_times(c, hw, gemm_eff, profile=profile,
+                              io_streams=io_streams) for c in costs]
+        return times, None
+    n = topology.n_shards
+    chunk_mode = topology.placement == "chunk"
+    all_links = tuple(range(n))
+    times: List[MethodTimes] = []
+    layer_links: Dict[int, int] = {}
+    for li, c in enumerate(costs):
+        links = all_links if chunk_mode else topology.links_for_layer(li)
+        if link_load is not None:
+            m = link_load.factor(links)
+        else:
+            m = max(int(io_streams), 1)
+        link = None if chunk_mode else links[0]
+        t = method_times(c, hw, gemm_eff, profile=profile,
+                         io_streams=m, link=link)
+        if chunk_mode or aggregate:
+            t = dataclasses.replace(t, io_h=t.io_h / n, io_kv=t.io_kv / n)
+        else:
+            layer_links[li] = links[0]
+        times.append(t)
+    return times, (None if (chunk_mode or aggregate) else layer_links)
 
 
 def restoration_time(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile,

@@ -74,6 +74,10 @@ class HCacheManager:
         # and scheduling price shared host-link/storage bandwidth with
         # it instead of assuming exclusive access
         self.io_streams = 1
+        # distributed-store contention: per-NIC-link restore-stream
+        # counts (cost_model.LinkLoad) reported by the engine; None on
+        # one-host stores, where ``io_streams`` is the whole story
+        self.link_load = None
         # projection group plan for the batched restoration data path
         # (DESIGN.md §10): one stacked device call per group instead of
         # one per layer; 1 recovers the per-layer graph exactly; "auto"
@@ -146,12 +150,25 @@ class HCacheManager:
         between 1-way and 4-way reuses both sets of plans."""
         self.io_streams = max(int(n), 1)
 
+    def set_link_load(self, load) -> None:
+        """Engine-reported per-link restore multiplicity (distributed
+        store). Memoized like ``io_streams``: the load's identity is part
+        of ``_price_key``, so recurring fleet states reuse their plans."""
+        self.link_load = load
+
+    def shard_topology(self):
+        """The store's placement policy, None for one-host stores (or
+        stores without the distributed API)."""
+        topo_fn = getattr(self.store, "shard_topology", None)
+        return topo_fn() if topo_fn is not None else None
+
     def _price_key(self) -> tuple:
         """The planning-relevant calibration state: plans computed under
-        a different profile epoch or IO multiplicity must not be
-        reused."""
+        a different profile epoch, IO multiplicity or per-link load must
+        not be reused."""
         epoch = self.profile.epoch if self.profile is not None else -1
-        return (epoch, self.io_streams)
+        load = self.link_load.key() if self.link_load is not None else None
+        return (epoch, self.io_streams, load)
 
     def param_pack(self, params):
         """Device-stacked restoration weights (wk/wv/bk/bv/ln1 + RoPE
@@ -199,6 +216,8 @@ class HCacheManager:
                                         enc_len=enc_len,
                                         profile=self.profile,
                                         io_streams=self.io_streams,
+                                        topology=self.shard_topology(),
+                                        link_load=self.link_load,
                                         fetch_aligned=True)
             self._group_plans[key] = got
         return got
@@ -208,20 +227,22 @@ class HCacheManager:
         "fetch"``), priced at the S-bucket under the current profile and
         multiplicity; a degenerate all-equal partition collapses to its
         uniform int width."""
-        from repro.core.cost_model import layer_costs, method_times
+        from repro.core.cost_model import layer_costs, link_priced_times
         from repro.core.restoration import (fetch_aligned_partition,
                                             s_bucket)
         bucket = s_bucket(max(int(n_tokens), 1))
-        times = [method_times(c, self.hw, profile=self.profile,
-                              io_streams=self.io_streams)
-                 for c in layer_costs(self.cfg, bucket, self.dtype_bytes)]
+        times, layer_links = link_priced_times(
+            layer_costs(self.cfg, bucket, self.dtype_bytes), self.hw,
+            profile=self.profile, io_streams=self.io_streams,
+            topology=self.shard_topology(), link_load=self.link_load)
         overhead = getattr(self.hw, "dispatch_overhead", 0.0)
         if self.profile is not None:
             measured = self.profile.dispatch_overhead()
             if measured is not None:
                 overhead = measured
         part = fetch_aligned_partition(methods, times,
-                                       dispatch_overhead=overhead)
+                                       dispatch_overhead=overhead,
+                                       links=layer_links)
         if not part:
             return 1
         return part[0] if len(set(part)) == 1 else part
@@ -247,7 +268,9 @@ class HCacheManager:
                                      dtype_bytes=self.dtype_bytes,
                                      allow_recompute=allow_re,
                                      profile=self.profile,
-                                     io_streams=self.io_streams)
+                                     io_streams=self.io_streams,
+                                     topology=self.shard_topology(),
+                                     link_load=self.link_load)
         return self._plans[key]
 
     # ----------------------------------------------------------------- save

@@ -46,6 +46,18 @@ COMPUTE_KINDS = ("project", "recompute", "project_cross")
 KINDS = IO_KINDS + COMPUTE_KINDS
 
 
+def link_kind(kind: str, link: int) -> str:
+    """Cell name for a per-NIC-link rate sample: ``io_h@L2`` = io_h
+    served over link 2. The distributed store's links can be
+    heterogeneous (mixed NIC generations, a degraded path), so the
+    profiler keeps a per-link fit next to the aggregate one."""
+    return f"{kind}@L{int(link)}"
+
+
+def base_kind(kind: str) -> str:
+    return kind.split("@", 1)[0]
+
+
 @dataclasses.dataclass
 class _Bucket:
     """EMA moments of one (kind, token-bucket) cell."""
@@ -81,19 +93,24 @@ class MeasuredProfile:
 
     # ------------------------------------------------------------ recording
     def record(self, kind: str, bucket: int, work: float,
-               seconds: float) -> None:
+               seconds: float, link: Optional[int] = None) -> None:
         """Fold one observed task: ``work`` units took ``seconds``.
-        Non-positive observations are dropped (an untimed backend)."""
-        if kind not in KINDS or work <= 0.0 or seconds <= 0.0:
+        Non-positive observations are dropped (an untimed backend).
+        ``link`` additionally folds the sample into the per-link cell
+        (``io_h@L{link}``) so the planner can price heterogeneous NICs;
+        the aggregate cell still learns every sample."""
+        if base_kind(kind) not in KINDS or work <= 0.0 or seconds <= 0.0:
             return
-        cell = self.kinds.setdefault(kind, {}).setdefault(int(bucket),
-                                                          _Bucket())
-        cell.fold(float(work), float(seconds), self.alpha)
-        fit = self._fit(kind)
-        old = self._snap.get(kind)
-        if old is None or self._drifted(kind, old, fit):
-            self.epoch += 1
-            self._snap[kind] = fit
+        for k in ((kind,) if link is None
+                  else (kind, link_kind(kind, link))):
+            cell = self.kinds.setdefault(k, {}).setdefault(int(bucket),
+                                                           _Bucket())
+            cell.fold(float(work), float(seconds), self.alpha)
+            fit = self._fit(k)
+            old = self._snap.get(k)
+            if old is None or self._drifted(k, old, fit):
+                self.epoch += 1
+                self._snap[k] = fit
 
     def _drifted(self, kind: str, old: Tuple[float, float],
                  new: Tuple[float, float]) -> bool:
@@ -146,8 +163,16 @@ class MeasuredProfile:
     def sample_counts(self) -> Dict[str, int]:
         return {k: self.samples(k) for k in sorted(self.kinds)}
 
-    def rate(self, kind: str) -> Optional[float]:
-        """Marginal seconds per work unit (slope), or None unmeasured."""
+    def rate(self, kind: str, link: Optional[int] = None)\
+            -> Optional[float]:
+        """Marginal seconds per work unit (slope), or None unmeasured.
+        With ``link``, the per-link fit is preferred and the aggregate
+        fit is the fallback (a link with no samples yet prices like the
+        average link, not like the datasheet)."""
+        if link is not None:
+            fit = self._fit(link_kind(kind, link))
+            if fit is not None and fit[1] > 0.0:
+                return fit[1]
         fit = self._fit(kind)
         return None if fit is None or fit[1] <= 0.0 else fit[1]
 

@@ -51,7 +51,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.arch import BlockKind
-from repro.core.cost_model import MethodTimes, layer_costs, method_times
+from repro.core.cost_model import (MethodTimes, layer_costs,
+                                   link_priced_times, method_times)
 from repro.core.scheduler import Schedule
 from repro.kernels import ops
 from repro.models.layers.norm import apply_norm
@@ -201,11 +202,29 @@ def task_duration(task: Task, times: Sequence[MethodTimes],
     return 0.0                                 # blob reads: O(1) in tokens
 
 
+def task_links(tasks: Sequence[Task],
+               layer_links: Optional[Dict[int, int]])\
+        -> Optional[Dict[int, int]]:
+    """Task-index → NIC-link map for ``replay``: each per-layer IO task
+    inherits the link its layer's stripes live on (layer placement only;
+    chunk placement has no per-layer link and returns None)."""
+    if not layer_links:
+        return None
+    out = {}
+    for i, t in enumerate(tasks):
+        if t.stream == "io" and t.layer >= 0:
+            link = layer_links.get(t.layer)
+            if link is not None:
+                out[i] = link
+    return out
+
+
 def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
            order: Optional[Sequence[int]] = None,
            dispatch_overhead: float = 0.0,
            cross_times: Optional[CrossTimes] = None,
-           durations: Optional[Dict[int, float]] = None):
+           durations: Optional[Dict[int, float]] = None,
+           links: Optional[Dict[int, int]] = None):
     """Two-stream virtual replay of ``tasks`` in ``order`` → Timeline.
 
     Each stream is serial; a compute task with deps starts no earlier
@@ -215,12 +234,19 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
     durations (task index → seconds) with *measured* values — the
     executor's observed timeline replays the same graph under what each
     task actually took, so predicted-vs-measured makespan error is a
-    like-for-like comparison."""
+    like-for-like comparison.
+
+    ``links`` (task index → NIC link, from ``task_links``) splits the IO
+    stream into one serial queue PER LINK — the distributed store's
+    layer-striped reads genuinely overlap across shards, so the IO
+    finish is the max over link clocks, not their sum. Tasks without an
+    entry share queue 0 (the one-host degenerate case)."""
     from repro.core.pipeline import Timeline
     if order is None:
         order = range(len(tasks))
     done = [0.0] * len(tasks)
-    io_t = comp_t = io_busy = comp_busy = 0.0
+    io_clocks: Dict[int, float] = {}
+    comp_t = io_busy = comp_busy = 0.0
     for idx in order:
         t = tasks[idx]
         if durations is not None and idx in durations:
@@ -228,9 +254,10 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
         else:
             dur = task_duration(t, times, dispatch_overhead, cross_times)
         if t.stream == "io":
-            io_t += dur
+            link = links.get(idx, 0) if links else 0
+            io_clocks[link] = io_clocks.get(link, 0.0) + dur
             io_busy += dur
-            done[idx] = io_t
+            done[idx] = io_clocks[link]
         else:
             deps = t.all_deps
             start = comp_t if not deps else max(
@@ -238,6 +265,7 @@ def replay(tasks: Sequence[Task], times: Sequence[MethodTimes],
             comp_t = start + dur
             comp_busy += dur
             done[idx] = comp_t
+    io_t = max(io_clocks.values(), default=0.0)
     return Timeline(max(io_t, comp_t), io_busy, comp_busy, io_t, comp_t)
 
 
@@ -267,7 +295,8 @@ GROUP_SIZE_CANDIDATES = (1, 2, 4, 8)
 
 def fetch_aligned_partition(methods: Sequence[str],
                             times: Sequence[MethodTimes], *,
-                            dispatch_overhead: float = 0.0)\
+                            dispatch_overhead: float = 0.0,
+                            links: Optional[Dict[int, int]] = None)\
         -> Tuple[int, ...]:
     """Group boundaries at fetch-completion times (ROADMAP: "non-uniform
     groups aligned to fetch completions — the open half of group-size
@@ -282,14 +311,28 @@ def fetch_aligned_partition(methods: Sequence[str],
     earliest compute-stream completion of the first ``j`` projections,
     with fetch ``j`` landing at the io_h prefix sum and the compute
     stream starting busy for the recompute prefix (which replay runs
-    before any projection)."""
+    before any projection).
+
+    ``links`` (layer → NIC link, distributed store) makes the fetch
+    completions per-shard: each link runs its own serial queue, so fetch
+    ``j`` lands on its OWN link's running clock — much earlier than the
+    one-host prefix sum when layers stripe round-robin. The DP gates a
+    group ending at ``j`` on the prefix-max of the completions (the
+    group needs ALL members' fetches; per-link clocks are not monotone
+    in ``j``), which collapses to the plain prefix sum on one host."""
     hidden = [i for i, m in enumerate(methods) if m == "hidden"]
     n = len(hidden)
     if n <= 1:
         return (1,) * n
-    fetch_done = [0.0] * (n + 1)            # io_h prefix completion times
+    fetch_done = [0.0] * (n + 1)            # per-fetch completion times
+    link_clock: Dict[int, float] = {}
     for j, li in enumerate(hidden):
-        fetch_done[j + 1] = fetch_done[j] + times[li].io_h
+        link = links.get(li, 0) if links else 0
+        link_clock[link] = link_clock.get(link, 0.0) + times[li].io_h
+        fetch_done[j + 1] = link_clock[link]
+    gate = [0.0] * (n + 1)                  # prefix max: all fetches <= j
+    for j in range(1, n + 1):
+        gate[j] = max(gate[j - 1], fetch_done[j])
     busy0 = sum(times[li].c_token + dispatch_overhead
                 for li, m in enumerate(methods) if m == "recompute")
     c_h = [times[li].c_h for li in hidden]
@@ -301,7 +344,7 @@ def fetch_aligned_partition(methods: Sequence[str],
         proj = 0.0
         for i in range(j - 1, -1, -1):      # group = hidden[i:j]
             proj += c_h[i]
-            t = max(f[i], fetch_done[j]) + dispatch_overhead + proj
+            t = max(f[i], gate[j]) + dispatch_overhead + proj
             if best is None or t < best:
                 best, parent[j] = t, i
         f[j] = best
@@ -317,7 +360,8 @@ def choose_group_size(cfg, hw, n_tokens: int, methods: Sequence[str], *,
                       dtype_bytes: int = 2, n_blobs: int = 0,
                       cross: bool = False, enc_len: int = 0,
                       profile=None, io_streams: int = 1,
-                      fetch_aligned: bool = False):
+                      fetch_aligned: bool = False,
+                      topology=None, link_load=None):
     """Auto group-size planning (ROADMAP "restoration group-size
     tuning", planning half): replay the grouped task graph over the
     hardware profile for g ∈ {1, 2, 4, 8, L} — plus, with
@@ -340,8 +384,9 @@ def choose_group_size(cfg, hw, n_tokens: int, methods: Sequence[str], *,
     if n_hidden <= 1:
         return 1
     n_bucket = s_bucket(max(int(n_tokens), 1))
-    times = [method_times(c, hw, profile=profile, io_streams=io_streams)
-             for c in layer_costs(cfg, n_bucket, dtype_bytes)]
+    times, layer_links = link_priced_times(
+        layer_costs(cfg, n_bucket, dtype_bytes), hw, profile=profile,
+        io_streams=io_streams, topology=topology, link_load=link_load)
     cross_times = (_cross_times_at(cfg, hw, dtype_bytes, s_bucket(enc_len),
                                    profile=profile, io_streams=io_streams)
                    if cross and enc_len else None)
@@ -357,13 +402,15 @@ def choose_group_size(cfg, hw, n_tokens: int, methods: Sequence[str], *,
         tasks = compile_tasks(tuple(methods), n_blobs=n_blobs,
                               group_size=g, cross=cross)
         return replay(tasks, times, dispatch_overhead=overhead,
-                      cross_times=cross_times).makespan
+                      cross_times=cross_times,
+                      links=task_links(tasks, layer_links)).makespan
 
     best = min(cands, key=lambda g: (makespan(g), -g))
     if not fetch_aligned:
         return best
     part = fetch_aligned_partition(methods, times,
-                                   dispatch_overhead=overhead)
+                                   dispatch_overhead=overhead,
+                                   links=layer_links)
     widths = set(part)
     if len(widths) == 1:                 # degenerate partition is uniform
         part = widths.pop()
@@ -729,19 +776,35 @@ class RestorationExecutor:
                                    group_size=self.group_size,
                                    cross=self.has_cross)
         self.costs = layer_costs(mgr.cfg, self.n_eff, mgr.dtype_bytes)
-        self.times = [method_times(c, mgr.hw, profile=self.profile,
-                                   io_streams=self.io_streams)
-                      for c in self.costs]
+        # distributed store: per-layer IO priced on the links each
+        # layer's stripes occupy; one-host stores degrade to the uniform
+        # io_streams stretch inside link_priced_times
+        topo_fn = getattr(mgr.store, "shard_topology", None)
+        self.topology = topo_fn() if topo_fn is not None else None
+        self.link_load = getattr(mgr, "link_load", None)
+        self.times, self._layer_links = link_priced_times(
+            self.costs, mgr.hw, profile=self.profile,
+            io_streams=self.io_streams, topology=self.topology,
+            link_load=self.link_load)
+        self._task_links = task_links(self.tasks, self._layer_links)
         self.executed: List[int] = []
         self._done = [False] * len(self.tasks)
-        # event-driven stream interleaving state
+        # event-driven stream interleaving state (one virtual IO clock
+        # per NIC link; one-host stores use the single queue 0)
         self._io_queue = [i for i, t in enumerate(self.tasks)
                           if t.stream == "io"]
         self._comp_queue = [i for i, t in enumerate(self.tasks)
                             if t.stream == "compute"]
         self._io_clock = 0.0
+        self._io_clocks: Dict[int, float] = {}
         self._comp_clock = 0.0
         self._hbuf: Dict[int, np.ndarray] = {}
+        # async submit/complete state: io_h tickets awaiting their
+        # projection, io_kv tickets reaped as they land, the enc blob
+        # ticket awaiting project_cross
+        self._hio: Dict[int, tuple] = {}
+        self._kvio: List[tuple] = []
+        self._encio = None
         self._pending: List[Tuple[str, tuple]] = []   # sink-less buffer
         # recompute-prefix carry
         self._re_layers = [i for i, m in enumerate(self.methods)
@@ -777,12 +840,27 @@ class RestorationExecutor:
         self.predicted_makespan = replay(
             self.tasks, self.times,
             dispatch_overhead=self.dispatch_overhead,
-            cross_times=self.cross_times).makespan
+            cross_times=self.cross_times,
+            links=self._task_links).makespan
 
     # ------------------------------------------------------------- plumbing
     @property
     def done(self) -> bool:
-        return all(self._done)
+        # with async IO, a dispatched io_kv task is not finished until
+        # its ticket is reaped and the KV emitted to the sink
+        return all(self._done) and not self._kvio
+
+    def links_touched(self) -> Tuple[int, ...]:
+        """NIC links this restore's IO occupies — what the engine folds
+        into the fleet ``LinkLoad`` for contention pricing."""
+        topo = self.topology
+        if topo is None or topo.n_shards <= 1:
+            return (0,)
+        if topo.placement == "chunk":
+            return tuple(range(topo.n_shards))
+        return tuple(sorted({topo.links_for_layer(li)[0]
+                             for li, m in enumerate(self.methods)
+                             if m in ("hidden", "kv")}))
 
     def attach_sink(self, sink: RestoreSink) -> None:
         self.sink = sink
@@ -802,7 +880,8 @@ class RestorationExecutor:
                                  if not self._done[i]]
         return replay(self.tasks, self.times, order,
                       dispatch_overhead=self.dispatch_overhead,
-                      cross_times=self.cross_times)
+                      cross_times=self.cross_times,
+                      links=self._task_links)
 
     def measured_timeline(self):
         """``timeline()`` with each task's duration replaced by what it
@@ -814,7 +893,8 @@ class RestorationExecutor:
         return replay(self.tasks, self.times, order,
                       dispatch_overhead=self.dispatch_overhead,
                       cross_times=self.cross_times,
-                      durations=self.observed)
+                      durations=self.observed,
+                      links=self._task_links)
 
     # ------------------------------------------------------------ stepping
     def _ready(self, idx: int) -> bool:
@@ -847,6 +927,9 @@ class RestorationExecutor:
             if idx is None:
                 break
             self._run_task(idx)
+        # reap landed KV tickets opportunistically; once every task has
+        # dispatched, block-drain the stragglers so done means done
+        self._reap_kv(block=all(self._done))
         if self.done and not self._finished and self.sink is not None:
             self.sink.finish(self.n_tokens)
             self._finished = True
@@ -869,11 +952,15 @@ class RestorationExecutor:
     # ---------------------------------------------------------- task bodies
     def _run_task(self, idx: int) -> None:
         t = self.tasks[idx]
+        self._cur_idx = idx
         dur = task_duration(t, self.times, self.dispatch_overhead,
                             self.cross_times)
         if t.stream == "io":
             self._io_queue.remove(idx)
-            self._io_clock += dur
+            link = (self._task_links.get(idx, 0)
+                    if self._task_links else 0)
+            self._io_clocks[link] = self._io_clocks.get(link, 0.0) + dur
+            self._io_clock = max(self._io_clock, self._io_clocks[link])
         else:
             self._comp_queue.remove(idx)
             start = (self._comp_clock if not t.all_deps else
@@ -922,10 +1009,15 @@ class RestorationExecutor:
                   if t.kind in ("io_enc", "project_cross")
                   else self._bucket)
         if t.kind in IO_KINDS:
-            base = (self.mgr.store.read_service_total()
-                    if self._n_timed else 0.0)
+            # with an IO engine attached, service accrues in the shard
+            # workers — an inline delta would attribute racing reads of
+            # other tasks to this one; those tasks record at reap time
+            # from their tickets' own service (``_observe_read``)
+            inline = (self._n_timed and
+                      getattr(self.mgr.store, "io_engine", None) is None)
+            base = self.mgr.store.read_service_total() if inline else 0.0
             getattr(self, "_exec_" + t.kind)(t)
-            if self._n_timed:
+            if inline:
                 delta = ((self.mgr.store.read_service_total() - base)
                          / self._n_timed)
                 if delta > 0.0:
@@ -949,39 +1041,128 @@ class RestorationExecutor:
         if done:
             self.io_measured = max(self.io_measured, done - self._io_base)
 
+    def _observe_read(self, idx: int, kind: str, tickets,
+                      work: float, bucket: int) -> None:
+        """Fold a reaped async read into the profiler. The sync path
+        records via ``_run_profiled``'s service-total delta; tickets
+        completed by IO workers instead carry their own per-shard
+        service seconds, measured inside the worker (thread-confined).
+        Single-shard reads (layer placement) record the per-link cell
+        too, so heterogeneous NICs get their own learned rates."""
+        if self.profile is None or idx in self.observed:
+            return
+        # stripes across shards run in parallel: the task's stream
+        # duration is the slowest shard's service, not the sum
+        dur = max((tk.service for tk in tickets), default=0.0)
+        if dur <= 0.0:
+            return
+        self.observed[idx] = dur
+        shard_ids = {tk.shard_id for tk in tickets}
+        link = (shard_ids.pop() if len(shard_ids) == 1
+                and self.topology is not None else None)
+        self.profile.record(kind, bucket, work, dur, link=link)
+
+    def _collect_hidden(self, layer: int) -> np.ndarray:
+        """Hidden states of one fetched layer: from the staging buffer
+        (sync path) or by completing the layer's submitted tickets."""
+        got = self._hio.pop(layer, None)
+        if got is None:
+            return self._hbuf.pop(layer)
+        idx, lr, ls = got
+        ar = lr.wait()
+        tickets = list(lr.tickets)
+        if ls is not None:
+            sr = ls.wait()
+            tickets += list(ls.tickets)
+            self._measure(ar.completion, sr.completion)
+            data = dequantize_hidden_int8(ar.data, sr.data)
+        else:
+            self._measure(ar.completion)
+            data = ar.data
+        self._observe_read(idx, "io_h", tickets,
+                           self._task_work(self.tasks[idx]), self._bucket)
+        return data
+
+    def _reap_kv(self, block: bool = False) -> None:
+        """Complete landed io_kv tickets and emit their KV to the sink;
+        ``block=True`` drains every outstanding ticket (end of graph)."""
+        if not self._kvio:
+            return
+        cfg, dtype = self.mgr.cfg, self.model.dtype
+        remaining = []
+        for entry in self._kvio:
+            idx, layer, rk, rv = entry
+            if not block and not (rk.ready() and rv.ready()):
+                remaining.append(entry)
+                continue
+            ak, av = rk.wait(), rv.wait()
+            self._measure(ak.completion, av.completion)
+            self._observe_read(idx, "io_kv",
+                               list(rk.tickets) + list(rv.tickets),
+                               self._task_work(self.tasks[idx]),
+                               self._bucket)
+            hd = cfg.head_dim_
+            ne = self.n_eff
+            k = jnp.asarray(ak.data).reshape(1, ne, cfg.n_kv_heads, hd)
+            v = jnp.asarray(av.data).reshape(1, ne, cfg.n_kv_heads, hd)
+            self.dispatch_count += 3           # 2 uploads + 1 sink write
+            self._emit("put_kv", self._row_of[layer], k.astype(dtype),
+                       v.astype(dtype), self.start_token)
+        self._kvio = remaining
+
     def _exec_io_h(self, t: Task) -> None:
         if not self._is_attn(t.layer):
             return          # mamba layers restore via the state blob
         store, sess, n = self.mgr.store, self.session, self.n_tokens
         d = self.start_token
-        if self.compress == "int8":
-            q = store.read_layer_async(sess, "h", t.layer, n, start_token=d)
-            s = store.read_layer_async(sess, "hs", t.layer, n,
-                                       start_token=d)
-            self._measure(q.completion, s.completion)
-            self._hbuf[t.layer] = dequantize_hidden_int8(q.data, s.data)
-        else:
-            r = store.read_layer_async(sess, "h", t.layer, n, start_token=d)
-            self._measure(r.completion)
-            self._hbuf[t.layer] = r.data
+        submit = getattr(store, "submit_layer_read", None)
+        if submit is None:                     # store without async API
+            if self.compress == "int8":
+                q = store.read_layer_async(sess, "h", t.layer, n,
+                                           start_token=d)
+                s = store.read_layer_async(sess, "hs", t.layer, n,
+                                           start_token=d)
+                self._measure(q.completion, s.completion)
+                self._hbuf[t.layer] = dequantize_hidden_int8(q.data, s.data)
+            else:
+                r = store.read_layer_async(sess, "h", t.layer, n,
+                                           start_token=d)
+                self._measure(r.completion)
+                self._hbuf[t.layer] = r.data
+            return
+        # submit leg: tickets staged until the projection consumes them
+        # (with the async engine attached the reads overlap compute on
+        # the shard workers; without it they completed inline)
+        lr = submit(sess, "h", t.layer, n, start_token=d)
+        ls = (submit(sess, "hs", t.layer, n, start_token=d)
+              if self.compress == "int8" else None)
+        self._hio[t.layer] = (self._cur_idx, lr, ls)
 
     def _exec_io_kv(self, t: Task) -> None:
         if not self._is_attn(t.layer):
             return
-        cfg = self.mgr.cfg
         store, sess, n = self.mgr.store, self.session, self.n_tokens
         d = self.start_token
-        rk = store.read_layer_async(sess, "kvk", t.layer, n, start_token=d)
-        rv = store.read_layer_async(sess, "kvv", t.layer, n, start_token=d)
-        self._measure(rk.completion, rv.completion)
-        hd = cfg.head_dim_
-        ne = self.n_eff
-        k = jnp.asarray(rk.data).reshape(1, ne, cfg.n_kv_heads, hd)
-        v = jnp.asarray(rv.data).reshape(1, ne, cfg.n_kv_heads, hd)
-        self.dispatch_count += 3               # 2 uploads + 1 sink write
-        self._emit("put_kv", self._row_of[t.layer],
-                   k.astype(self.model.dtype), v.astype(self.model.dtype),
-                   d)
+        submit = getattr(store, "submit_layer_read", None)
+        if submit is None:
+            cfg = self.mgr.cfg
+            rk = store.read_layer_async(sess, "kvk", t.layer, n,
+                                        start_token=d)
+            rv = store.read_layer_async(sess, "kvv", t.layer, n,
+                                        start_token=d)
+            self._measure(rk.completion, rv.completion)
+            hd = cfg.head_dim_
+            ne = self.n_eff
+            k = jnp.asarray(rk.data).reshape(1, ne, cfg.n_kv_heads, hd)
+            v = jnp.asarray(rv.data).reshape(1, ne, cfg.n_kv_heads, hd)
+            self.dispatch_count += 3           # 2 uploads + 1 sink write
+            self._emit("put_kv", self._row_of[t.layer],
+                       k.astype(self.model.dtype),
+                       v.astype(self.model.dtype), d)
+            return
+        rk = submit(sess, "kvk", t.layer, n, start_token=d)
+        rv = submit(sess, "kvv", t.layer, n, start_token=d)
+        self._kvio.append((self._cur_idx, t.layer, rk, rv))
 
     def _exec_project(self, t: Task) -> None:
         members = [li for li in t.members if self._is_attn(li)]
@@ -991,11 +1172,15 @@ class RestorationExecutor:
         n = self.n_eff
         S = s_bucket(n)
         G = max(self._g_pad, len(members))
-        h0 = self._hbuf[members[0]]
+        # completing the submitted tickets here (not at io_h dispatch) is
+        # what lets reads of later layers stream on the shard workers
+        # while this projection computes
+        fetched = {li: self._collect_hidden(li) for li in members}
+        h0 = fetched[members[0]]
         stack = np.zeros((G, S, h0.shape[-1]), h0.dtype)
         rows = [self._row_of[li] for li in members]
         for g, li in enumerate(members):
-            stack[g, :n] = self._hbuf.pop(li)
+            stack[g, :n] = fetched.pop(li)
         # pad to the stable group width with a repeated row id over zero
         # hidden states; padded outputs are sliced away below
         rows_pad = np.asarray(rows + [rows[-1]] * (G - len(rows)), np.int32)
@@ -1050,15 +1235,27 @@ class RestorationExecutor:
         self._emit("put_states", conv, ssm)
 
     def _exec_io_enc(self, t: Task) -> None:
-        # blob reads have no striped/async API (unlike read_layer_async),
-        # so this is a synchronous host read charged only on the virtual
-        # clock (CrossTimes.io) and excluded from io_measured; a
-        # chunked/async encoder-blob path is future work
-        self._enc_out = np.asarray(
-            self.mgr.store.get_blob(self.session, "enc", 0))
+        # the encoder blob lives whole on its owning shard; the submit
+        # path overlaps the read with decoder-side restoration and the
+        # cross-projection reaps it. Charged only on the virtual clock
+        # (CrossTimes.io) and excluded from io_measured.
+        submit = getattr(self.mgr.store, "submit_blob_read", None)
+        if submit is None:
+            self._enc_out = np.asarray(
+                self.mgr.store.get_blob(self.session, "enc", 0))
+            return
+        self._encio = (self._cur_idx, submit(self.session, "enc", 0))
 
     def _exec_project_cross(self, t: Task) -> None:
         from repro.models import encdec as encdec_mod
+        if self._encio is not None:
+            idx, ticket = self._encio
+            self._encio = None
+            parts = ticket.wait()
+            self._enc_out = np.asarray(parts[0])
+            self._observe_read(idx, "io_enc", [ticket],
+                               self._task_work(self.tasks[idx]),
+                               self._enc_bucket)
         enc_out = jnp.asarray(self._enc_out)[None]
         self._enc_out = None
         ck, cv = encdec_mod.cross_kv(self.params, enc_out, self.model.h)

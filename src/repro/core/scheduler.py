@@ -26,7 +26,7 @@ from typing import List, Optional, Sequence, Tuple
 from repro.config.arch import ArchConfig
 from repro.config.hardware import HardwareProfile
 from repro.core.cost_model import (LayerCost, MethodTimes, layer_costs,
-                                   method_times)
+                                   link_priced_times, method_times)
 
 METHODS = ("hidden", "kv", "recompute")
 
@@ -85,30 +85,69 @@ def _evaluate(counts_per_class, class_times, class_ids) -> Tuple[float, float]:
 def solve(cfg: ArchConfig, n_tokens: int, hw: HardwareProfile, *,
           dtype_bytes: int = 2, allow_recompute: bool = True,
           allow_kv: bool = True, force_hidden: bool = False,
-          profile=None, io_streams: int = 1) -> Schedule:
+          profile=None, io_streams: int = 1,
+          topology=None, link_load=None) -> Schedule:
     """Exact min-max schedule over (possibly heterogeneous) layers.
 
     ``profile`` (a ``MeasuredProfile``) substitutes observed rates for the
-    static hardware numbers; ``io_streams`` prices N-way concurrent
-    restores sharing the host link (IO legs stretch, compute does not), so
-    under contention the split shifts layers from IO methods toward
-    recompute."""
+    static hardware numbers; contention pricing shifts layers from IO
+    methods toward recompute. One-host store: ``io_streams`` stretches
+    every IO leg (N restores share one host link). Distributed store
+    (``topology``/``link_load``): each layer's IO is priced on the links
+    it touches only — the aggregate (balanced-stripe) form, since this
+    solver's IO objective is a serial sum (see ``link_priced_times``)."""
     costs = layer_costs(cfg, n_tokens, dtype_bytes)
-    # group identical layers into classes
+    times_per_layer, _ = link_priced_times(
+        costs, hw, profile=profile, io_streams=io_streams,
+        topology=topology, link_load=link_load, aggregate=True)
+    # group layers into classes — identical (cost, priced time); per-link
+    # pricing can split equal-cost layers into distinct classes when their
+    # links carry different loads
     class_of: List[int] = []
     class_costs: List[LayerCost] = []
-    for c in costs:
-        for i, cc in enumerate(class_costs):
-            if cc == c:
+    class_times: List[MethodTimes] = []
+    for c, t in zip(costs, times_per_layer):
+        for i, (cc, ct) in enumerate(zip(class_costs, class_times)):
+            if cc == c and ct == t:
                 class_of.append(i)
                 break
         else:
             class_costs.append(c)
+            class_times.append(t)
             class_of.append(len(class_costs) - 1)
-    class_times = [method_times(c, hw, profile=profile,
-                                io_streams=io_streams)
-                   for c in class_costs]
     n_per_class = [class_of.count(i) for i in range(len(class_costs))]
+
+    # the exhaustive search is prod over classes of O(n_c^2) options;
+    # unequal per-link loads can split every cost class N_links-ways.
+    # When that blows past an exact-search budget, coarsen back to
+    # cost-only classes with layer-count-weighted mean times — the split
+    # decision degrades gracefully to average-link pricing while
+    # restore_makespan keeps the exact per-link replay.
+    search = 1.0
+    for n in n_per_class:
+        search *= (n + 1) * (n + 2) / 2
+    if search > 2e5:
+        class_of, class_costs = [], []
+        acc: List[List[float]] = []
+        for c, t in zip(costs, times_per_layer):
+            for i, cc in enumerate(class_costs):
+                if cc == c:
+                    class_of.append(i)
+                    a = acc[i]
+                    a[0] += t.io_h
+                    a[1] += t.io_kv
+                    a[2] += 1
+                    break
+            else:
+                class_costs.append(c)
+                acc.append([t.io_h, t.io_kv, 1])
+                class_of.append(len(class_costs) - 1)
+        class_times = []
+        for c, (io_h, io_kv, n) in zip(class_costs, acc):
+            base = method_times(c, hw, profile=profile, io_streams=1)
+            class_times.append(dataclasses.replace(
+                base, io_h=io_h / n, io_kv=io_kv / n))
+        n_per_class = [class_of.count(i) for i in range(len(class_costs))]
 
     # SSM classes have no KV-offload analog with io==0; their "kv" method is
     # the state offload, costed via io_state inside method_times.

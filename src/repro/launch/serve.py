@@ -25,7 +25,8 @@ from repro.models import Model
 from repro.models.module import split
 from repro.serving import InferenceEngine, Request
 from repro.serving.kv_cache import BACKENDS
-from repro.storage import ChunkStore, make_array
+from repro.storage import (AsyncIOEngine, ChunkStore, make_array,
+                           make_shards)
 
 
 def main() -> None:
@@ -39,6 +40,22 @@ def main() -> None:
     p.add_argument("--max-seq", type=int, default=256)
     p.add_argument("--profile", default="a100", choices=sorted(PROFILES))
     p.add_argument("--ssds", type=int, default=4)
+    p.add_argument("--hosts", type=int, default=1,
+                   help="distributed store: number of host shards, each "
+                        "with --ssds simulated SSDs behind its own NIC "
+                        "link (1 = classic one-host store)")
+    p.add_argument("--nic-bw", type=float, default=None, metavar="GBPS",
+                   help="per-shard NIC bandwidth in GB/s (default: the "
+                        "hardware model's NIC_BW)")
+    p.add_argument("--placement", default="layer",
+                   choices=("layer", "chunk"),
+                   help="shard placement: layer-striped (layer L on "
+                        "shard L%%N, per-link scheduling) or token-chunk-"
+                        "striped (every layer fans over all links)")
+    p.add_argument("--async-io", action=argparse.BooleanOptionalAction,
+                   default=None,
+                   help="attach the per-shard async IO engine (default: "
+                        "on when --hosts > 1)")
     p.add_argument("--full", action="store_true")
     p.add_argument("--preempt-quantum", type=int, default=None,
                    help="enable mid-stream eviction after N resident steps")
@@ -117,8 +134,20 @@ def main() -> None:
                   remat="none")
     params, _ = split(model.init(jax.random.PRNGKey(0)))
     cold = make_array("dram", args.ssds) if args.budget_kb else None
-    store = ChunkStore(make_array("ssd", args.ssds), chunk_tokens=64,
-                       cold_devices=cold)
+    if args.hosts > 1:
+        from repro.config.hardware import NIC_BW
+        nic_bw = (args.nic_bw * 1e9 if args.nic_bw else NIC_BW)
+        store = ChunkStore(shards=make_shards(args.hosts, args.ssds, "ssd",
+                                              nic_bw=nic_bw),
+                           chunk_tokens=64, cold_devices=cold,
+                           placement=args.placement)
+        if args.async_io is not False:
+            store.attach_io_engine(AsyncIOEngine(args.hosts))
+    else:
+        store = ChunkStore(make_array("ssd", args.ssds), chunk_tokens=64,
+                           cold_devices=cold)
+        if args.async_io:
+            store.attach_io_engine(AsyncIOEngine(1))
     measured = None
     if args.hw_profile:
         import os
@@ -155,6 +184,7 @@ def main() -> None:
         except KeyboardInterrupt:
             pass
         _dump_metrics(engine, args.metrics_json)
+        store.close()
         return
 
     rng = np.random.default_rng(0)
@@ -216,6 +246,7 @@ def main() -> None:
     print("recoverable sessions:", engine.recoverable_sessions())
     _dump_metrics(engine, args.metrics_json)
     engine.close()
+    store.close()                # joins the async IO workers, if attached
 
 
 def _dump_metrics(engine, path) -> None:

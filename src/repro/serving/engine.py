@@ -726,13 +726,33 @@ class InferenceEngine:
         """Report the restore multiplicity to the planner: how many
         sessions are (about to be) pulling the shared host link at once.
         ``extra`` counts a restore being placed this instant, before its
-        slot shows RESTORING."""
-        n = max(sum(1 for s in self.slots
-                    if s is not None and s.phase == Phase.RESTORING)
-                + extra, 1)
+        slot shows RESTORING.
+
+        Distributed store: additionally fold each restoring executor's
+        touched NIC links into a per-link ``LinkLoad`` — contention is
+        then charged only on the links a candidate restore shares with
+        the in-flight ones, not globally (an ``extra`` placement has no
+        executor yet and conservatively counts on every link)."""
+        restoring = [s.executor for s in self.slots
+                     if s is not None and s.phase == Phase.RESTORING
+                     and s.executor is not None]
+        n = max(len(restoring) + extra, 1)
         setter = getattr(self.mgr, "set_io_streams", None)
         if setter is not None:
             setter(n)
+        load_setter = getattr(self.mgr, "set_link_load", None)
+        topo_fn = getattr(self.mgr, "shard_topology", None)
+        topo = topo_fn() if topo_fn is not None else None
+        if load_setter is not None and topo is not None \
+                and topo.n_shards > 1:
+            from repro.core.cost_model import LinkLoad
+            streams: Dict[int, int] = {}
+            for ex in restoring:
+                for link in ex.links_touched():
+                    streams[link] = streams.get(link, 0) + 1
+            for link in range(topo.n_shards):
+                streams[link] = streams.get(link, 0) + extra
+            load_setter(LinkLoad(streams))
         self.metrics.io_streams_peak = max(self.metrics.io_streams_peak, n)
 
     def _restore_step(self) -> None:

@@ -1,8 +1,13 @@
+from repro.storage.aio import AsyncIOEngine, ReadTicket
 from repro.storage.backend import (Backend, DRAMBackend, FileBackend,
                                    SimulatedSSD, StorageArray, make_array)
-from repro.storage.chunk_store import ChunkStore
+from repro.storage.chunk_store import AsyncRead, ChunkStore, LayerRead
+from repro.storage.shard import (HostShard, NICLink, ShardTopology,
+                                 flatten_shards, make_shards)
 from repro.storage.two_stage import DirectSaver, SnapshotTask, TwoStageSaver
 
-__all__ = ["Backend", "DRAMBackend", "FileBackend", "SimulatedSSD",
-           "StorageArray", "make_array", "ChunkStore", "DirectSaver",
+__all__ = ["AsyncIOEngine", "ReadTicket", "Backend", "DRAMBackend",
+           "FileBackend", "SimulatedSSD", "StorageArray", "make_array",
+           "AsyncRead", "ChunkStore", "LayerRead", "HostShard", "NICLink",
+           "ShardTopology", "flatten_shards", "make_shards", "DirectSaver",
            "SnapshotTask", "TwoStageSaver"]

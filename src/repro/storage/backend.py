@@ -77,8 +77,13 @@ class DRAMBackend(Backend):
         self._lock = threading.Lock()
 
     def write(self, key, data):
+        stored = np.array(data, copy=True)
+        # reads hand out this exact array (zero-copy); freezing it makes
+        # cross-session aliasing bugs fail loudly instead of corrupting
+        # every alias of a shared chunk. Mutating consumers must copy.
+        stored.flags.writeable = False
         with self._lock:
-            self._store[key] = np.array(data, copy=True)
+            self._store[key] = stored
         return 0.0
 
     def read(self, key):
@@ -128,21 +133,26 @@ class SimulatedSSD(DRAMBackend):
         self.now = 0.0               # external virtual time (set by the store)
         self.read_time_total = 0.0
         self.write_time_total = 0.0
+        # clock arithmetic is read-modify-write; async IO workers and the
+        # engine thread may both charge this device
+        self._clock_lock = threading.Lock()
 
     def write(self, key, data):
         super().write(key, data)
-        dur = self.io_latency + data.nbytes / self.write_bw
-        start = max(self.now, self.clock.write_busy_until)
-        self.clock.write_busy_until = start + dur
-        self.write_time_total += dur
-        return self.clock.write_busy_until
+        with self._clock_lock:
+            dur = self.io_latency + data.nbytes / self.write_bw
+            start = max(self.now, self.clock.write_busy_until)
+            self.clock.write_busy_until = start + dur
+            self.write_time_total += dur
+            return self.clock.write_busy_until
 
     def read(self, key):
         data = super().read(key)
-        dur = self.io_latency + data.nbytes / self.read_bw
-        start = max(self.now, self.clock.read_busy_until)
-        self.clock.read_busy_until = start + dur
-        self.read_time_total += dur
+        with self._clock_lock:
+            dur = self.io_latency + data.nbytes / self.read_bw
+            start = max(self.now, self.clock.read_busy_until)
+            self.clock.read_busy_until = start + dur
+            self.read_time_total += dur
         return data
 
     def read_async(self, key):
@@ -161,6 +171,13 @@ class FileBackend(Backend):
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        # per-key size cache: bytes_used/nbytes sit on hot accounting
+        # paths (budget checks per write) — one listdir walk at open,
+        # then invalidated incrementally on write/delete
+        self._sizes: Dict[str, int] = {
+            urllib.parse.unquote(f[:-4]): os.path.getsize(
+                os.path.join(root, f))
+            for f in os.listdir(root) if f.endswith(".npy")}
 
     def _path(self, key: str) -> str:
         # percent-encoding is injective: a session id that legitimately
@@ -174,12 +191,14 @@ class FileBackend(Backend):
         with open(tmp, "wb") as f:               # np.save would append .npy
             np.save(f, data)
         os.replace(tmp, self._path(key))         # atomic commit
+        self._sizes[key] = os.path.getsize(self._path(key))
         return 0.0
 
     def read(self, key):
         return np.load(self._path(key))
 
     def delete(self, key):
+        self._sizes.pop(key, None)
         try:
             os.remove(self._path(key))
         except FileNotFoundError:
@@ -197,12 +216,14 @@ class FileBackend(Backend):
                 if f.endswith(".npy")]
 
     def nbytes(self, key):
-        return os.path.getsize(self._path(key))
+        size = self._sizes.get(key)
+        if size is None:                         # externally-written file
+            size = self._sizes[key] = os.path.getsize(self._path(key))
+        return size
 
     @property
     def bytes_used(self):
-        return sum(os.path.getsize(os.path.join(self.root, f))
-                   for f in os.listdir(self.root))
+        return sum(self._sizes.values())
 
 
 class StorageArray(list):
@@ -212,15 +233,18 @@ class StorageArray(list):
     round-robin) but additionally tracks a ``budget_bytes`` ceiling and
     fires registered pressure callbacks — typically the capacity
     manager's reclaim ladder — when the tier's total footprint exceeds
-    it. Reclaim is re-entrancy guarded: a callback that itself writes or
-    deletes through the store cannot recurse into another reclaim."""
+    it. Reclaim is guarded by a non-blocking lock: a callback that
+    itself writes or deletes through the store cannot recurse into
+    another reclaim (same-thread acquire fails), and two threads — e.g.
+    an async IO worker hitting a pressure callback while the engine
+    thread writes — cannot run the reclaim ladder concurrently."""
 
     def __init__(self, devices: Sequence[Backend],
                  budget_bytes: Optional[int] = None):
         super().__init__(devices)
         self.budget_bytes = budget_bytes
         self._callbacks: List[Callable[["StorageArray"], None]] = []
-        self._reclaiming = False
+        self._reclaim_lock = threading.Lock()
 
     @property
     def bytes_used(self) -> int:
@@ -234,14 +258,16 @@ class StorageArray(list):
         self._callbacks.append(callback)
 
     def maybe_reclaim(self) -> None:
-        if self._reclaiming or not self.over_budget():
+        if not self.over_budget():
             return
-        self._reclaiming = True
+        if not self._reclaim_lock.acquire(blocking=False):
+            return                       # reclaim already running
         try:
-            for cb in self._callbacks:
-                cb(self)
+            if self.over_budget():       # re-check under the lock
+                for cb in self._callbacks:
+                    cb(self)
         finally:
-            self._reclaiming = False
+            self._reclaim_lock.release()
 
 
 def make_array(kind: str, n_devices: int, root: Optional[str] = None,

@@ -34,7 +34,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.config.hardware import TPU_CHUNK_TOKENS
+from repro.storage.aio import AsyncIOEngine, ReadTicket
 from repro.storage.backend import Backend, SimulatedSSD, StorageArray
+from repro.storage.shard import HostShard, ShardTopology, flatten_shards
 
 
 def _enc(session: str) -> str:
@@ -64,6 +66,46 @@ class AsyncRead:
     device_completions: List[float]
 
 
+class LayerRead:
+    """Handle for a submitted (possibly async) striped layer read.
+
+    One ``ReadTicket`` per shard touched; ``wait()`` reassembles the
+    chunks in token order and returns the same ``AsyncRead`` the inline
+    path produces, so consumers are agnostic to sync vs async IO. The
+    ``links`` attribute names the NIC links this read occupies — the
+    executor reports them to the per-link contention pricer."""
+
+    __slots__ = ("tickets", "_order", "_slice", "links", "layer")
+
+    def __init__(self, tickets: List[ReadTicket],
+                 order: List[Tuple[int, int]],
+                 slice_: Tuple[int, int], links: Tuple[int, ...],
+                 layer: int):
+        self.tickets = tickets
+        self._order = order              # chunk order -> (ticket, part) idx
+        self._slice = slice_             # (offset, stop) into the concat
+        self.links = links
+        self.layer = layer
+
+    def ready(self) -> bool:
+        return all(t.ready() for t in self.tickets)
+
+    @property
+    def service(self) -> float:
+        return sum(t.service for t in self.tickets)
+
+    def wait(self, timeout: Optional[float] = None) -> AsyncRead:
+        for t in self.tickets:
+            t.wait(timeout)
+        parts = [self.tickets[ti].parts[pi] for ti, pi in self._order]
+        completions = [self.tickets[ti].completion for ti, _ in self._order]
+        out = np.concatenate(parts, axis=0) if parts else \
+            np.zeros((0,), np.float32)
+        off, stop = self._slice
+        return AsyncRead(out[off:stop], max(completions, default=0.0),
+                         completions)
+
+
 @dataclasses.dataclass
 class _Partial:
     start_token: int
@@ -85,11 +127,29 @@ class ChunkStore:
     counts the HOT tier only — it is the budgeted quantity; the cold
     tier is accounted separately (``bytes_cold``)."""
 
-    def __init__(self, devices: Sequence[Backend],
+    def __init__(self, devices: Optional[Sequence[Backend]] = None,
                  chunk_tokens: int = TPU_CHUNK_TOKENS,
-                 cold_devices: Optional[Sequence[Backend]] = None):
-        self.devices = (devices if isinstance(devices, StorageArray)
-                        else list(devices))
+                 cold_devices: Optional[Sequence[Backend]] = None,
+                 *, shards: Optional[Sequence[HostShard]] = None,
+                 placement: str = "layer",
+                 budget_bytes: Optional[int] = None,
+                 io_engine: Optional[AsyncIOEngine] = None):
+        if shards is not None:
+            # distributed store (DESIGN.md §15): each shard's devices sit
+            # behind its NIC link; the flattened StorageArray keeps the
+            # budget/pressure accounting identical to the one-host store
+            self.shards: Optional[List[HostShard]] = list(shards)
+            self.topology: Optional[ShardTopology] = ShardTopology(
+                len(self.shards), placement)
+            self.devices = flatten_shards(self.shards,
+                                          budget_bytes=budget_bytes)
+        else:
+            assert devices is not None
+            self.shards = None
+            self.topology = None
+            self.devices = (devices if isinstance(devices, StorageArray)
+                            else list(devices))
+        self.io_engine = io_engine
         self.cold = list(cold_devices) if cold_devices else None
         self.chunk_tokens = chunk_tokens
         self._partials: Dict[Tuple[str, str, int], _Partial] = {}
@@ -109,22 +169,58 @@ class ChunkStore:
         # RLock: the sharing bookkeeping runs inside append/flush, which
         # already hold the staging lock
         self._lock = threading.RLock()
+        # device -> owning shard, for routing fallback-located chunks
+        # through the correct NIC link
+        self._dev_shard: Dict[int, HostShard] = {}
+        if self.shards is not None:
+            for s in self.shards:
+                for d in s.devices:
+                    self._dev_shard[id(d)] = s
 
     # ------------------------------------------------------------- placement
+    def _shard_for(self, layer: int, chunk: int) -> Optional[HostShard]:
+        if self.shards is None:
+            return None
+        return self.shards[self.topology.shard_for(layer, chunk)]
+
     def _device_for(self, layer: int, chunk: int) -> Backend:
+        shard = self._shard_for(layer, chunk)
+        if shard is not None:
+            return shard.device_for(layer, chunk)
         return self.devices[(layer + chunk) % len(self.devices)]
 
     def _cold_for(self, layer: int, chunk: int) -> Backend:
         return self.cold[(layer + chunk) % len(self.cold)]
 
     def _backend_for(self, layer: int, chunk: int, key: str) -> Backend:
-        """Device holding ``key``: hot placement first, cold fallback."""
+        """Device holding ``key``: hot placement first, cold fallback.
+        In sharded mode, a key absent at its computed placement is
+        searched across all shards — a store reopened with a different
+        shard count (the owner map in the manifest records the writer's
+        topology) still finds every chunk."""
         dev = self._device_for(layer, chunk)
-        if self.cold is not None and not dev.contains(key):
-            cold = self._cold_for(layer, chunk)
-            if cold.contains(key):
-                return cold
+        if not dev.contains(key):
+            if self.shards is not None:
+                for d in self.devices:
+                    if d is not dev and d.contains(key):
+                        return d
+            if self.cold is not None:
+                cold = self._cold_for(layer, chunk)
+                if cold.contains(key):
+                    return cold
         return dev
+
+    def shard_topology(self) -> Optional[ShardTopology]:
+        """Placement policy for planning code (None = one-host store)."""
+        return self.topology
+
+    def attach_io_engine(self, engine: Optional[AsyncIOEngine]) -> None:
+        self.io_engine = engine
+
+    def close(self) -> None:
+        if self.io_engine is not None:
+            self.io_engine.close()
+            self.io_engine = None
 
     def _maybe_reclaim(self) -> None:
         """Budget check after a write burst (never under ``self._lock`` —
@@ -390,7 +486,12 @@ class ChunkStore:
 
         ``start_token`` is the restore-skip entry point: only the chunks
         covering tokens [start_token, n_tokens) are read (and charged on
-        the device clocks); the returned data starts at ``start_token``."""
+        the device clocks); the returned data starts at ``start_token``.
+
+        In sharded mode every chunk read additionally occupies its
+        shard's NIC link: ``done`` becomes the link completion, so the
+        virtual timeline prices the network hop, and chunks on distinct
+        shards overlap on distinct links."""
         C = self.chunk_tokens
         first = start_token // C
         n_chunks = (n_tokens + C - 1) // C
@@ -398,7 +499,7 @@ class ChunkStore:
         completions = []
         for ci in range(first, n_chunks):
             key = self._resolve(_key(session, stream, layer, ci))
-            data, done = self._backend_for(layer, ci, key).read_async(key)
+            data, done, _ = self._read_chunk_async(layer, ci, key)
             parts.append(data)
             completions.append(done)
         out = np.concatenate(parts, axis=0) if parts else \
@@ -406,6 +507,109 @@ class ChunkStore:
         off = start_token - first * C
         return AsyncRead(out[off:n_tokens - first * C],
                          max(completions, default=0.0), completions)
+
+    def _read_chunk_async(self, layer: int, chunk: int, key: str)\
+            -> Tuple[np.ndarray, float, Optional[HostShard]]:
+        """One chunk read routed through the owning shard's link (when
+        sharded and hot); returns (data, virtual completion, shard)."""
+        dev = self._backend_for(layer, chunk, key)
+        shard = self._dev_shard.get(id(dev))
+        if shard is not None and shard.link is not None:
+            data, done = shard.read_async(dev, key)
+            return data, done, shard
+        data, done = dev.read_async(key)
+        return data, done, shard
+
+    # ------------------------------------------------------- async submission
+    def _shard_groups(self, session: str, stream: str, layer: int,
+                      n_tokens: int, start_token: int):
+        """Chunk reads of one layer grouped by owning shard, in chunk
+        order: {shard_key: [(chunk_pos, dev, shard, key), ...]}."""
+        C = self.chunk_tokens
+        first = start_token // C
+        n_chunks = (n_tokens + C - 1) // C
+        groups: Dict[int, List] = {}
+        pos = 0
+        for ci in range(first, n_chunks):
+            key = self._resolve(_key(session, stream, layer, ci))
+            dev = self._backend_for(layer, ci, key)
+            shard = self._dev_shard.get(id(dev))
+            sid = shard.shard_id if shard is not None else 0
+            groups.setdefault(sid, []).append((pos, dev, shard, key))
+            pos += 1
+        off = start_token - first * C
+        return groups, (off, n_tokens - first * C)
+
+    def submit_layer_read(self, session: str, stream: str, layer: int,
+                          n_tokens: int, start_token: int = 0) -> LayerRead:
+        """Submit a striped layer read: one ticket per shard on the async
+        IO engine (reads overlap the caller for real), or — with no
+        engine attached — already-completed tickets from inline reads, so
+        consumers never branch on the IO mode."""
+        groups, slice_ = self._shard_groups(session, stream, layer,
+                                            n_tokens, start_token)
+        tickets: List[ReadTicket] = []
+        order: List[Optional[Tuple[int, int]]] = [None] * sum(
+            len(g) for g in groups.values())
+        links = []
+        for sid in sorted(groups):
+            entries = groups[sid]
+            keys = [e[3] for e in entries]
+            if entries and entries[0][2] is not None \
+                    and entries[0][2].link is not None:
+                links.append(sid)
+            ti = len(tickets)
+            for pi, (pos, _, _, _) in enumerate(entries):
+                order[pos] = (ti, pi)
+            if self.io_engine is not None:
+                shard0 = entries[0][2]
+                service_fn = (shard0.read_service_total
+                              if shard0 is not None else None)
+                reads = []
+                for _, dev, shard, key in entries:
+                    if shard is not None and shard.link is not None:
+                        reads.append((
+                            lambda s=shard, d=dev, k=key: s.read_async(d, k),
+                            service_fn))
+                    else:
+                        reads.append((
+                            lambda d=dev, k=key: d.read_async(k),
+                            service_fn))
+                tickets.append(self.io_engine.submit(sid, keys, reads))
+            else:
+                parts, completion, service = [], 0.0, 0.0
+                for _, dev, shard, key in entries:
+                    if shard is not None and shard.link is not None:
+                        before = shard.read_service_total()
+                        data, done = shard.read_async(dev, key)
+                        service += shard.read_service_total() - before
+                    else:
+                        data, done = dev.read_async(key)
+                    parts.append(data)
+                    completion = max(completion, done)
+                tickets.append(ReadTicket.completed(
+                    keys, parts, completion, sid, service))
+        return LayerRead(tickets, order, slice_, tuple(links), layer)
+
+    def submit_blob_read(self, session: str, stream: str,
+                         layer: int) -> ReadTicket:
+        """Async whole-object read (encoder blobs, SSM states)."""
+        key = self._resolve(_key(session, stream, layer, 0))
+        dev = self._backend_for(layer, 0, key)
+        shard = self._dev_shard.get(id(dev))
+        sid = shard.shard_id if shard is not None else 0
+        if self.io_engine is not None:
+            if shard is not None and shard.link is not None:
+                read = (lambda: shard.read_async(dev, key),
+                        shard.read_service_total)
+            else:
+                read = (lambda: dev.read_async(key), None)
+            return self.io_engine.submit(sid, [key], [read])
+        if shard is not None and shard.link is not None:
+            data, done = shard.read_async(dev, key)
+        else:
+            data, done = dev.read_async(key)
+        return ReadTicket.completed([key], [data], done, sid)
 
     def layer_available(self, session: str, stream: str, layer: int,
                         n_tokens: int = 1) -> bool:
@@ -440,6 +644,12 @@ class ChunkStore:
 
     # ------------------------------------------------------------- manifest
     def put_manifest(self, session: str, manifest: dict) -> None:
+        if self.topology is not None:
+            # owner map: the topology the session's chunks were placed
+            # under — a store reopened with a different shard count uses
+            # it to locate stripes (and a remote restore to target hosts)
+            manifest = dict(manifest)
+            manifest["shards"] = self.topology.to_json()
         raw = np.frombuffer(json.dumps(manifest).encode(), dtype=np.uint8)
         self.devices[0].write(_meta_key(session), raw.copy())
         if self.cold is not None:
@@ -614,12 +824,18 @@ class ChunkStore:
         for d in self.devices:
             if isinstance(d, SimulatedSSD):
                 d.now = now
+        if self.shards is not None:
+            for s in self.shards:
+                s.sync_clock(now)
 
     def read_completion(self) -> float:
         done = 0.0
         for d in self.devices:
             if isinstance(d, SimulatedSSD):
                 done = max(done, d.read_completion())
+        if self.shards is not None:
+            for s in self.shards:
+                done = max(done, s.read_completion())
         return done
 
     def n_timed_devices(self) -> int:

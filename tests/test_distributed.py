@@ -1,0 +1,375 @@
+"""Distributed ChunkStore: cross-host striped restoration, the async IO
+engine, per-link contention pricing, and the storage-layer regression
+guards that rode along (reclaim lock, read-only DRAM views, FileBackend
+size memoization)."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.arch import reduced_for_smoke
+from repro.config.hardware import PAPER_A100
+from repro.configs import get_arch
+from repro.core.cost_model import (LinkLoad, layer_costs,
+                                   link_priced_times, method_times)
+from repro.core.hcache import HCacheManager
+from repro.core.restoration import (CacheAssembler, RestorationExecutor,
+                                    compile_tasks, fetch_aligned_partition,
+                                    replay, task_links)
+from repro.core.scheduler import solve
+from repro.models import Model
+from repro.models.module import split
+from repro.serving import InferenceEngine, Request
+from repro.storage import (AsyncIOEngine, ChunkStore, DRAMBackend,
+                           FileBackend, ShardTopology, StorageArray,
+                           make_array, make_shards)
+
+
+# ------------------------------------------------------------ store level
+def _fill(store, n_layers=3, n_tokens=40, width=8, seed=0):
+    rng = np.random.default_rng(seed)
+    ref = {}
+    for layer in range(n_layers):
+        data = rng.standard_normal((n_tokens, width)).astype(np.float32)
+        store.append_tokens("s", "h", layer, 0, data)
+        ref[layer] = data
+    store.flush("s")
+    return ref
+
+
+@pytest.mark.parametrize("placement", ["layer", "chunk"])
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_reads_byte_identical(placement, n_shards):
+    """Restored bytes are invariant to shard count and placement, for
+    both the inline and the async-engine read paths."""
+    base = ChunkStore(make_array("dram", 2), chunk_tokens=16)
+    ref = _fill(base)
+    store = ChunkStore(shards=make_shards(n_shards, 2, "ssd"),
+                       chunk_tokens=16, placement=placement)
+    _fill(store)
+    for layer in range(3):
+        np.testing.assert_array_equal(
+            store.read_layer("s", "h", layer, 40), ref[layer])
+    store.attach_io_engine(AsyncIOEngine(n_shards))
+    try:
+        reads = [store.submit_layer_read("s", "h", layer, 40)
+                 for layer in range(3)]
+        for layer, lr in enumerate(reads):
+            np.testing.assert_array_equal(lr.wait().data, ref[layer])
+    finally:
+        store.close()
+
+
+def test_restore_skip_through_sharded_reads():
+    """``start_token`` skips whole stripes: only the covering chunks are
+    read and the payload starts at the skip offset — across shards."""
+    store = ChunkStore(shards=make_shards(4, 2, "ssd"), chunk_tokens=16,
+                      placement="layer")
+    ref = _fill(store)
+    lr = store.submit_layer_read("s", "h", 1, 40, start_token=16)
+    np.testing.assert_array_equal(lr.wait().data, ref[1][16:])
+    # the skipped chunk's stripe is not even submitted
+    assert sum(len(t.keys) for t in lr.tickets) == 2
+
+
+def test_layer_read_links_and_owner_map():
+    """Layer placement: a layer read occupies exactly its owning link;
+    chunk placement fans over all of them. The manifest persists the
+    owner map so a reopened store can locate stripes."""
+    store = ChunkStore(shards=make_shards(4, 1, "ssd"), chunk_tokens=16,
+                       placement="layer")
+    _fill(store)
+    store.put_manifest("s", {"n_tokens": 40})
+    man = store.get_manifest("s")
+    assert man["shards"] == {"n_shards": 4, "placement": "layer"}
+    assert store.submit_layer_read("s", "h", 2, 40).links == (2,)
+    chunked = ChunkStore(shards=make_shards(2, 1, "ssd"), chunk_tokens=16,
+                         placement="chunk")
+    _fill(chunked)
+    assert chunked.submit_layer_read("s", "h", 0, 40).links == (0, 1)
+
+
+def test_reopen_with_different_shard_count_finds_chunks():
+    """A store reopened over the same files with a different shard count
+    still reads every chunk (placement-fallback search)."""
+    shards = make_shards(2, 1, "dram", nic_bw=None)
+    store = ChunkStore(shards=shards, chunk_tokens=16, placement="layer")
+    ref = _fill(store)
+    # reopen: same flat device list regrouped as 1 shard of 2 devices
+    devs = [d for s in shards for d in s.devices]
+    from repro.storage import HostShard
+    reopened = ChunkStore(shards=[HostShard(0, devs)], chunk_tokens=16,
+                          placement="layer")
+    for layer in range(3):
+        np.testing.assert_array_equal(
+            reopened.read_layer("s", "h", layer, 40), ref[layer])
+
+
+# --------------------------------------------------------- async engine
+def test_async_engine_error_surfaces_at_wait():
+    eng = AsyncIOEngine(1)
+    try:
+        def boom():
+            raise RuntimeError("device gone")
+        t = eng.submit(0, ["k"], [(boom, None)])
+        with pytest.raises(RuntimeError, match="device gone"):
+            t.wait(timeout=5.0)
+    finally:
+        eng.close()
+
+
+def test_async_engine_overlaps_shards():
+    """Reads on distinct shards proceed in parallel; reads within one
+    shard stay serial (one queue per link)."""
+    eng = AsyncIOEngine(2)
+    try:
+        gate = threading.Barrier(2, timeout=5.0)
+
+        def read():
+            gate.wait()         # deadlocks unless both shards run at once
+            return np.zeros(1), 0.0
+        t0 = eng.submit(0, ["a"], [(read, None)])
+        t1 = eng.submit(1, ["b"], [(read, None)])
+        t0.wait(timeout=5.0)
+        t1.wait(timeout=5.0)
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------ per-link pricing
+def test_link_priced_times_layer_placement():
+    cfg = get_arch("llama2-7b")
+    costs = layer_costs(cfg, 2048)
+    topo = ShardTopology(4, "layer")
+    load = LinkLoad({0: 3})           # link 0 congested, others idle
+    times, layer_links = link_priced_times(costs, PAPER_A100,
+                                           topology=topo, link_load=load)
+    assert layer_links == {li: li % 4 for li in range(cfg.n_layers)}
+    base = method_times(costs[1], PAPER_A100)
+    # layer 0 pays 3x on its congested link; layer 1's link is idle
+    assert times[0].io_h == pytest.approx(3 * base.io_h)
+    assert times[1].io_h == pytest.approx(base.io_h)
+    assert times[0].c_h == pytest.approx(base.c_h)   # compute unstretched
+
+
+def test_link_priced_times_chunk_placement_aggregates():
+    cfg = get_arch("llama2-7b")
+    costs = layer_costs(cfg, 2048)
+    topo = ShardTopology(4, "chunk")
+    times, layer_links = link_priced_times(
+        costs, PAPER_A100, topology=topo, link_load=LinkLoad({2: 2}))
+    assert layer_links is None        # no per-layer link parallelism left
+    base = method_times(costs[0], PAPER_A100)
+    # 4 links' bandwidth, but the max-loaded link gates the stripe (2x)
+    assert times[0].io_h == pytest.approx(2 * base.io_h / 4)
+
+
+def test_link_priced_times_without_topology_is_legacy():
+    cfg = get_arch("llama2-7b")
+    costs = layer_costs(cfg, 1024)
+    times, links = link_priced_times(costs, PAPER_A100, io_streams=3)
+    assert links is None
+    for t, c in zip(times, costs):
+        assert t == method_times(c, PAPER_A100, io_streams=3)
+
+
+def test_replay_per_link_overlap():
+    """Layer-striped IO on 2 links finishes in about half the serial
+    time — the IO stream runs one queue per link."""
+    cfg = get_arch("llama2-7b")
+    methods = ["hidden"] * cfg.n_layers
+    tasks = compile_tasks(methods)
+    times = [method_times(c, PAPER_A100)
+             for c in layer_costs(cfg, 8192)]
+    links = task_links(tasks, {li: li % 2 for li in range(cfg.n_layers)})
+    serial = replay(tasks, times)
+    striped = replay(tasks, times, links=links)
+    assert striped.io_finish == pytest.approx(serial.io_finish / 2,
+                                              rel=0.05)
+    assert striped.makespan <= serial.makespan
+
+
+def test_fetch_partition_with_links_still_covers():
+    cfg = get_arch("llama2-7b")
+    methods = ["hidden"] * cfg.n_layers
+    times = [method_times(c, PAPER_A100)
+             for c in layer_costs(cfg, 4096)]
+    links = {li: li % 4 for li in range(cfg.n_layers)}
+    part = fetch_aligned_partition(methods, times, links=links)
+    assert sum(part) == cfg.n_layers
+    assert all(w >= 1 for w in part)
+
+
+def test_solve_with_link_load_shifts_congested_layers():
+    """Layers on a congested link price IO higher, so the solver moves
+    them off IO methods first; idle-link layers keep the IO split."""
+    cfg = get_arch("llama2-7b")
+    topo = ShardTopology(2, "layer")
+    hot = solve(cfg, 4096, PAPER_A100, topology=topo,
+                link_load=LinkLoad({0: 8}))
+    cold = solve(cfg, 4096, PAPER_A100, topology=topo,
+                 link_load=LinkLoad({}))
+    hot_io = [li for li, m in enumerate(hot.methods) if m != "recompute"]
+    # congestion strictly reduces (or holds) the IO-method share
+    assert len(hot_io) <= sum(1 for m in cold.methods if m != "recompute")
+    assert hot.makespan >= cold.makespan
+
+
+# ------------------------------------------------- storage-layer guards
+def test_maybe_reclaim_single_flight_under_concurrency():
+    """Concurrent writers hitting the budget run the reclaim ladder one
+    at a time (regression: ``_reclaiming`` was an unguarded bool)."""
+    arr = StorageArray([DRAMBackend()], budget_bytes=1)
+    arr[0].write("k", np.zeros(1024, np.uint8))
+    active = []
+    overlaps = []
+
+    def cb(a):
+        active.append(1)
+        if len(active) > 1:
+            overlaps.append(1)
+        time.sleep(0.01)
+        active.pop()
+    arr.on_pressure(cb)
+    threads = [threading.Thread(target=arr.maybe_reclaim)
+               for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not overlaps
+
+
+def test_reclaim_callback_does_not_recurse():
+    arr = StorageArray([DRAMBackend()], budget_bytes=1)
+    arr[0].write("k", np.zeros(64, np.uint8))
+    calls = []
+
+    def cb(a):
+        calls.append(1)
+        a.maybe_reclaim()        # same-thread re-entry must be a no-op
+    arr.on_pressure(cb)
+    arr.maybe_reclaim()
+    assert len(calls) == 1
+
+
+def test_dram_read_views_are_readonly():
+    """DRAMBackend.read returns an unwriteable view of the stored bytes;
+    callers that mutate must copy (regression: a consumer scribbling on
+    the view silently corrupted the store)."""
+    d = DRAMBackend()
+    src = np.arange(8, dtype=np.float32)
+    d.write("k", src)
+    got = d.read("k")
+    assert not got.flags.writeable
+    with pytest.raises((ValueError, RuntimeError)):
+        got[0] = 99.0
+    src[0] = -1.0                # writer's array is decoupled too
+    np.testing.assert_array_equal(d.read("k"),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_filebackend_size_cache(tmp_path):
+    """bytes_used/nbytes come from the memoized size map — consistent
+    across write, overwrite and delete without per-call stat storms."""
+    d = FileBackend(str(tmp_path / "dev0"))
+    d.write("a", np.zeros(16, np.float32))
+    d.write("b", np.zeros(4, np.float32))
+    total = d.bytes_used
+    assert total == d.nbytes("a") + d.nbytes("b")
+    d.write("a", np.zeros(32, np.float32))      # overwrite re-sizes
+    assert d.bytes_used > total
+    d.delete("b")
+    assert d.bytes_used == d.nbytes("a")
+    # a reopened backend primes the cache from the directory listing
+    d2 = FileBackend(str(tmp_path / "dev0"))
+    assert d2.bytes_used == d.bytes_used
+
+
+# ----------------------------------------------------- executor + engine
+@pytest.fixture(scope="module")
+def setup():
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = default_rules(mesh)
+    cfg = reduced_for_smoke(get_arch("llama2-7b"))
+    model = Model(cfg, rules=rules, model_axis=1, dtype=jnp.float32,
+                  remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 40), 0,
+                              cfg.vocab_size)
+    pre = model.prefill(params, {"tokens": toks}, capture_hidden=True)
+    return cfg, model, params, toks, pre
+
+
+def _restore(setup, store, use_engine=False):
+    cfg, model, params, toks, pre = setup
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden")
+    mgr.save_prefill("s", np.asarray(toks[0]), pre)
+    if use_engine:
+        store.attach_io_engine(
+            AsyncIOEngine(len(store.shards) if store.shards else 1))
+    sink = CacheAssembler(model)
+    ex = RestorationExecutor(mgr, params, "s", sink=sink)
+    while not ex.step(max_tasks=2):
+        pass
+    store.close()
+    return ex, sink
+
+
+@pytest.mark.parametrize("placement", ["layer", "chunk"])
+@pytest.mark.parametrize("use_engine", [False, True])
+def test_executor_restore_identical_across_shards(setup, placement,
+                                                  use_engine):
+    """Full executor restore over 4 shards (sync and async) produces the
+    same cache as the one-host store — and its timeline equals the
+    per-link replay of the graph it ran."""
+    ex0, sink0 = _restore(
+        setup, ChunkStore(make_array("dram", 2), chunk_tokens=16))
+    store = ChunkStore(shards=make_shards(4, 2, "ssd"), chunk_tokens=16,
+                       placement=placement)
+    ex, sink = _restore(setup, store, use_engine=use_engine)
+    np.testing.assert_array_equal(np.asarray(sink.cache["k"]),
+                                  np.asarray(sink0.cache["k"]))
+    np.testing.assert_array_equal(np.asarray(sink.cache["v"]),
+                                  np.asarray(sink0.cache["v"]))
+    tl = ex.timeline()
+    assert tl == replay(ex.tasks, ex.times, ex.executed,
+                        dispatch_overhead=ex.dispatch_overhead,
+                        cross_times=ex.cross_times, links=ex._task_links)
+    if placement == "layer":
+        assert set(ex.links_touched()) <= {0, 1, 2, 3}
+
+
+def test_engine_reports_link_load(setup):
+    """The serving engine folds restoring executors' touched links into
+    the manager's LinkLoad; plans are keyed by it."""
+    cfg, model, params, toks, pre = setup
+    store = ChunkStore(shards=make_shards(2, 2, "ssd"), chunk_tokens=16,
+                       placement="layer")
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden")
+    assert mgr.shard_topology().n_shards == 2
+    engine = InferenceEngine(model, params, mgr, max_batch=2, max_seq=128,
+                             prefill_chunk=8)
+    try:
+        prompt = np.asarray(toks[0])[:20]
+        for rnd in range(2):
+            engine.submit(Request("u0", prompt, max_new_tokens=3))
+            engine.run()
+        assert mgr.link_load is not None
+        assert isinstance(mgr.link_load, LinkLoad)
+        # the price key distinguishes per-link load states
+        mgr.set_link_load(LinkLoad({0: 2}))
+        k_loaded = mgr._price_key()
+        mgr.set_link_load(LinkLoad({}))
+        assert mgr._price_key() != k_loaded
+    finally:
+        engine.close()
+        store.close()
