@@ -1,0 +1,180 @@
+"""Tensor-parallel restoration bake-off (DESIGN.md §16).
+
+Three questions, one artifact (``BENCH_tp.json``):
+
+  1. Does sharding the projection over the mesh actually cut the
+     modeled restore cost? The grouped-replay timeline (the same cost
+     model ``choose_group_size`` and the scheduler price with) is run
+     at tp ∈ {1, 2, 4} with the auto group-size knob live at each
+     width. Acceptance: tp=4 projection makespan ≥ 1.7x over tp=1.
+  2. What does the real engine see? A preemption-heavy serving
+     workload runs at each width on forced host devices
+     (``--xla_force_host_platform_device_count``); the per-restore
+     projection wall and end-to-end wall come from EngineMetrics.
+     (Forced host devices share one physical CPU, so wall time shows
+     SPMD *overhead*, not speedup — the modeled numbers are the
+     scaling claim, the wall numbers the sanity bound.)
+  3. Are greedy outputs byte-identical at every width? (If not,
+     nothing else matters.)
+
+Runs the reduced-smoke model — the mesh, sharded page pool, SPMD
+projection and seam collectives are the real ones; only the
+transformer is shrunk.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit
+
+N_TOKENS = 2048
+TP_WIDTHS = (1, 2, 4)
+DISPATCH_OVERHEAD = 2e-3        # heavy-launch regime (matches bench_sched)
+ACCEPT_SPEEDUP = 1.7
+N_SESSIONS = 6
+MAX_NEW = 5
+
+
+def _modeled(arch="llama2-13b"):
+    """Replay the grouped restore graph at each mesh width with the
+    auto group-size knob live: per-width argmin group, end-to-end
+    makespan, and the projection (compute) component."""
+    import dataclasses
+
+    from repro.config.hardware import PAPER_A100
+    from repro.configs import get_arch
+    from repro.core.cost_model import layer_costs, method_times
+    from repro.core.restoration import (choose_group_size, compile_tasks,
+                                        replay)
+
+    cfg = get_arch(arch)
+    methods = ["hidden"] * cfg.n_layers
+    base = dataclasses.replace(PAPER_A100,
+                               dispatch_overhead=DISPATCH_OVERHEAD)
+    out = {}
+    for tp in TP_WIDTHS:
+        hw = base.with_mesh(tp)
+        g = choose_group_size(cfg, hw, N_TOKENS, methods)
+        times = [method_times(c, hw) for c in layer_costs(cfg, N_TOKENS)]
+        span = replay(compile_tasks(tuple(methods), group_size=g), times,
+                      dispatch_overhead=hw.dispatch_overhead).makespan
+        # the sharded component: per-layer projection compute (already
+        # divided by mesh_devices in method_times) + per-launch overhead
+        n_launches = (len(g) if isinstance(g, tuple)
+                      else -(-cfg.n_layers // g))
+        proj = sum(t.c_h for t in times) + n_launches * hw.dispatch_overhead
+        out[tp] = {"group_size": g if isinstance(g, int) else list(g),
+                   "restore_makespan_ms": span * 1e3,
+                   "projection_makespan_ms": proj * 1e3}
+    return out
+
+
+def _serve(tp):
+    """The preemption-heavy paged workload at one mesh width; returns
+    (greedy outputs, metrics)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.config.arch import reduced_for_smoke
+    from repro.config.hardware import PAPER_A100
+    from repro.configs import get_arch
+    from repro.core.hcache import HCacheManager
+    from repro.distributed.sharding import default_rules
+    from repro.launch.mesh import make_mesh
+    from repro.models import Model
+    from repro.models.module import split
+    from repro.serving import InferenceEngine, Request
+    from repro.storage import ChunkStore, make_array
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = reduced_for_smoke(get_arch("llama2-7b"))
+    model = Model(cfg, rules=default_rules(mesh), model_axis=1,
+                  dtype=jnp.float32, remat="none")
+    params, _ = split(model.init(jax.random.PRNGKey(0)))
+    store = ChunkStore(make_array("dram", 4), chunk_tokens=16)
+    mgr = HCacheManager(model, store, hw=PAPER_A100,
+                        schedule_override="hidden", store_dtype=np.float32)
+    eng = InferenceEngine(model, params, mgr, max_batch=2, max_seq=128,
+                          prefill_chunk=8, backend="paged",
+                          preempt_quantum=3, tp=tp)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, int(k)).astype(np.int32)
+               for k in rng.integers(6, 24, size=N_SESSIONS)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(f"s{i}", p, max_new_tokens=MAX_NEW))
+    eng.run()
+    outs = {f"s{i}": eng.result(f"s{i}") for i in range(N_SESSIONS)}
+    m = eng.metrics
+    eng.close()
+    return outs, m
+
+
+def run_tp_bench(out_path: str = "BENCH_tp.json"):
+    import os
+    import sys
+    if "XLA_FLAGS" not in os.environ and "jax" not in sys.modules:
+        # must land before the first jax import; the CI step also sets
+        # it explicitly so the SPMD path is never silently skipped
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=4"
+    import jax
+
+    results = {"workload": {"model_arch": "llama2-13b (modeled) / "
+                                          "llama2-7b reduced (served)",
+                            "n_tokens_modeled": N_TOKENS,
+                            "n_sessions": N_SESSIONS,
+                            "tp_widths": list(TP_WIDTHS),
+                            "visible_devices": len(jax.devices())},
+               "modeled": {}, "served": {}}
+    rows = []
+
+    modeled = _modeled()
+    for tp, r in modeled.items():
+        results["modeled"][f"tp{tp}"] = r
+        rows.append((f"bench_tp_modeled_tp{tp}",
+                     r["restore_makespan_ms"] * 1e3,
+                     f"g={r['group_size']} "
+                     f"proj={r['projection_makespan_ms']:.2f}ms"))
+    proj_speedup = (modeled[1]["projection_makespan_ms"]
+                    / modeled[4]["projection_makespan_ms"])
+    e2e_speedup = (modeled[1]["restore_makespan_ms"]
+                   / modeled[4]["restore_makespan_ms"])
+    results["modeled"]["projection_speedup_tp4"] = proj_speedup
+    results["modeled"]["restore_speedup_tp4"] = e2e_speedup
+
+    base = None
+    identical = True
+    for tp in TP_WIDTHS:
+        outs, m = _serve(tp)
+        if base is None:
+            base = outs
+        same = outs == base
+        identical = identical and same
+        results["served"][f"tp{tp}"] = {
+            "byte_identical": bool(same),
+            "preemptions": m.preemptions,
+            "restored_tokens": m.restored_tokens,
+            "restore_wall_s": m.restore_wall_sum,
+            "restore_projection_wall_s": m.restore_project_wall,
+            "device_gauges": [dict(r) for r in m.device_gauges]}
+        rows.append((f"bench_tp_served_tp{tp}", m.restore_wall_sum * 1e6,
+                     f"identical={same} restored={m.restored_tokens}"))
+
+    results["acceptance_projection_speedup_tp4"] = proj_speedup
+    results["acceptance_byte_identical"] = bool(identical)
+    results["acceptance_met"] = bool(proj_speedup >= ACCEPT_SPEEDUP
+                                     and identical)
+    rows.append(("bench_tp_acceptance", proj_speedup,
+                 f"met={results['acceptance_met']}"))
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    emit(rows)
+    assert identical, "greedy outputs diverged across tp widths"
+    assert proj_speedup >= ACCEPT_SPEEDUP, \
+        f"modeled projection speedup {proj_speedup:.2f}x < {ACCEPT_SPEEDUP}x"
+    return results
+
+
+if __name__ == "__main__":
+    run_tp_bench()

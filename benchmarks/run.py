@@ -66,6 +66,10 @@ REGISTRY = [
          entry="run_distributed_bench", artifact="BENCH_distributed.json",
          help="sharded restore across {1,2,4} hosts x both placements + "
               "sync vs async IO on real file reads (DESIGN.md §15)"),
+    dict(module="benchmarks.bench_tp", mode="bench_tp",
+         entry="run_tp_bench", artifact="BENCH_tp.json",
+         help="tensor-parallel restore at tp={1,2,4}: modeled projection "
+              "speedup + served byte-identity (DESIGN.md §16)"),
 ]
 
 MODES = {e["mode"]: e for e in REGISTRY if "mode" in e}

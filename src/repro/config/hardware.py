@@ -29,6 +29,23 @@ class HardwareProfile:
     # see benchmarks/bench_restore_batch.py for the knob's measurable
     # effect on makespan.
     dispatch_overhead: float = 0.0
+    # tensor-parallel mesh width the restoration compute runs SPMD over
+    # (DESIGN.md §16): projection FLOPs divide across the shards, the
+    # dispatch overhead is charged once per launch (one XLA program, not
+    # one per device). 1 = the classic single-device model.
+    mesh_devices: int = 1
+
+    def with_mesh(self, tp: int) -> "HardwareProfile":
+        """A copy priced for a ``tp``-wide tensor-parallel mesh. The name
+        changes too, so profiles for different meshes never alias in
+        caches keyed by profile identity."""
+        tp = max(int(tp), 1)
+        if tp == self.mesh_devices:
+            return self
+        base = self.name.split("-tp")[0]
+        return dataclasses.replace(
+            self, name=base if tp == 1 else f"{base}-tp{tp}",
+            mesh_devices=tp)
 
     def derated(self, *, storage: float = 1.0, host_link: float = 1.0,
                 flops: float = 1.0,

@@ -129,13 +129,20 @@ def method_times(cost: LayerCost, hw: HardwareProfile,
     restoring concurrently each see 1/N of the link, so IO legs stretch
     N-fold while compute legs (per-chip) do not. ``link`` selects the
     per-NIC-link learned rate for the IO kinds when the profile has one
-    (distributed store; see ``link_priced_times``)."""
+    (distributed store; see ``link_priced_times``).
+
+    ``hw.mesh_devices`` > 1 (DESIGN.md §16) divides the projection
+    compute across the tensor-parallel shards — each device projects
+    only its KV heads, so C_H scales ÷shards. Recompute stays whole (the
+    block-forward rebuild runs replicated, not head-sharded) and the IO
+    legs are host-side, untouched by device multiplicity."""
     flops = hw.flops * gemm_eff
     bw = min(hw.storage_bw, hw.host_link_bw)
     m = max(int(io_streams), 1)
+    shards = max(int(getattr(hw, "mesh_devices", 1)), 1)
     io_h = cost.io_hidden / bw
     io_kv = cost.io_kv / bw if cost.io_kv else cost.io_state / bw
-    c_h = cost.c_hidden / flops
+    c_h = cost.c_hidden / (flops * shards)
     c_token = cost.c_token / flops
     if profile is not None:
         r = profile.rate("io_h", link=link)
@@ -144,7 +151,7 @@ def method_times(cost: LayerCost, hw: HardwareProfile,
         r = profile.rate("io_kv", link=link)
         if r is not None:
             io_kv = (cost.io_kv or cost.io_state) * r
-        r = profile.rate("project")
+        r = profile.rate("project", mesh=shards)
         if r is not None:
             c_h = cost.c_hidden * r
         r = profile.rate("recompute")

@@ -94,9 +94,12 @@ class HCacheManager:
         else:
             self.restore_group_size = max(int(restore_group_size), 1)
         # once-per-(model, params) restoration weight pack, built lazily
-        # on the first restore and shared by every executor
+        # on the first restore and shared by every executor; `_tp` is the
+        # TPContext the pack's weight stacks are sharded under (None =
+        # single device)
         self._pack = None
         self._pack_params = None
+        self._tp = None
         # dtype of stored hidden states. fp16 is the paper's setting (its
         # models run fp16, so storage is lossless); when the functional
         # model runs fp32, passing float32 makes pause/restore cycles
@@ -164,20 +167,39 @@ class HCacheManager:
 
     def _price_key(self) -> tuple:
         """The planning-relevant calibration state: plans computed under
-        a different profile epoch, IO multiplicity or per-link load must
-        not be reused."""
+        a different profile epoch, IO multiplicity, per-link load or
+        tensor-parallel mesh width must not be reused — resharding the
+        engine (hw.with_mesh) changes the projection-compute price and
+        invalidates every memoized schedule and group plan."""
         epoch = self.profile.epoch if self.profile is not None else -1
         load = self.link_load.key() if self.link_load is not None else None
-        return (epoch, self.io_streams, load)
+        return (epoch, self.io_streams, load,
+                getattr(self.hw, "mesh_devices", 1))
+
+    def set_tp(self, tp_ctx) -> None:
+        """Attach the engine's tensor-parallel context: the restoration
+        weight pack is rebuilt sharded over its mesh (KV output axis) and
+        the hardware profile is re-priced for the mesh width, which in
+        turn flushes memoized plans (``hw`` setter + ``_price_key``)."""
+        if tp_ctx is not self._tp:
+            self._tp = tp_ctx
+            self._pack = None
+            self._pack_params = None
+        self.hw = self._hw.with_mesh(tp_ctx.tp if tp_ctx is not None
+                                     and tp_ctx.spmd else 1)
 
     def param_pack(self, params):
         """Device-stacked restoration weights (wk/wv/bk/bv/ln1 + RoPE
         tables) for ``params`` — built once, then reference-cached so no
         restoration task ever re-gathers params. Holding the params
         reference keeps the identity check sound (the cached object
-        cannot be collected and aliased)."""
+        cannot be collected and aliased). Under an attached TPContext the
+        stacks are committed sharded on the KV output axis, so the
+        grouped projection runs SPMD with each device projecting only its
+        heads (DESIGN.md §16)."""
         if self._pack is None or self._pack_params is not params:
-            self._pack = build_param_pack(self.model, params)
+            self._pack = build_param_pack(self.model, params,
+                                          tp_ctx=self._tp)
             self._pack_params = params
         return self._pack
 
@@ -237,7 +259,8 @@ class HCacheManager:
             topology=self.shard_topology(), link_load=self.link_load)
         overhead = getattr(self.hw, "dispatch_overhead", 0.0)
         if self.profile is not None:
-            measured = self.profile.dispatch_overhead()
+            measured = self.profile.dispatch_overhead(
+                mesh=getattr(self.hw, "mesh_devices", 1))
             if measured is not None:
                 overhead = measured
         part = fetch_aligned_partition(methods, times,

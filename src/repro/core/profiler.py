@@ -58,6 +58,16 @@ def base_kind(kind: str) -> str:
     return kind.split("@", 1)[0]
 
 
+def mesh_kind(kind: str, mesh: int) -> str:
+    """Cell name for a per-mesh rate sample: ``project@M4`` = the grouped
+    projection launched SPMD over a 4-device tensor-parallel mesh
+    (DESIGN.md §16). Sharded launches have a genuinely different
+    seconds-per-FLOP (the FLOPs are counted whole but each device runs
+    1/tp of them), so each mesh width learns its own fit instead of
+    poisoning the single-device cell."""
+    return f"{kind}@M{int(mesh)}"
+
+
 @dataclasses.dataclass
 class _Bucket:
     """EMA moments of one (kind, token-bucket) cell."""
@@ -93,14 +103,20 @@ class MeasuredProfile:
 
     # ------------------------------------------------------------ recording
     def record(self, kind: str, bucket: int, work: float,
-               seconds: float, link: Optional[int] = None) -> None:
+               seconds: float, link: Optional[int] = None,
+               mesh: Optional[int] = None) -> None:
         """Fold one observed task: ``work`` units took ``seconds``.
         Non-positive observations are dropped (an untimed backend).
         ``link`` additionally folds the sample into the per-link cell
         (``io_h@L{link}``) so the planner can price heterogeneous NICs;
-        the aggregate cell still learns every sample."""
+        the aggregate cell still learns every sample. ``mesh`` > 1
+        redirects the sample to the per-mesh cell (``project@M{mesh}``)
+        INSTEAD of the aggregate one — a tp-sharded launch's rate is not
+        the single-device rate and must not contaminate its fit."""
         if base_kind(kind) not in KINDS or work <= 0.0 or seconds <= 0.0:
             return
+        if mesh is not None and int(mesh) > 1:
+            kind = mesh_kind(kind, mesh)
         for k in ((kind,) if link is None
                   else (kind, link_kind(kind, link))):
             cell = self.kinds.setdefault(k, {}).setdefault(int(bucket),
@@ -163,12 +179,22 @@ class MeasuredProfile:
     def sample_counts(self) -> Dict[str, int]:
         return {k: self.samples(k) for k in sorted(self.kinds)}
 
-    def rate(self, kind: str, link: Optional[int] = None)\
-            -> Optional[float]:
+    def rate(self, kind: str, link: Optional[int] = None,
+             mesh: Optional[int] = None) -> Optional[float]:
         """Marginal seconds per work unit (slope), or None unmeasured.
         With ``link``, the per-link fit is preferred and the aggregate
         fit is the fallback (a link with no samples yet prices like the
-        average link, not like the datasheet)."""
+        average link, not like the datasheet). With ``mesh`` > 1, the
+        per-mesh cell is preferred; an unmeasured mesh falls back to the
+        single-device slope divided by the mesh width — the ideal-scaling
+        prior the static model uses — rather than pricing a 4-way launch
+        at single-device speed."""
+        if mesh is not None and int(mesh) > 1:
+            fit = self._fit(mesh_kind(kind, mesh))
+            if fit is not None and fit[1] > 0.0:
+                return fit[1]
+            base = self.rate(kind, link=link)
+            return None if base is None else base / int(mesh)
         if link is not None:
             fit = self._fit(link_kind(kind, link))
             if fit is not None and fit[1] > 0.0:
@@ -188,10 +214,19 @@ class MeasuredProfile:
             return None
         return fit[0] + fit[1] * work
 
-    def dispatch_overhead(self) -> Optional[float]:
+    def dispatch_overhead(self, mesh: Optional[int] = None)\
+            -> Optional[float]:
         """Measured per-dispatch launch overhead: the fitted intercept of
         the grouped-projection kind (the compute kind with enough work
-        variation to separate fixed from marginal cost)."""
+        variation to separate fixed from marginal cost). An SPMD launch
+        pays this ONCE per launch, not per device — with ``mesh`` > 1 the
+        per-mesh cell's intercept is preferred (it was measured around a
+        sharded launch) and the single-device intercept is the fallback
+        (launch cost does not scale with the mesh)."""
+        if mesh is not None and int(mesh) > 1:
+            got = self.overhead(mesh_kind("project", mesh))
+            if got is not None:
+                return got
         return self.overhead("project")
 
     # ---------------------------------------------------------- persistence

@@ -390,9 +390,16 @@ def choose_group_size(cfg, hw, n_tokens: int, methods: Sequence[str], *,
     cross_times = (_cross_times_at(cfg, hw, dtype_bytes, s_bucket(enc_len),
                                    profile=profile, io_streams=io_streams)
                    if cross and enc_len else None)
+    # sharded pricing (DESIGN.md §16): ``times`` already divides the
+    # projection compute across hw.mesh_devices (method_times), and the
+    # per-launch dispatch overhead is read from the mesh's own profiler
+    # cell — an SPMD launch pays it once, so under tp > 1 the compute
+    # side of the argmin shrinks and the optimum shifts toward SMALLER
+    # groups (less amortization needed per dispatch).
     overhead = getattr(hw, "dispatch_overhead", 0.0)
     if profile is not None:
-        measured = profile.dispatch_overhead()
+        measured = profile.dispatch_overhead(
+            mesh=getattr(hw, "mesh_devices", 1))
         if measured is not None:
             overhead = measured
     cands = sorted({g for g in GROUP_SIZE_CANDIDATES if g < n_hidden}
@@ -542,7 +549,8 @@ class RestoreParamPack:
     precomputed up to the largest bucket seen and sliced per bucket."""
 
     def __init__(self, *, ln_scale, ln_bias, wk, wv, bk, bv, norm_kind,
-                 norm_eps, head_dim, use_rope, rope_theta, dtype):
+                 norm_eps, head_dim, use_rope, rope_theta, dtype,
+                 tp_ctx=None):
         self.ln_scale = ln_scale        # (A, D)
         self.ln_bias = ln_bias          # (A, D) | None (rmsnorm)
         self.wk = wk                    # (A, D, KV)
@@ -556,9 +564,33 @@ class RestoreParamPack:
         self.rope_theta = float(rope_theta)
         self.dtype = dtype
         self.n_rows = int(wk.shape[0])
+        # tensor-parallel context the weight stacks are sharded under
+        # (DESIGN.md §16): wk/wv/bk/bv live KV-axis-sharded across its
+        # mesh (the flattened KV axis is heads-leading, so tp contiguous
+        # chunks == head groups), hidden/norm/RoPE inputs replicate, and
+        # the projection outputs carry the KV-head sharding straight into
+        # the shard-local page-pool scatter. None = single device.
+        self.tp_ctx = tp_ctx
+        self._spmd = tp_ctx is not None and tp_ctx.spmd
         self._cos = None
         self._sin = None
         self._slices: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+    @property
+    def out_sharding(self):
+        """NamedSharding of the projection outputs (G, S, KV) — KV-axis
+        sharded over the mesh — or None on a single device."""
+        if not self._spmd:
+            return None
+        return self.tp_ctx.kv_sharding(3, 2)
+
+    def place_hidden(self, stack):
+        """Commit one group's hidden stack to the device(s): replicated
+        across the mesh under SPMD (every device projects its own heads
+        from the full stack), a plain single upload otherwise."""
+        if not self._spmd:
+            return jnp.asarray(stack)
+        return self.tp_ctx.replicate(jnp.asarray(stack))
 
     def rope_tables(self, n_pos: int,
                     start: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -578,13 +610,26 @@ class RestoreParamPack:
             self._cos, self._sin = cos, sin
             self._slices.clear()
         sl = (self._cos[start:end], self._sin[start:end])
+        if self._spmd:
+            # replicated commit: the sliced tables feed an SPMD launch
+            # whose weight inputs span the mesh
+            sl = (self.tp_ctx.replicate(sl[0]),
+                  self.tp_ctx.replicate(sl[1]))
         self._slices[(start, n_pos)] = sl
         return sl
 
 
-def build_param_pack(model, params) -> Optional[RestoreParamPack]:
+def build_param_pack(model, params, tp_ctx=None)\
+        -> Optional[RestoreParamPack]:
     """Pack the attention-restoration weights of ``params``. None for
-    attention-free (ssm) stacks."""
+    attention-free (ssm) stacks.
+
+    With a live ``tp_ctx`` (distributed/tp.py) the weight stacks are
+    committed sharded on the flattened KV output axis — tp contiguous
+    chunks of (A, D, KV) == KV-head groups since the flatten is
+    heads-leading — so ``_project_group_jit`` compiles to one SPMD
+    program in which each device projects only its own heads, and the
+    outputs land already sharded for the shard-local pool scatter."""
     kind = model.kind
     if kind == "ssm":
         return None
@@ -597,12 +642,25 @@ def build_param_pack(model, params) -> Optional[RestoreParamPack]:
                                     model.h.attn)
     ap = blocks[attn_key]
     ln = blocks["ln1"]
+    wk, wv = ap["wk"], ap["wv"]
+    bk, bv = ap.get("bk"), ap.get("bv")
+    ln_scale, ln_bias = ln["scale"], ln.get("bias")
+    if tp_ctx is not None and tp_ctx.spmd:
+        tp_ctx.validate_heads(wk.shape[-1] // attn_h.head_dim)
+        wk = tp_ctx.shard_kv(wk, 2)
+        wv = tp_ctx.shard_kv(wv, 2)
+        bk = tp_ctx.shard_kv(bk, 1) if bk is not None else None
+        bv = tp_ctx.shard_kv(bv, 1) if bv is not None else None
+        ln_scale = tp_ctx.replicate(ln_scale)
+        ln_bias = (tp_ctx.replicate(ln_bias)
+                   if ln_bias is not None else None)
     return RestoreParamPack(
-        ln_scale=ln["scale"], ln_bias=ln.get("bias"),
-        wk=ap["wk"], wv=ap["wv"], bk=ap.get("bk"), bv=ap.get("bv"),
+        ln_scale=ln_scale, ln_bias=ln_bias,
+        wk=wk, wv=wv, bk=bk, bv=bv,
         norm_kind=model.cfg.norm, norm_eps=model.cfg.norm_eps,
         head_dim=attn_h.head_dim, use_rope=attn_h.use_rope,
-        rope_theta=attn_h.rope_theta, dtype=model.dtype)
+        rope_theta=attn_h.rope_theta, dtype=model.dtype,
+        tp_ctx=tp_ctx)
 
 
 # number of times the grouped projection has been TRACED (== compiled):
@@ -617,16 +675,23 @@ def projection_trace_count() -> int:
 
 @functools.partial(jax.jit, static_argnames=(
     "norm_kind", "eps", "head_dim", "use_rope", "dtype", "use_pallas",
-    "interpret"))
+    "interpret", "kv_sharding"))
 def _project_group_jit(hidden, rows, ln_scale, ln_bias, wk, wv, bk, bv,
                        cos, sin, *, norm_kind, eps, head_dim, use_rope,
-                       dtype, use_pallas, interpret):
+                       dtype, use_pallas, interpret, kv_sharding=None):
     """ONE device dispatch for a whole projection group.
 
     hidden (G, S_bucket, D) stored-dtype upload; rows (G,) pack-row ids
     (traced, so group membership never retraces); weight stacks are the
     full pack — the gather fuses into the compiled program. Returns
-    (k, v): (G, S_bucket, Kv, hd) in the model dtype."""
+    (k, v): (G, S_bucket, Kv, hd) in the model dtype.
+
+    ``kv_sharding`` (a NamedSharding, static — hashable, so each mesh
+    width compiles exactly once per bucket and the zero-recompile
+    invariant holds per (bucket, tp)) pins the outputs sharded on the
+    flattened-KV axis: with the weight stacks committed the same way the
+    whole call is one SPMD launch where each device projects only its
+    heads and no gather ever crosses devices (DESIGN.md §16)."""
     _PROJECTION_TRACES[0] += 1
     h = hidden.astype(dtype)
     # the model's own norm, with per-group-row params broadcast over S —
@@ -640,7 +705,8 @@ def _project_group_jit(hidden, rows, ln_scale, ln_bias, wk, wv, bk, bv,
         bk[rows] if bk is not None else None,
         bv[rows] if bv is not None else None,
         cos, sin, head_dim=head_dim, use_rope=use_rope,
-        use_pallas=use_pallas, interpret=interpret)
+        use_pallas=use_pallas, interpret=interpret,
+        kv_sharding=kv_sharding)
     G, S, KV = k.shape
     return (k.reshape(G, S, KV // head_dim, head_dim),
             v.reshape(G, S, KV // head_dim, head_dim))
@@ -766,9 +832,13 @@ class RestorationExecutor:
         # way the planner priced its schedule
         self.profile = getattr(mgr, "profile", None)
         self.io_streams = max(int(getattr(mgr, "io_streams", 1)), 1)
+        # tensor-parallel mesh width (DESIGN.md §16): compute samples are
+        # recorded into the mesh's own profiler cell and the per-launch
+        # dispatch overhead is read back from it
+        self.mesh = max(int(getattr(mgr.hw, "mesh_devices", 1)), 1)
         self.dispatch_overhead = getattr(mgr.hw, "dispatch_overhead", 0.0)
         if self.profile is not None:
-            measured = self.profile.dispatch_overhead()
+            measured = self.profile.dispatch_overhead(mesh=self.mesh)
             if measured is not None:
                 self.dispatch_overhead = measured
         self.tasks = compile_tasks(self.methods,
@@ -1031,7 +1101,10 @@ class RestorationExecutor:
         wall = time.perf_counter() - t0
         if wall > 0.0 and projection_trace_count() == traces:
             self.observed[idx] = wall
-            self.profile.record(t.kind, bucket, self._task_work(t), wall)
+            # a tp-sharded launch records into its mesh's own cell
+            # (profiler.mesh_kind) so single-device fits stay clean
+            self.profile.record(t.kind, bucket, self._task_work(t), wall,
+                                mesh=self.mesh if self.mesh > 1 else None)
 
     def _is_attn(self, layer: int) -> bool:
         return layer in self._row_of
@@ -1188,13 +1261,15 @@ class RestorationExecutor:
         # tables sliced at its divergence offset
         cos, sin = pack.rope_tables(S, self.start_token)
         t0 = time.perf_counter()
-        hidden = jnp.asarray(stack)            # ONE host->device upload
+        # ONE host->device upload (replicated across the mesh under tp)
+        hidden = pack.place_hidden(stack)
         k, v = _project_group_jit(
             hidden, jnp.asarray(rows_pad), pack.ln_scale, pack.ln_bias,
             pack.wk, pack.wv, pack.bk, pack.bv, cos, sin,
             norm_kind=pack.norm_kind, eps=pack.norm_eps,
             head_dim=pack.head_dim, use_rope=pack.use_rope,
-            dtype=pack.dtype, use_pallas=ops.on_tpu(), interpret=None)
+            dtype=pack.dtype, use_pallas=ops.on_tpu(), interpret=None,
+            kv_sharding=pack.out_sharding)
         jax.block_until_ready((k, v))
         self.project_wall += time.perf_counter() - t0
         g_real = len(members)

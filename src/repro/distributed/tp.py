@@ -1,0 +1,153 @@
+"""Tensor-parallel mesh context for the device-sharded serving path
+(DESIGN.md §16).
+
+One ``TPContext`` describes the 1-D tensor-parallel mesh the serving
+engine shards device state over: the KV-head axis of the paged page
+pool, the KV output axis of the ``RestoreParamPack`` weight stacks, and
+the head axis of decode attention. Everything degrades to the classic
+single-device path when ``tp == 1`` or the process has fewer devices
+than requested (``spmd`` is False and every placement helper is the
+identity) — the same code path serves a laptop and a pod slice.
+
+Sharding discipline (the byte-identity invariant the tests pin):
+
+  * every sharded tensor is sharded on a NON-contracted dimension (KV
+    heads / flattened KV outputs), so each output element is still one
+    full-depth contraction computed on exactly one device — restored
+    caches and attention outputs are bitwise identical to the
+    single-device program;
+  * the restore sink path never crosses devices: projections emit
+    KV-head-sharded values and the page pool is sharded the same way,
+    so ``write_layer_group`` scatters are shard-local;
+  * the ONE collective on the decode path is the all-gather the
+    ``logits_seam`` constraint forces right before the attention output
+    projection — replicating ``attn_out`` there keeps the ``wo``
+    contraction (and everything downstream, through the logits) an
+    unsharded full-depth matmul instead of a partial-sum + psum whose
+    float reorder would break bitwise identity.
+
+Tests and benches force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+imports) so the SPMD path runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+TP_AXIS = "model"
+
+
+class TPContext:
+    """A 1-D tensor-parallel mesh over the first ``tp`` local devices.
+
+    ``spmd`` is True only when the sharded path is actually live; all
+    placement helpers are identities otherwise, so callers never branch.
+    """
+
+    def __init__(self, tp: int = 1, *, axis: str = TP_AXIS):
+        self.tp = max(int(tp), 1)
+        self.axis = axis
+        devices = jax.devices()
+        self.spmd = self.tp > 1 and len(devices) >= self.tp
+        self.mesh = None
+        if self.spmd:
+            from repro.launch.mesh import make_mesh
+            self.mesh = make_mesh((self.tp,), (axis,))
+        self.device0 = devices[0]
+
+    def __repr__(self):
+        return f"TPContext(tp={self.tp}, spmd={self.spmd})"
+
+    # hashable identity for plan-cache keys
+    def key(self):
+        return (self.tp, self.spmd)
+
+    def validate_heads(self, n_kv_heads: int) -> None:
+        if self.spmd and n_kv_heads % self.tp:
+            raise ValueError(
+                f"tensor-parallel width tp={self.tp} must divide the "
+                f"model's n_kv_heads={n_kv_heads} (each device owns an "
+                f"equal slice of the KV-head axis)")
+
+    # ----------------------------------------------------------- shardings
+    def kv_sharding(self, ndim: int, kv_axis: int)\
+            -> Optional[NamedSharding]:
+        """NamedSharding placing the mesh axis on dimension ``kv_axis``
+        of an ``ndim``-rank tensor (None when not SPMD)."""
+        if not self.spmd:
+            return None
+        spec = [None] * ndim
+        spec[kv_axis] = self.axis
+        return NamedSharding(self.mesh, P(*spec))
+
+    def replicated(self) -> Optional[NamedSharding]:
+        return NamedSharding(self.mesh, P()) if self.spmd else None
+
+    # ----------------------------------------------------------- placement
+    def shard_kv(self, x, kv_axis: int):
+        """Commit ``x`` sharded on ``kv_axis`` across the mesh."""
+        if not self.spmd:
+            return x
+        return jax.device_put(x, self.kv_sharding(x.ndim, kv_axis))
+
+    def replicate(self, x):
+        """Commit ``x`` replicated across the mesh."""
+        if not self.spmd:
+            return x
+        return jax.device_put(x, self.replicated())
+
+    def unshard(self, x):
+        """Pull a (possibly sharded) array to the first device — the
+        seam back into single-device code (gather_hist feeding an
+        unsharded prefill, snapshots feeding the host store)."""
+        if not self.spmd:
+            return x
+        return jax.device_put(x, self.device0)
+
+
+# --------------------------------------------------------------- seam hooks
+# The decode/restore jits of a sharded backend trace under the active
+# context (``tp_seam``); the model code calls the seam functions below at
+# the points where the sharding discipline must be pinned. With no
+# active SPMD context both are identities, so unsharded callers compile
+# the exact pre-TP program.
+_ACTIVE: List[Optional[TPContext]] = [None]
+
+
+@contextlib.contextmanager
+def tp_seam(ctx: Optional[TPContext]):
+    prev = _ACTIVE[0]
+    _ACTIVE[0] = ctx if (ctx is not None and ctx.spmd) else None
+    try:
+        yield
+    finally:
+        _ACTIVE[0] = prev
+
+
+def active() -> Optional[TPContext]:
+    return _ACTIVE[0]
+
+
+def kv_seam(x, kv_axis: int):
+    """Constrain ``x`` sharded over KV heads on ``kv_axis`` (page pools
+    and K/V tensors inside a sharded decode step)."""
+    ctx = _ACTIVE[0]
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.kv_sharding(x.ndim, kv_axis))
+
+
+def logits_seam(x):
+    """The single small all-gather of the sharded decode path: replicate
+    the per-head attention output right before the output projection, so
+    the ``wo`` contraction and the logits stay bitwise identical to the
+    single-device program (see module docstring)."""
+    ctx = _ACTIVE[0]
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.replicated())

@@ -85,17 +85,28 @@ def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, len_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "window",
-                                             "interpret"))
+                                             "interpret", "head_sharding"))
 def decode_attention_paged_pallas(q, k_pool, v_pool, block_table, kv_len, *,
                                   softcap=None, window=None,
-                                  interpret: bool = True):
+                                  interpret: bool = True,
+                                  head_sharding=None):
     """Paged decode attention. q: (BKv, G, hd); k_pool/v_pool:
     (num_blocks, block_size, hd) physical pages; block_table: (BKv, MB)
     logical→physical page map — entries >= num_blocks are unallocated
     sentinels (clamped here; they can only alias pages past ``kv_len``,
     which the mask zeroes); kv_len: (BKv,) live lengths (int32).
-    Returns (BKv, G, hd)."""
+    Returns (BKv, G, hd).
+
+    ``head_sharding`` (static NamedSharding over the leading BKv axis,
+    DESIGN.md §16) partitions the launch head-parallel across a
+    tensor-parallel mesh: grid dimension 0 IS the (batch·kv_head) axis,
+    so each device gathers pages and runs attention only for its own
+    heads; each head's softmax/weighted-sum is computed whole on one
+    device, so outputs stay bitwise identical to the unsharded launch
+    (the caller all-gathers once at the output-projection seam)."""
     BKv, G, hd = q.shape
+    if head_sharding is not None:
+        q = jax.lax.with_sharding_constraint(q, head_sharding)
     NB, bs, _ = k_pool.shape
     MB = block_table.shape[1]
     tbl = jnp.minimum(block_table.astype(jnp.int32), NB - 1)
@@ -118,12 +129,15 @@ def decode_attention_paged_pallas(q, k_pool, v_pool, block_table, kv_len, *,
             pltpu.VMEM((G, hd), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BKv, G, hd), q.dtype),
         interpret=interpret,
     )(tbl, q, k_pool, v_pool, kv_len)
+    if head_sharding is not None:
+        out = jax.lax.with_sharding_constraint(out, head_sharding)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "window", "block_k",

@@ -34,18 +34,30 @@ def restore_kv(hidden, wk, wv, bk, bv, cos, sin, *, head_dim,
 
 
 def restore_kv_grouped(hidden, wk, wv, bk, bv, cos, sin, *, head_dim,
-                       use_rope=True, use_pallas=True, interpret=None):
+                       use_rope=True, use_pallas=True, interpret=None,
+                       kv_sharding=None):
     """Stacked restoration projection for a group of layers — one
     dispatch instead of G (see kernels/restore_kv.py and the batched
-    executor in core/restoration.py)."""
+    executor in core/restoration.py).
+
+    ``kv_sharding`` (NamedSharding over the flattened KV axis of the
+    (G, S, KV) outputs, DESIGN.md §16) constrains the results so the
+    SPMD partitioner keeps each device's projected heads local — the
+    restore sink then scatters them into a same-sharded page pool with
+    zero cross-device traffic."""
     if not use_pallas:
-        return ref.restore_kv_grouped_ref(hidden, wk, wv, bk, bv, cos, sin,
+        k, v = ref.restore_kv_grouped_ref(hidden, wk, wv, bk, bv, cos, sin,
                                           head_dim=head_dim,
                                           use_rope=use_rope)
+        if kv_sharding is not None:
+            k = jax.lax.with_sharding_constraint(k, kv_sharding)
+            v = jax.lax.with_sharding_constraint(v, kv_sharding)
+        return k, v
     interpret = (not on_tpu()) if interpret is None else interpret
     return restore_kv_grouped_pallas(hidden, wk, wv, bk, bv, cos, sin,
                                      head_dim=head_dim, use_rope=use_rope,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     kv_sharding=kv_sharding)
 
 
 def flash_attention(q, k, v, *, group=1, causal=True, window=None,
@@ -71,8 +83,11 @@ def decode_attention(q, k, v, kv_len, *, softcap=None, window=None,
 
 def decode_attention_paged(q, k_pool, v_pool, block_table, kv_len, *,
                            softcap=None, window=None, use_pallas=True,
-                           interpret=None):
-    """Paged (block-table) decode attention — see decode_attention.py."""
+                           interpret=None, head_sharding=None):
+    """Paged (block-table) decode attention — see decode_attention.py.
+    ``head_sharding`` partitions the launch head-parallel over a
+    tensor-parallel mesh (kernel path; the jnp oracle ignores it — its
+    sharding comes from constraint propagation in the caller)."""
     if not use_pallas:
         return ref.decode_attention_paged_ref(
             q, k_pool, v_pool, block_table, kv_len, softcap=softcap,
@@ -80,7 +95,7 @@ def decode_attention_paged(q, k_pool, v_pool, block_table, kv_len, *,
     interpret = (not on_tpu()) if interpret is None else interpret
     return decode_attention_paged_pallas(
         q, k_pool, v_pool, block_table, kv_len, softcap=softcap,
-        window=window, interpret=interpret)
+        window=window, interpret=interpret, head_sharding=head_sharding)
 
 
 def ssm_update(h, dt, x, A, B, C, d_skip, *, use_pallas=True,

@@ -134,11 +134,11 @@ def _no_bias_kernel(h_ref, wk_ref, wv_ref, cos_ref, sin_ref, k_ref, v_ref,
 # ------------------------------------------------------- grouped variant
 @functools.partial(jax.jit, static_argnames=("head_dim", "use_rope",
                                              "block_s", "block_kv",
-                                             "interpret"))
+                                             "interpret", "kv_sharding"))
 def restore_kv_grouped_pallas(hidden, wk, wv, bk, bv, cos, sin, *,
                               head_dim: int, use_rope: bool = True,
                               block_s: int = 256, block_kv: int = 0,
-                              interpret: bool = True):
+                              interpret: bool = True, kv_sharding=None):
     """Stacked restoration projection for a *group* of layers.
 
     hidden (G, S, D); wk/wv (G, D, KV); bk/bv (G, KV) or None; cos/sin
@@ -146,10 +146,24 @@ def restore_kv_grouped_pallas(hidden, wk, wv, bk, bv, cos, sin, *,
     Returns K, V: (G, S, KV). One launch instead of G — grid gains a
     leading group dimension that indexes the weight stack, and each
     (g, i, j) cell is exactly the per-layer kernel's (i, j) cell for
-    layer g; the per-cell bodies are shared with the per-layer kernel."""
+    layer g; the per-cell bodies are shared with the per-layer kernel.
+
+    ``kv_sharding`` (static NamedSharding on the KV output axis) pins
+    the outputs sharded over a tensor-parallel mesh — with the weight
+    stacks committed KV-sharded the grid's j dimension partitions across
+    devices and each device runs only its own heads' tiles
+    (DESIGN.md §16). The KV tile never spans a shard boundary because
+    both the shard size and the tile cover whole heads."""
     G, S, D = hidden.shape
     KV = wk.shape[2]
     block_kv = _pick_block_kv(KV, head_dim, block_kv)
+    if kv_sharding is not None:
+        # a tile must not straddle the per-device KV slice: cap it at
+        # the shard width (whole heads by construction — validate_heads
+        # guarantees tp | n_kv_heads)
+        n_shards = kv_sharding.mesh.size
+        block_kv = min(block_kv, _pick_block_kv(KV // n_shards, head_dim,
+                                                block_kv))
     block_s = _pick_block_s(S, block_s)
     grid = (G, S // block_s, KV // block_kv)
 
@@ -187,4 +201,7 @@ def restore_kv_grouped_pallas(hidden, wk, wv, bk, bv, cos, sin, *,
                    jax.ShapeDtypeStruct((G, S, KV), hidden.dtype)],
         interpret=interpret,
     )(*args)
+    if kv_sharding is not None:
+        out = [jax.lax.with_sharding_constraint(o, kv_sharding)
+               for o in out]
     return out

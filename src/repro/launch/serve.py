@@ -72,6 +72,12 @@ def main() -> None:
                         "block-table page pool (lm models)")
     p.add_argument("--block-size", type=int, default=16,
                    help="paged backend: tokens per physical page")
+    p.add_argument("--tp", type=int, default=1,
+                   help="tensor-parallel width: shard the paged KV pool "
+                        "and the restoration projection over this many "
+                        "devices (KV-head axis; falls back to 1 when the "
+                        "host exposes fewer devices — set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N on CPU)")
     p.add_argument("--cache-blocks", type=int, default=None,
                    help="paged backend: physical pages in the pool "
                         "(default max_batch * max_seq / block_size)")
@@ -172,7 +178,11 @@ def main() -> None:
                              block_size=args.block_size,
                              cache_blocks=args.cache_blocks,
                              enc_seq=args.enc_seq,
-                             prefix_sharing=args.prefix_sharing)
+                             prefix_sharing=args.prefix_sharing,
+                             tp=args.tp)
+    if args.tp > 1 and not engine.tp.spmd:
+        print(f"tp={args.tp} requested but only {len(jax.devices())} "
+              f"device(s) visible — running single-device")
 
     if args.serve_http:
         import asyncio
@@ -229,6 +239,13 @@ def main() -> None:
               f"{m.cow_copies} CoW copies, pages shared/private "
               f"{m.shared_pages}/{m.private_pages}, host dedup "
               f"{m.dedup_host_bytes / 1e6:.2f} MB, forks {m.forks}")
+    for r in m.device_gauges:
+        print(f"device {r['device']}: free pages {r['free_pages']}, "
+              f"pool occupancy {r['occupancy_pct']}%, live/reserved "
+              f"{r['util_pct']}%, restore-projection utilization "
+              f"{r['proj_util_pct']}%"
+              + (f", pool bytes {r['pool_bytes']}"
+                 if "pool_bytes" in r else ""))
     if m.restore_bubble_n:
         print(f"scheduler calibration: observed bubble "
               f"{m.restore_bubble_mean:.1%} over {m.restore_bubble_n} "

@@ -297,6 +297,10 @@ class EncDecAdapter(FamilyAdapter):
     # step: it interleaves with the decode batch like the LM family.
     chunkable = True
     supports_resume = True
+    # the decoder self-KV region pages like an lm cache (the scatter /
+    # block-table gather never touch the cross side); the paged serving
+    # backend pairs the pool with whole-object cross state
+    supports_paged = True
     kv_names = ("self_k", "self_v")
     has_cross = True
 
@@ -327,6 +331,11 @@ class EncDecAdapter(FamilyAdapter):
     def decode_step_full(self, params, cache, tokens):
         from repro.models import encdec
         return encdec.decode_step(params, cache, tokens, self.model.h)
+
+    def decode_step_paged(self, params, cache, tokens):
+        from repro.models import encdec
+        return encdec.decode_step_paged(params, cache, tokens,
+                                        self.model.h)
 
     def restore_kv_from_hidden(self, params, hidden, *, positions):
         from repro.models import encdec

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.arch import ArchConfig
+from repro.distributed import tp as tp_lib
 from repro.distributed.sharding import ShardingRules, constrain
 from repro.models.layers import attention as attn_lib
 from repro.models.layers.attention import AttnHyper
@@ -140,13 +141,21 @@ def cross_kv(params, enc_out, h: EncDecHyper):
 # ------------------------------------------------------------------ decoder
 def _dec_block(bp, x, h: EncDecHyper, *, positions, ck, cv, enc_len,
                self_kv_mode, k_cache=None, v_cache=None, lengths=None,
-               emit_kv=False, hist_k=None, hist_v=None, hist_len=None):
-    """One decoder block; self_kv_mode in {"full", "step"}.
+               emit_kv=False, hist_k=None, hist_v=None, hist_len=None,
+               block_table=None, blk=None, off=None):
+    """One decoder block; self_kv_mode in {"full", "step", "paged"}.
 
     ``hist_k``/``hist_v`` (B, hist_len, H, hd): restored self-attention
     history prepended to the chunk's KV — resume / round-N prefill after
     an HCache restoration (``positions`` must then be absolute, offset by
-    ``hist_len``)."""
+    ``hist_len``).
+
+    ``paged`` mode routes the decoder self-KV through a physical page
+    pool: ``k_cache``/``v_cache`` are (NB, bs, H, hd) pools, ``blk``/
+    ``off`` the new token's page address, ``block_table`` (B, MB) the
+    logical→physical map — same scatter-then-gather contract as
+    ``transformer.block_decode_paged``; the cross-attention side is
+    untouched (cross-KV stays a whole object per slot)."""
     c = h.cfg
     hidden_in = x
     normed = apply_norm(bp["ln1"], x, c.norm, c.norm_eps)
@@ -163,6 +172,21 @@ def _dec_block(bp, x, h: EncDecHyper, *, positions, ck, cv, enc_len,
                                          q_positions=positions, causal=True,
                                          kv_len=kv_len)
         new_k, new_v = k, v
+    elif self_kv_mode == "paged":
+        k_cache = k_cache.at[blk, off].set(k[:, 0], mode="drop")
+        v_cache = v_cache.at[blk, off].set(v[:, 0], mode="drop")
+        # tensor-parallel seam: pools stay sharded over heads; scatter
+        # and block-table gather never index the head axis
+        k_cache = tp_lib.kv_seam(k_cache, 2)
+        v_cache = tp_lib.kv_seam(v_cache, 2)
+        B, MB = block_table.shape
+        NB, bs = k_cache.shape[0], k_cache.shape[1]
+        table = jnp.minimum(block_table, NB - 1)       # clamp sentinels
+        kg = k_cache[table].reshape(B, MB * bs, *k_cache.shape[2:])
+        vg = v_cache[table].reshape(B, MB * bs, *v_cache.shape[2:])
+        a = attn_lib.decode_attention_jnp(q, kg, vg, h.attn,
+                                          kv_len=lengths + 1)
+        new_k, new_v = k_cache, v_cache
     else:
         B = x.shape[0]
         bidx = jnp.arange(B)
@@ -171,6 +195,8 @@ def _dec_block(bp, x, h: EncDecHyper, *, positions, ck, cv, enc_len,
         a = attn_lib.decode_attention_jnp(q, k_cache, v_cache, h.attn,
                                           kv_len=lengths + 1)
         new_k, new_v = k_cache, v_cache
+    # single all-gather at the output-projection seam (no-op off-mesh)
+    a = tp_lib.logits_seam(a) if self_kv_mode == "paged" else a
     x = x + attn_lib.attn_output(bp["self_attn"], a, h.rules)
 
     normed_x = apply_norm(bp["ln_x"], x, c.norm, c.norm_eps)
@@ -185,7 +211,8 @@ def _dec_block(bp, x, h: EncDecHyper, *, positions, ck, cv, enc_len,
 
     normed2 = apply_norm(bp["ln2"], x, c.norm, c.norm_eps)
     x = x + apply_mlp(bp["mlp"], normed2, c.ffn_activation, h.rules)
-    return x, (new_k, new_v) if (emit_kv or self_kv_mode == "step") else None, hidden_in
+    return x, ((new_k, new_v) if (emit_kv or self_kv_mode
+                                  in ("step", "paged")) else None), hidden_in
 
 
 def decode_prefill(params, tokens, enc_out, h: EncDecHyper, *,
@@ -273,6 +300,57 @@ def decode_step(params, cache, tokens, h: EncDecHyper):
     x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
     lg = embed_logits(params["embed"], x, h.rules, true_vocab=c.vocab_size)
     new_cache = dict(cache, self_k=nk, self_v=nv, lengths=lengths + 1)
+    return lg, new_cache, hidden
+
+
+def decode_step_paged(params, cache, tokens, h: EncDecHyper):
+    """Paged-self-KV decode step (serving 'paged' backend for enc-dec).
+
+    cache: dict(k_pool/v_pool (L, NB, bs, H, hd) physical pages,
+    block_table (B, MB) int32 with NB as the unallocated sentinel,
+    cross_k/cross_v (L, B, S_enc, H, hd) whole-object per slot,
+    enc_len (B,), lengths (B,)). Same contract as ``decode_step`` —
+    with every live position mapped by the block table the gathered
+    logical layout is byte-identical to the contiguous self-KV region
+    (masked positions contribute exactly-zero probability), so paged
+    and contiguous enc-dec decode agree bitwise. Only the decoder
+    self-KV pages; the cross context keeps the paired whole-object
+    layout (there is no block-table analog for it)."""
+    c = h.cfg
+    lengths = cache["lengths"]
+    bt = cache["block_table"]
+    bs = cache["k_pool"].shape[2]
+    B = tokens.shape[0]
+    MB = bt.shape[1]
+    NB = cache["k_pool"].shape[1]
+    positions = lengths[:, None]
+    x = embed_tokens(params["embed"], tokens, h.rules, scale=False,
+                     d_model=c.d_model)
+    x = x + positional(params["embed"], positions).astype(x.dtype)
+    x = x.astype(h.dtype)
+    bidx = jnp.arange(B)
+    li = lengths // bs
+    # a logical page past the table (slot exactly full) must become a
+    # dropped sentinel write, not clamp into the slot's last live page
+    blk = jnp.where(li < MB, bt[bidx, jnp.minimum(li, MB - 1)], NB)
+    off = lengths % bs
+
+    def body(x, xs):
+        bp, kp, vp, ck, cv = xs
+        x, (nk, nv), hidden = _dec_block(bp, x, h, positions=positions,
+                                         ck=ck, cv=cv,
+                                         enc_len=cache.get("enc_len"),
+                                         self_kv_mode="paged", k_cache=kp,
+                                         v_cache=vp, lengths=lengths,
+                                         block_table=bt, blk=blk, off=off)
+        return x, (nk, nv, hidden)
+
+    xs = (params["dec_blocks"], cache["k_pool"], cache["v_pool"],
+          cache["cross_k"], cache["cross_v"])
+    x, (nk, nv, hidden) = jax.lax.scan(body, x, xs)
+    x = apply_norm(params["final_norm"], x, c.norm, c.norm_eps)
+    lg = embed_logits(params["embed"], x, h.rules, true_vocab=c.vocab_size)
+    new_cache = dict(cache, k_pool=nk, v_pool=nv, lengths=lengths + 1)
     return lg, new_cache, hidden
 
 

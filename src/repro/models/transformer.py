@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.arch import ArchConfig
+from repro.distributed import tp as tp_lib
 from repro.distributed.sharding import ShardingRules, constrain, pad_heads
 from repro.models.layers import attention as attn_lib
 from repro.models.layers.attention import AttnHyper
@@ -228,6 +229,12 @@ def block_decode_paged(p, x, h: LMHyper, *, k_pool, v_pool, block_table,
     v_pool = v_pool.at[blk, off].set(v[:, 0], mode="drop")
     k_pool = constrain(k_pool, h.rules, None, None, "kv_heads", "head_dim")
     v_pool = constrain(v_pool, h.rules, None, None, "kv_heads", "head_dim")
+    # tensor-parallel seam (DESIGN.md §16): under an active TPContext the
+    # pools stay sharded over KV heads — the new-token scatter and the
+    # block-table gather below never index the head axis, so both are
+    # shard-local by construction
+    k_pool = tp_lib.kv_seam(k_pool, 2)
+    v_pool = tp_lib.kv_seam(v_pool, 2)
     B, MB = block_table.shape
     NB, bs = k_pool.shape[0], k_pool.shape[1]
     table = jnp.minimum(block_table, NB - 1)           # clamp sentinels
@@ -238,6 +245,12 @@ def block_decode_paged(p, x, h: LMHyper, *, k_pool, v_pool, block_table,
         w = window if not isinstance(window, int) else jnp.asarray(window)
     attn_out = attn_lib.decode_attention_jnp(
         q, k_cache, v_cache, h.attn, kv_len=lengths + 1, window=w)
+    # the ONE collective of the sharded decode path: replicate the
+    # per-head attention output before the wo contraction so the output
+    # projection (and the logits) run the exact single-device program —
+    # a head-sharded wo would partial-sum across devices and break
+    # bitwise identity with tp=1
+    attn_out = tp_lib.logits_seam(attn_out)
     attn_out = attn_lib.attn_output(p["attn"], attn_out, h.rules)
     if c.post_attn_norm:
         attn_out = apply_norm(p["post_ln1"], attn_out, c.norm, c.norm_eps)

@@ -70,6 +70,7 @@ import numpy as np
 from repro.core.capacity import (CapacityManager, EvictionPolicy,
                                  AdmissionPolicy, FIFOAdmission, LRUEviction)
 from repro.core.hcache import HCacheManager
+from repro.distributed import tp as tp_lib
 from repro.models.model import Model
 from repro.serving.kv_cache import (KVCacheBackend, PagedBackend, ViewSink,
                                     make_backend)
@@ -142,6 +143,14 @@ class EngineMetrics:
     io_streams_peak: int = 1            # max concurrent RESTORING slots
     profiler_samples: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    # tensor-parallel gauges (DESIGN.md §16): one row per mesh device —
+    # page-pool occupancy / free pages (replicated page structure, so
+    # equal across devices) plus the restore-projection utilization of
+    # the SPMD launches each device participates in. Single-device
+    # engines report one row.
+    device_gauges: List[dict] = dataclasses.field(default_factory=list)
+    restore_project_wall: float = 0.0   # sum over completed restores
+    restore_wall_sum: float = 0.0
 
     @property
     def restore_bubble_mean(self) -> float:
@@ -185,7 +194,9 @@ class EngineMetrics:
         out = {}
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
-            if isinstance(v, list):
+            if f.name == "device_gauges":
+                out[f.name] = [dict(r) for r in v]
+            elif isinstance(v, list):
                 out[f.name] = self._summary(v)
             elif isinstance(v, dict):
                 out[f.name] = {str(k): int(n) for k, n in v.items()}
@@ -212,7 +223,8 @@ class InferenceEngine:
                  block_size: int = 16,
                  cache_blocks: Optional[int] = None,
                  enc_seq: Optional[int] = None,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 tp: int = 1):
         self.model = model
         # every family-specific decision (prefill chunk policy, output->
         # cache mapping, resume support, save naming) goes through the
@@ -236,11 +248,22 @@ class InferenceEngine:
         if capacity is not None:
             capacity.attach_engine(self)
 
+        # tensor-parallel context (DESIGN.md §16): a paged lm backend
+        # shards its page pool over the mesh and the manager prices /
+        # shards its restoration packs the same way. tp falls back to
+        # single-device when the host exposes fewer devices (spmd False
+        # keeps every seam an identity — one code path).
+        self.tp = tp_lib.TPContext(tp)
+        set_tp = getattr(manager, "set_tp", None)
+        if set_tp is not None:
+            set_tp(self.tp)
+
         # all cache state (contiguous slots or a paged pool + block
         # tables) lives behind the backend; the engine only holds views
         self.kv = make_backend(backend, model, max_batch, max_seq,
                                block_size=block_size,
-                               num_blocks=cache_blocks, enc_seq=enc_seq)
+                               num_blocks=cache_blocks, enc_seq=enc_seq,
+                               tp=self.tp)
         # cross-session prefix sharing (DESIGN.md §12): host chunk
         # aliasing on fork works on every backend; the device-side
         # token-hash index needs pages, so it exists only under paged
@@ -778,6 +801,9 @@ class InferenceEngine:
                     self.metrics.restore_sim_resume.append(seq.restore_sim)
                 self.metrics.restore_io_measured = max(
                     self.metrics.restore_io_measured, ex.io_measured)
+                self.metrics.restore_project_wall += getattr(
+                    ex, "project_wall", 0.0)
+                self.metrics.restore_wall_sum += ex.wall_time
                 self._record_calibration(ex)
                 seq.phase = Phase.PREFILL
         if ran:
@@ -952,6 +978,17 @@ class InferenceEngine:
             m.prefix_hit_tokens = pi.hit_tokens
             m.cow_copies = self.kv.cow_copies
             m.shared_pages, m.private_pages = self.kv.shared_page_stats()
+        # per-device gauges: pool rows from the backend, plus the share
+        # of completed-restore wall spent inside the SPMD projection
+        # launches (every mesh device participates in each launch, so the
+        # utilization is common to all rows)
+        util = (int(round(100.0 * m.restore_project_wall
+                          / m.restore_wall_sum))
+                if m.restore_wall_sum > 0 else 0)
+        rows = self.kv.device_occupancy()
+        for r in rows:
+            r["proj_util_pct"] = util
+        m.device_gauges = rows
 
     def step(self) -> None:
         self.step_count += 1

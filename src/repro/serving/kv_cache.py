@@ -11,6 +11,15 @@ in a ``KVCacheBackend``:
     free list. A slot reserves only the pages its session can actually
     use, so occupancy — not ``max_batch × max_seq`` — caps concurrency.
     LM family only (block tables have no SSM-state analog).
+  * ``ShardedPagedBackend`` — the paged pool committed sharded on the
+    KV-head axis over a tensor-parallel mesh (DESIGN.md §16): decode and
+    restore-sink writes run as SPMD programs where each device touches
+    only its own heads; page bookkeeping (allocator, block tables, CoW)
+    is replicated structure, so it stays exactly the single-device code.
+  * ``PagedEncDecBackend`` — the enc-dec pairing over pages: the decoder
+    self-KV region rides the paged pool (same allocator/CoW machinery),
+    while the cross context stays whole-object per slot — block tables
+    have no analog for encoder state that never grows.
   * ``EncDecBackend``    — paired layout for enc-dec (whisper) models
     (DESIGN.md §11): a growing decoder self-KV region per slot (the
     contiguous machinery, keyed ``self_k``/``self_v``) PAIRED with
@@ -53,7 +62,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.restoration import RestoreSink, s_bucket
+from repro.distributed import tp as tp_lib
 from repro.models.model import Model
+
+
+def _colocate(val, buf):
+    """Bring a committed multi-device array (the SPMD restoration
+    projection's output under tensor parallelism) onto the target
+    buffer's device before a single-device donated update. This is the
+    one deliberate gather on the TP restore path: it fires only for
+    backends whose decode is unsharded (contiguous / hybrid), where the
+    projected heads must land in one place anyway. Uncommitted and
+    single-device values pass through untouched."""
+    if isinstance(val, jax.Array) and len(val.sharding.device_set) > 1 \
+            and len(buf.sharding.device_set) == 1:
+        return jax.device_put(val, next(iter(buf.sharding.device_set)))
+    return val
 
 
 @dataclasses.dataclass
@@ -251,6 +275,18 @@ class KVCacheBackend:
     def occupancy(self) -> OccupancyStats:
         raise NotImplementedError
 
+    def device_occupancy(self) -> List[dict]:
+        """Per-device gauges for EngineMetrics (DESIGN.md §16): one row
+        per mesh device — single-device backends report one row. Keys:
+        ``device``, ``free_pages``, ``occupancy_pct`` (reserved capacity
+        in use), ``util_pct`` (live tokens / reserved capacity)."""
+        occ = self.occupancy()
+        pct = int(round(100.0 * occ.reserved_tokens
+                        / max(occ.capacity_tokens, 1)))
+        return [{"device": 0, "free_pages": int(occ.free_blocks),
+                 "occupancy_pct": pct,
+                 "util_pct": int(round(100.0 * occ.utilization))}]
+
 
 # ------------------------------------------------------------- contiguous
 class _ContiguousView(CacheView):
@@ -265,7 +301,7 @@ class _ContiguousView(CacheView):
         slot = jnp.asarray(self.slot)
         for name, val in ((k_name, k), (v_name, v)):
             buf = b.cache[name]
-            val = jnp.asarray(val, buf.dtype)[None]       # (1, 1, n, H, hd)
+            val = jnp.asarray(_colocate(val, buf), buf.dtype)[None]
             b.cache[name] = b._slot_update(buf, val, row, slot,
                                            jnp.asarray(start))
 
@@ -275,8 +311,8 @@ class _ContiguousView(CacheView):
         kbuf, vbuf = b.cache[k_name], b.cache[v_name]
         b.cache[k_name], b.cache[v_name] = b._group_update(
             kbuf, vbuf,
-            jnp.asarray(k, kbuf.dtype)[:, 0],         # (G, n, Kv, hd)
-            jnp.asarray(v, vbuf.dtype)[:, 0],
+            jnp.asarray(_colocate(k, kbuf), kbuf.dtype)[:, 0],  # (G,n,Kv,hd)
+            jnp.asarray(_colocate(v, vbuf), vbuf.dtype)[:, 0],
             jnp.asarray(np.asarray(rows, np.int32)),
             jnp.asarray(self.slot), jnp.asarray(start))
 
@@ -408,9 +444,12 @@ class ContiguousBackend(KVCacheBackend):
 
 
 # ----------------------------------------------------------------- encdec
-class _EncDecView(_ContiguousView):
-    """Self-KV writes/gathers ride the contiguous machinery (keys
-    ``self_k``/``self_v`` via the adapter); cross state is per-slot."""
+class _CrossStateMixin:
+    """Cross-context handling shared by both enc-dec views: the cross
+    buffers are per-slot whole objects regardless of how the decoder
+    self-KV region is laid out (contiguous slots or pages). The backend
+    provides ``cache['cross_k'/'cross_v'/'enc_len']``, ``enc_seq``,
+    ``enc_len_np`` and the donated ``_cross_update``."""
 
     def write_states(self, piece):
         b, slot = self.b, self.slot
@@ -447,6 +486,11 @@ class _EncDecView(_ContiguousView):
         n = int(b.enc_len_np[i])
         return (b.cache["cross_k"][:, i:i + 1, :n],
                 b.cache["cross_v"][:, i:i + 1, :n], n)
+
+
+class _EncDecView(_CrossStateMixin, _ContiguousView):
+    """Self-KV writes/gathers ride the contiguous machinery (keys
+    ``self_k``/``self_v`` via the adapter); cross state is per-slot."""
 
     def snapshot(self):
         # self-KV only: the cross context restores from the session's
@@ -534,7 +578,7 @@ class _PagedView(CacheView):
         row = jnp.asarray(row)
         for name, val in (("k_pool", k), ("v_pool", v)):
             pool = b.cache[name]
-            val = jnp.asarray(val, pool.dtype)[0]         # (n, Kv, hd)
+            val = b._place_kv(jnp.asarray(val, pool.dtype)[0], 1)  # (n,Kv,hd)
             b.cache[name] = b._write_layer(pool, val, row, blk, off)
 
     def write_layer_group(self, rows, k, v, start=0):
@@ -546,8 +590,8 @@ class _PagedView(CacheView):
         kp, vp = b.cache["k_pool"], b.cache["v_pool"]
         b.cache["k_pool"], b.cache["v_pool"] = b._write_group(
             kp, vp,
-            jnp.asarray(k, kp.dtype)[:, 0],           # (G, n, Kv, hd)
-            jnp.asarray(v, vp.dtype)[:, 0],
+            b._place_kv(jnp.asarray(k, kp.dtype)[:, 0], 2),  # (G, n, Kv, hd)
+            b._place_kv(jnp.asarray(v, vp.dtype)[:, 0], 2),
             jnp.asarray(np.asarray(rows, np.int32)), blk, off)
 
     def write_kv(self, k, v, start):
@@ -559,16 +603,22 @@ class _PagedView(CacheView):
         for name, val in (("k_pool", k), ("v_pool", v)):
             pool = b.cache[name]
             # (L, n, Kv, hd) lands at [:, blk[i], off[i]] per token
-            b.cache[name] = pool.at[:, blk, off].set(
-                val[:, 0].astype(pool.dtype))
+            val = b._place_kv(
+                jnp.asarray(val, pool.dtype)[:, 0], 2)
+            b.cache[name] = pool.at[:, blk, off].set(val)
 
     def write_states(self, piece):
         raise NotImplementedError(
-            "the paged backend serves attention-history (lm) models; "
-            "SSM/cross state has no block-table analog — use "
-            "backend='contiguous' for ssm/hybrid/encdec")
+            "the paged backend holds attention-history KV only; SSM "
+            "state has no block-table analog — use backend='contiguous' "
+            "for ssm/hybrid (enc-dec cross state pages via the "
+            "paged-encdec pairing)")
 
     def gather_hist(self, hist):
+        # _finish_gather is the sharded backend's seam back into
+        # single-device code: the gathered history feeds the unsharded
+        # prefill program, so it must leave the mesh here (identity on
+        # the single-device backend)
         b = self.b
         nb = -(-hist // b.block_size)
         blocks = jnp.asarray(b.table_np[self.slot][:nb])
@@ -576,17 +626,20 @@ class _PagedView(CacheView):
         v = b.cache["v_pool"][:, blocks]
         L = k.shape[0]
         shp = (L, 1, nb * b.block_size) + k.shape[3:]
-        return (k.reshape(shp)[:, :, :hist], v.reshape(shp)[:, :, :hist])
+        return (b._finish_gather(k.reshape(shp)[:, :, :hist]),
+                b._finish_gather(v.reshape(shp)[:, :, :hist]))
 
     def snapshot(self):
         b = self.b
+        k_name, v_name = b.model.adapter.kv_names
         blocks = jnp.asarray(b.slot_blocks[self.slot], jnp.int32)
         k = b.cache["k_pool"][:, blocks]
         v = b.cache["v_pool"][:, blocks]
         L = k.shape[0]
         shp = (L, 1, len(b.slot_blocks[self.slot]) * b.block_size) \
             + k.shape[3:]
-        return {"k": k.reshape(shp), "v": v.reshape(shp)}
+        return {k_name: b._finish_gather(k.reshape(shp)),
+                v_name: b._finish_gather(v.reshape(shp))}
 
     def set_length(self, n):
         self.b.set_length(self.slot, n)
@@ -613,8 +666,9 @@ class PagedBackend(KVCacheBackend):
                  block_size: int = 16, num_blocks: Optional[int] = None):
         if not model.adapter.supports_paged:
             raise NotImplementedError(
-                f"paged KV cache requires an attention-history (lm) "
-                f"model; {model.cfg.name} is {model.kind!r}")
+                f"paged KV cache requires an attention-history model "
+                f"(lm, or enc-dec decoder self-KV); {model.cfg.name} "
+                f"is {model.kind!r}")
         self.model = model
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -654,6 +708,21 @@ class PagedBackend(KVCacheBackend):
 
     def _push_table(self) -> None:
         self.cache["block_table"] = jnp.asarray(self.table_np)
+
+    def _finish_gather(self, x):
+        """Seam for host-bound / single-device consumers of pool gathers
+        (chunked-prefill history, pause snapshots). Identity here; the
+        sharded backend collects the head shards onto one device."""
+        return x
+
+    def _place_kv(self, val, kv_axis: int):
+        """Placement seam for values entering the pool. Identity here;
+        the sharded backend reshards them to the pool's head sharding —
+        prefill KV arrives committed to the prefill device and a
+        committed single-device array cannot join a multi-device scatter
+        (restored KV from the SPMD projection is already head-sharded,
+        so its device_put is a no-op)."""
+        return val
 
     def view(self, slot):
         return _PagedView(self, slot)
@@ -802,24 +871,188 @@ class PagedBackend(KVCacheBackend):
                               self.allocator.free_count)
 
 
+# -------------------------------------------------------------- sharded
+class DeviceAllocatorView:
+    """Read-only per-device window onto the shared ``BlockAllocator``.
+
+    Head-sharding replicates the page STRUCTURE: every mesh device holds
+    the same page ids (1/tp of each page's bytes), so the free list and
+    refcounts are common state — a per-device allocator would desync the
+    block tables. The view therefore proxies the shared counts and
+    scales only byte-denominated gauges by its shard."""
+
+    def __init__(self, backend: "ShardedPagedBackend", device: int):
+        self.b = backend
+        self.device = device
+
+    @property
+    def num_blocks(self) -> int:
+        return self.b.allocator.num_blocks
+
+    @property
+    def free_count(self) -> int:
+        return self.b.allocator.free_count
+
+    def refcount(self, block: int) -> int:
+        return self.b.allocator.refcount(block)
+
+    def pool_bytes(self) -> int:
+        total = sum(int(self.b.cache[n].nbytes)
+                    for n in ("k_pool", "v_pool"))
+        return total // max(self.b.shards, 1)
+
+
+class ShardedPagedBackend(PagedBackend):
+    """Tensor-parallel paged backend (DESIGN.md §16).
+
+    The physical page pool ``(L, NB, bs, Kv, hd)`` is committed sharded
+    on the KV-head axis (3) over the TP mesh; block tables and lengths
+    are replicated. Every jitted cache update — decode's token scatter,
+    the restore sink's grouped page write, the CoW page clone — indexes
+    only layer/page/offset axes, so under SPMD each device writes its
+    own head slice with zero cross-device traffic; decode's one
+    collective is the all-gather at the output-projection seam
+    (``tp.logits_seam``). Allocator / table / CoW bookkeeping is Python
+    over replicated structure: exactly the single-device code."""
+
+    name = "paged-tp"
+
+    def __init__(self, model: Model, max_batch: int, max_seq: int, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 tp_ctx: Optional[tp_lib.TPContext] = None):
+        self.tp = tp_ctx if tp_ctx is not None else tp_lib.TPContext(1)
+        self.shards = self.tp.tp if self.tp.spmd else 1
+        if self.tp.spmd:
+            self.tp.validate_heads(model.cfg.n_kv_heads)
+        super().__init__(model, max_batch, max_seq, block_size=block_size,
+                         num_blocks=num_blocks)
+        if self.tp.spmd:
+            sh = self.tp.kv_sharding(5, 3)
+            for name in ("k_pool", "v_pool"):
+                self.cache[name] = jax.device_put(self.cache[name], sh)
+            for name in ("block_table", "lengths"):
+                self.cache[name] = self.tp.replicate(self.cache[name])
+
+    def _push_table(self):
+        self.cache["block_table"] = self.tp.replicate(
+            jnp.asarray(self.table_np))
+
+    def set_lengths(self, lengths):
+        self.cache["lengths"] = self.tp.replicate(
+            jnp.asarray(lengths, jnp.int32))
+
+    def _finish_gather(self, x):
+        return self.tp.unshard(x)
+
+    def _place_kv(self, val, kv_axis):
+        return self.tp.shard_kv(val, kv_axis)
+
+    def decode(self, params, tokens):
+        # the seam context makes the jitted step constrain the pool
+        # sharded and the attention output replicated — the same traced
+        # program as tp=1 when the context is inactive
+        with tp_lib.tp_seam(self.tp):
+            return super().decode(params, tokens)
+
+    def device_views(self) -> List[DeviceAllocatorView]:
+        return [DeviceAllocatorView(self, d) for d in range(self.shards)]
+
+    def device_occupancy(self):
+        base = super().device_occupancy()[0]
+        rows = []
+        for view in self.device_views():
+            row = dict(base)
+            row["device"] = view.device
+            row["pool_bytes"] = view.pool_bytes()
+            rows.append(row)
+        return rows
+
+
+# -------------------------------------------------------- paged enc-dec
+class _PagedEncDecView(_CrossStateMixin, _PagedView):
+    """Decoder self-KV pages through the pool (keys ``self_k``/``self_v``
+    in snapshots via the adapter); cross state is whole-object per slot,
+    exactly the contiguous enc-dec pairing."""
+
+
+class PagedEncDecBackend(PagedBackend):
+    """Paged decoder self-KV + whole-object cross state (ROADMAP "paged
+    KV for the enc-dec family").
+
+    The self-KV region — the part that grows with decoded tokens —
+    rides the page pool, so admission is bounded by actual decoder need
+    and PAUSED eviction frees pages. The cross context never grows after
+    the encoder runs, so it keeps the per-slot ``cross_k``/``cross_v``
+    buffers and (B,) ``enc_len`` of ``EncDecBackend`` — there is no
+    block-table analog for state with no append frontier."""
+
+    name = "paged-encdec"
+
+    def __init__(self, model: Model, max_batch: int, max_seq: int, *,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 enc_seq: Optional[int] = None):
+        if model.kind != "encdec":
+            raise NotImplementedError(
+                f"the paged enc-dec KV cache requires an encoder-decoder "
+                f"model; {model.cfg.name} is {model.kind!r}")
+        self.enc_seq = int(enc_seq or max_seq)
+        super().__init__(model, max_batch, max_seq, block_size=block_size,
+                         num_blocks=num_blocks)
+        c = model.cfg
+        kv = jnp.zeros((c.n_layers, max_batch, self.enc_seq, c.n_heads,
+                        c.head_dim_), model.dtype)
+        self.cache["cross_k"] = kv
+        self.cache["cross_v"] = jnp.zeros_like(kv)
+        self.cache["enc_len"] = jnp.zeros((max_batch,), jnp.int32)
+        self.enc_len_np = np.zeros((max_batch,), np.int64)
+        # donated in-place cross write (slot traced) — see EncDecBackend
+        self._cross_update = jax.jit(
+            lambda buf, val, slot: jax.lax.dynamic_update_slice(
+                buf, val, (0, slot, 0, 0, 0)),
+            donate_argnums=(0,))
+
+    def view(self, slot):
+        return _PagedEncDecView(self, slot)
+
+    def free_slot(self, slot):
+        self.enc_len_np[slot] = 0
+        self.cache["enc_len"] = self.cache["enc_len"].at[slot].set(0)
+        super().free_slot(slot)
+
+
 BACKENDS = {"contiguous": ContiguousBackend, "paged": PagedBackend,
-            "encdec": EncDecBackend}
+            "encdec": EncDecBackend, "paged-tp": ShardedPagedBackend,
+            "paged-encdec": PagedEncDecBackend}
 
 
 def make_backend(spec: Union[str, KVCacheBackend], model: Model,
                  max_batch: int, max_seq: int, *, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 enc_seq: Optional[int] = None) -> KVCacheBackend:
+                 enc_seq: Optional[int] = None,
+                 tp: Optional[tp_lib.TPContext] = None) -> KVCacheBackend:
     """Engine-facing factory: a name ('contiguous' | 'paged' | 'encdec')
     or an already-built backend instance (tests / custom layouts).
     Enc-dec models need the paired self/cross layout, so 'contiguous'
-    transparently resolves to ``EncDecBackend`` for them."""
+    transparently resolves to ``EncDecBackend`` for them and 'paged' to
+    ``PagedEncDecBackend``. An SPMD ``tp`` context upgrades 'paged' to
+    the mesh-sharded pool (``ShardedPagedBackend``); the contiguous
+    family ignores ``tp`` — only its restoration pack shards, and the
+    sink colocates projected heads back to the buffer's device."""
     if isinstance(spec, KVCacheBackend):
         return spec
     if spec not in BACKENDS:
         raise ValueError(f"unknown KV-cache backend {spec!r}; "
                          f"one of {sorted(BACKENDS)}")
-    if spec == "paged":
+    if spec in ("paged", "paged-tp", "paged-encdec"):
+        if spec == "paged-encdec" or model.kind == "encdec":
+            return PagedEncDecBackend(model, max_batch, max_seq,
+                                      block_size=block_size,
+                                      num_blocks=num_blocks,
+                                      enc_seq=enc_seq)
+        if spec == "paged-tp" or (tp is not None and tp.spmd):
+            return ShardedPagedBackend(model, max_batch, max_seq,
+                                       block_size=block_size,
+                                       num_blocks=num_blocks, tp_ctx=tp)
         return PagedBackend(model, max_batch, max_seq,
                             block_size=block_size, num_blocks=num_blocks)
     if spec == "encdec" or model.kind == "encdec":

@@ -1,3 +1,13 @@
+import os
+
+# The tensor-parallel tests (test_tp.py) shard over multiple devices;
+# forcing 4 host-platform devices BEFORE jax imports lets the whole
+# suite — sharded and unsharded — run on any CPU box (DESIGN.md §16).
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
 import jax
 import pytest
 

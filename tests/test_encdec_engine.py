@@ -230,7 +230,7 @@ def test_engine_has_no_family_branches():
                    "supports_recompute")),
     ("falcon-mamba-7b", ()),
     ("zamba2-2.7b", ()),
-    ("whisper-medium", ("chunkable", "supports_resume")),
+    ("whisper-medium", ("chunkable", "supports_resume", "supports_paged")),
 ])
 def test_adapter_capability_matrix(arch, expect, rules):
     cfg = reduced_for_smoke(get_arch(arch))
